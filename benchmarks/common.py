@@ -1,0 +1,59 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.dgnn import BC_ALPHA, UCI, DGNN_CONFIGS, DatasetConfig
+from repro.core import build_model, stack_time
+from repro.graph import (
+    generate_temporal_graph,
+    pad_snapshot,
+    renumber_and_normalize,
+    slice_snapshots,
+)
+
+N_PAD, E_PAD, K_MAX = 640, 4096, 64
+
+
+def load_stream(ds: DatasetConfig, limit: int | None = None):
+    """(temporal graph, feat table, raw snaps, padded time-major stream)."""
+    tg, ft = generate_temporal_graph(ds)
+    snaps = slice_snapshots(tg, 1.0)
+    if limit:
+        snaps = snaps[:limit]
+    pads = [pad_snapshot(renumber_and_normalize(s), ft, N_PAD, E_PAD, K_MAX)
+            for s in snaps]
+    return tg, ft, snaps, stack_time(pads)
+
+
+def time_step_fn(fn, *args, warmup: int = 2, iters: int = 10) -> float:
+    """Median wall time (ms) of a jitted callable."""
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append((time.perf_counter() - t0) * 1e3)
+    return float(np.median(ts))
+
+
+def per_snapshot_ms(cfg_name: str, ds: DatasetConfig, mode: str,
+                    t_steps: int = 16, iters: int = 5) -> float:
+    """Mean per-snapshot latency of a full stream scan (ms)."""
+    cfg = DGNN_CONFIGS[cfg_name]
+    tg, ft, snaps, sT = load_stream(ds, limit=t_steps)
+    model = build_model(cfg, n_global=tg.n_global_nodes)
+    params = model.init(jax.random.PRNGKey(0))
+    state0 = model.init_state(params, mode=mode)
+
+    from repro.core import run_stream
+
+    run = jax.jit(lambda p, s, x: run_stream(model, p, s, x, mode=mode)[1])
+    ms = time_step_fn(run, params, state0, sT, warmup=1, iters=iters)
+    return ms / t_steps

@@ -1,0 +1,32 @@
+"""Gradient-compression benchmark: wire bytes + fidelity per scheme."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import dequantize_blockwise, quantize_blockwise
+
+
+def run() -> list[tuple[str, float, str]]:
+    rng = np.random.default_rng(0)
+    g = rng.normal(0, 1e-3, (4 * 1024 * 1024,)).astype(np.float32)  # 16 MiB grads
+    rows = []
+    fp32_bytes = g.nbytes
+    # bf16
+    bf = jnp.asarray(g).astype(jnp.bfloat16)
+    err_bf = float(np.abs(np.asarray(bf, np.float32) - g).max() / np.abs(g).max())
+    rows.append(("compression/bf16", 0.0,
+                 f"bytes_ratio={2*g.size/fp32_bytes:.2f},rel_err={err_bf:.2e}"))
+    # int8 blockwise
+    qd = quantize_blockwise(jnp.asarray(g))
+    nbytes = qd["q"].size + qd["scale"].size * 4
+    back = np.asarray(dequantize_blockwise(qd, g.shape))
+    err_q = float(np.abs(back - g).max() / np.abs(g).max())
+    rows.append(("compression/int8_blockwise", 0.0,
+                 f"bytes_ratio={nbytes/fp32_bytes:.3f},rel_err={err_q:.2e}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

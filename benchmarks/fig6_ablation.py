@@ -1,0 +1,53 @@
+"""Fig. 6 analog: incremental speedup of Pipeline-O1 and Pipeline-O2.
+
+Baseline: sequential engine, staged RNN gates.
+O1: + fused RNN gate pipeline.
+O2: + module-level GNN/RNN overlap (V1 for EvolveGCN, V2 for GCRN-M2).
+All three compute identical outputs (tests assert it); the measurement is
+per-snapshot latency on the same hardware.
+"""
+from __future__ import annotations
+
+from repro.configs.dgnn import BC_ALPHA, UCI
+
+from benchmarks.common import per_snapshot_ms
+
+LEVELS = {"evolvegcn": ["baseline", "o1", "v1"],
+          "gcrn-m2": ["baseline", "o1", "v2"],
+          "stacked-gcn-gru": ["baseline", "o1", "v1", "v2"]}
+
+
+def run(t_steps: int = 16, iters: int = 5) -> list[tuple[str, float, str]]:
+    """Measured wall-clock per level PLUS the structural (critical-path)
+    speedup of the O2 overlap.
+
+    This container is a single CPU core: O1's gate fusion shows up in wall
+    clock (bigger, fewer matmuls), but O2's module overlap cannot — there is
+    no second execution engine to overlap onto. O2's win is structural:
+    the scan-body critical path drops from t_GNN + t_RNN to
+    max(t_GNN, t_RNN); we report that predicted-overlap speedup from the
+    measured module times (table7), which is the quantity the paper's FPGA
+    realizes in hardware.
+    """
+    from benchmarks import table7_dse
+
+    rows = []
+    mod = {r[0]: r[1] / 1e3 for r in table7_dse.run()}  # name -> ms
+    for name, levels in LEVELS.items():
+        for ds in (BC_ALPHA, UCI):
+            times = {lv: per_snapshot_ms(name, ds, lv, t_steps, iters)
+                     for lv in levels}
+            base = times["baseline"]
+            for lv in levels:
+                derived = f"speedup={base / times[lv]:.2f}x"
+                if lv in ("v1", "v2") and f"table7/{name}/GNN" in mod:
+                    g, r = mod[f"table7/{name}/GNN"], mod[f"table7/{name}/RNN"]
+                    derived += f",structural_overlap_speedup={(g + r) / max(g, r):.2f}x"
+                rows.append((f"fig6/{name}/{ds.name}/{lv}", times[lv] * 1e3,
+                             derived))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

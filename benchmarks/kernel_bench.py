@@ -1,0 +1,46 @@
+"""Kernel microbenchmarks: XLA reference path timings on CPU + the Pallas
+kernels' VMEM working-set accounting (the TPU-relevant structural number).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+
+from benchmarks.common import load_stream, time_step_fn
+from repro.configs.dgnn import BC_ALPHA
+
+
+def vmem_bytes_spmm(n=640, k=64, d=128, tn=128) -> int:
+    """Per-grid-step VMEM bytes for the ELL SpMM BlockSpec tiling."""
+    x_resident = n * d * 4
+    idx_tile = tn * k * 4 * 2  # idx + eidx
+    coef_tile = tn * k * 4
+    out_tile = tn * d * 4
+    return x_resident + idx_tile + coef_tile + out_tile
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    tg, ft, snaps, sT = load_stream(BC_ALPHA, limit=2)
+    ps = jax.tree.map(lambda a: a[0], sT)
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(640, 128)), jnp.float32)
+    f = jax.jit(lambda *a: ref.ell_spmm(*a))
+    t = time_step_fn(f, ps.neigh_idx, ps.neigh_coef, ps.neigh_eidx, x)
+    rows.append(("kernel/ell_spmm_xla_ref", t * 1e3,
+                 f"vmem_bytes={vmem_bytes_spmm()} (fits 128KiB*... v5e VMEM 128MB)"))
+    wx = jnp.asarray(np.random.default_rng(1).normal(size=(128, 384)), jnp.float32)
+    wh = jnp.asarray(np.random.default_rng(2).normal(size=(128, 384)), jnp.float32)
+    b = jnp.zeros((384,))
+    h = x
+    f2 = jax.jit(lambda *a: ref.fused_gru(*a))
+    t2 = time_step_fn(f2, x, h, wx, wh, b)
+    rows.append(("kernel/fused_gru_xla_ref", t2 * 1e3, "gates=3-in-1 matmul"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

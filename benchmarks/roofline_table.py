@@ -1,0 +1,76 @@
+"""Aggregate the dry-run JSONs into the roofline table (EXPERIMENTS §Roofline)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load_cells(tag: str | None = None) -> list[dict]:
+    out = []
+    for f in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        base = os.path.basename(f)
+        if tag is None and base.count("__") != 2:
+            continue
+        if tag is not None and not base.endswith(f"__{tag}.json"):
+            continue
+        with open(f) as fh:
+            out.append(json.load(fh))
+    return out
+
+
+def fmt_row(r: dict) -> str:
+    a, s = r["arch"], r["shape"]
+    if r["status"] != "run":
+        return f"| {a} | {s} | — | {r['status'].replace('skip: ', 'skip: ')} |"
+    rl = r.get("roofline")
+    mem = r.get("memory", {})
+    if rl is None:
+        fit = "Y" if mem.get("fits_16GB") else "N"
+        return f"| {a} | {s} | {r['mesh']} | compile {r.get('compile_s', 0):.0f}s, fits={fit} |"
+    return (
+        f"| {a} | {s} | {rl['t_compute']*1e3:.1f} | {rl['t_memory']*1e3:.1f} | "
+        f"{rl['t_collective']*1e3:.1f} | {rl['bottleneck'][:4]} | "
+        f"{rl['useful_ratio']:.2f} | {rl['roofline_fraction']*100:.2f}% | "
+        f"{(mem.get('per_device_bytes', 0))/1e9:.1f} |"
+    )
+
+
+def run(tag: str | None = None) -> list[tuple[str, float, str]]:
+    rows = []
+    for r in load_cells(tag):
+        if r["status"] != "run" or "roofline" not in r:
+            continue
+        rl = r["roofline"]
+        rows.append((
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+            rl["t_bound"] * 1e6 if "t_bound" in rl else max(
+                rl["t_compute"], rl["t_memory"], rl["t_collective"]) * 1e6,
+            f"bottleneck={rl['bottleneck']},fraction={rl['roofline_fraction']:.4f},useful={rl['useful_ratio']:.3f}",
+        ))
+    return rows
+
+
+def markdown(tag: str | None = None) -> str:
+    cells = load_cells(tag)
+    sp = [c for c in cells if c["mesh"] == "16x16"]
+    mp = [c for c in cells if c["mesh"] == "2x16x16"]
+    lines = [
+        "| arch | shape | t_comp (ms) | t_mem (ms) | t_coll (ms) | bound | useful | roofline-frac | GB/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sp:
+        lines.append(fmt_row(r))
+    lines.append("")
+    lines.append("Multi-pod (2x16x16) compile proof:")
+    lines.append("| arch | shape | mesh | result |")
+    lines.append("|---|---|---|---|")
+    for r in mp:
+        lines.append(fmt_row(r))
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown())

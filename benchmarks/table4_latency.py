@@ -1,0 +1,37 @@
+"""Table IV analog: per-snapshot end-to-end latency, EvolveGCN & GCRN-M2
+on BC-Alpha & UCI, paper dataflow vs the sequential baseline.
+
+The paper compares FPGA vs CPU/GPU hardware; this container has one CPU, so
+the meaningful reproduction axis is the DATAFLOW: per-snapshot latency of
+the DGNN-Booster engine (V1/V2) vs the unoptimized sequential baseline on
+identical hardware, plus the serving-engine (host/device split) latency
+with preprocessing overlap. Energy (Tables V/VI) needs a power meter and is
+reported as FLOP-proxy notes in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+from repro.configs.dgnn import BC_ALPHA, UCI, DGNN_CONFIGS
+
+from benchmarks.common import load_stream, per_snapshot_ms
+
+PAIRS = [("evolvegcn", "v1"), ("gcrn-m2", "v2")]
+DATASETS = [BC_ALPHA, UCI]
+
+
+def run(t_steps: int = 16, iters: int = 5) -> list[tuple[str, float, str]]:
+    rows = []
+    for name, booster_mode in PAIRS:
+        for ds in DATASETS:
+            base = per_snapshot_ms(name, ds, "baseline", t_steps, iters)
+            boost = per_snapshot_ms(name, ds, booster_mode, t_steps, iters)
+            speedup = base / boost if boost else float("nan")
+            rows.append((f"table4/{name}/{ds.name}/baseline", base * 1e3,
+                         f"ms_per_snapshot={base:.3f}"))
+            rows.append((f"table4/{name}/{ds.name}/{booster_mode}", boost * 1e3,
+                         f"ms_per_snapshot={boost:.3f},speedup_vs_baseline={speedup:.2f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,65 @@
+"""Table VII analog: GNN vs RNN module latency breakdown (the DSE input).
+
+The paper allocates DSPs per module from this breakdown (more to RNN for
+EvolveGCN, more to GNN for GCRN-M2). On TPU the analogous decision is which
+module's dims the model axis shards; the breakdown below is the input to
+that decision and EXPERIMENTS.md §Perf discusses the choice.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.configs.dgnn import BC_ALPHA, DGNN_CONFIGS
+from repro.core import build_model
+from repro.core import gcn as G
+from repro.core import rnn as R
+
+from benchmarks.common import load_stream, time_step_fn
+
+
+def run(iters: int = 20) -> list[tuple[str, float, str]]:
+    tg, ft, snaps, sT = load_stream(BC_ALPHA, limit=4)
+    snap0 = jax.tree.map(lambda a: a[0], sT)
+    rows = []
+
+    # EvolveGCN: GNN = 2-layer GCN fwd; RNN = matrix GRU evolution
+    cfg = DGNN_CONFIGS["evolvegcn"]
+    m = build_model(cfg, n_global=tg.n_global_nodes)
+    p = m.init(jax.random.PRNGKey(0))
+    w = [l["w"] for l in p["gcn"]]
+    gnn = jax.jit(lambda pp, ww: G.gcn_forward_weights(pp["gcn"], ww, snap0,
+                                                       snap0.node_feat))
+    rnn = jax.jit(lambda pp, ww: [R.matrix_gru(g, x) for g, x in zip(pp["gru"], ww)])
+    t_gnn = time_step_fn(gnn, p, w, iters=iters)
+    t_rnn = time_step_fn(rnn, p, w, iters=iters)
+    tot = t_gnn + t_rnn
+    rows.append(("table7/evolvegcn/GNN", t_gnn * 1e3, f"share={t_gnn/tot:.0%}"))
+    rows.append(("table7/evolvegcn/RNN", t_rnn * 1e3, f"share={t_rnn/tot:.0%}"))
+
+    # GCRN-M2: GNN = the two gate graph-convs; RNN = LSTM elementwise update
+    cfg = DGNN_CONFIGS["gcrn-m2"]
+    m2 = build_model(cfg, n_global=tg.n_global_nodes)
+    p2 = m2.init(jax.random.PRNGKey(0))
+    import jax.numpy as jnp
+
+    h = jnp.zeros((snap0.node_feat.shape[0], cfg.hidden))
+    c = jnp.zeros_like(h)
+
+    def gnn2(pp):
+        ax = G.propagate_segment(snap0, snap0.node_feat, pp.get("w_edge"))
+        ah = G.propagate_segment(snap0, h, None)
+        return R.lstm_gates(pp["lstm"], ax, ah, fused=True)
+
+    gates = jax.jit(gnn2)(p2)
+    rnn2 = jax.jit(lambda g: R.lstm_apply_gates(g, c))
+    t_gnn2 = time_step_fn(jax.jit(gnn2), p2, iters=iters)
+    t_rnn2 = time_step_fn(rnn2, gates, iters=iters)
+    tot2 = t_gnn2 + t_rnn2
+    rows.append(("table7/gcrn-m2/GNN", t_gnn2 * 1e3, f"share={t_gnn2/tot2:.0%}"))
+    rows.append(("table7/gcrn-m2/RNN", t_rnn2 * 1e3, f"share={t_rnn2/tot2:.0%}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,99 @@
+"""Train EvolveGCN on dynamic link prediction (BC-Alpha-like stream).
+
+Demonstrates the full training substrate on the paper's own model: the
+fault-tolerant loop (resume + async checkpoints), AdamW, and optionally the
+int8 error-feedback gradient compression path. Loss: BCE on dot-product
+scores of positive edges at t+1 vs sampled negatives, predicted from the
+V1-engine embeddings at t.
+
+    PYTHONPATH=src python examples/train_evolvegcn.py [--steps 200]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.dgnn import BC_ALPHA, EVOLVEGCN
+from repro.core import build_model, run_stream, stack_time
+from repro.graph import (
+    generate_temporal_graph,
+    pad_snapshot,
+    renumber_and_normalize,
+    slice_snapshots,
+)
+from repro.optim import AdamWConfig
+from repro.train import TrainLoopConfig, train
+
+WINDOW = 6
+
+
+def build_batches(tg, ft, snaps, steps, seed=0):
+    """Sliding windows of padded snapshots + link-prediction targets."""
+    rng = np.random.default_rng(seed)
+    pads = [pad_snapshot(renumber_and_normalize(s), ft, 640, 4096, 64)
+            for s in snaps]
+    for i in range(steps):
+        t0 = rng.integers(0, len(pads) - WINDOW - 1)
+        window = stack_time(pads[t0 : t0 + WINDOW])
+        nxt = pads[t0 + WINDOW]
+        # positives: edges of snapshot t0+WINDOW in LOCAL ids of ITS padding;
+        # we score in global id space via the renumber tables
+        e = int(nxt.n_edges)
+        pos = np.stack([np.asarray(nxt.renumber)[np.asarray(nxt.src)[:e]],
+                        np.asarray(nxt.renumber)[np.asarray(nxt.dst)[:e]]], 1)
+        neg = rng.integers(0, tg.n_global_nodes, pos.shape)
+        npairs = 256
+        sel = rng.integers(0, pos.shape[0], npairs)
+        yield {
+            "window": window,
+            "pos": jnp.asarray(pos[sel], jnp.int32),
+            "neg": jnp.asarray(neg[sel], jnp.int32),
+            "last_renumber": window.renumber[-1],
+            "last_mask": window.node_mask[-1],
+        }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt", default="/tmp/evolvegcn_ckpt")
+    args = ap.parse_args()
+
+    tg, ft = generate_temporal_graph(BC_ALPHA)
+    snaps = slice_snapshots(tg, 1.0)
+    model = build_model(EVOLVEGCN, n_global=tg.n_global_nodes)
+    params0 = model.init(jax.random.PRNGKey(0))
+
+    def loss_fn(params, batch):
+        state = model.init_state(params, mode="v1")
+        _, outs = run_stream(model, params, state, batch["window"], mode="v1")
+        emb_local = outs[-1]                       # (n_pad, out_dim)
+        # scatter window-final embeddings into a global table for scoring
+        ren = batch["last_renumber"]
+        idx = jnp.where(ren >= 0, ren, tg.n_global_nodes)
+        glob = jnp.zeros((tg.n_global_nodes + 1, emb_local.shape[1]))
+        glob = glob.at[idx].set(emb_local * batch["last_mask"][:, None],
+                                mode="drop")
+        def score(pairs):
+            return (glob[pairs[:, 0]] * glob[pairs[:, 1]]).sum(-1)
+        pos, neg = score(batch["pos"]), score(batch["neg"])
+        return (jnp.mean(jax.nn.softplus(-pos)) +
+                jnp.mean(jax.nn.softplus(neg)))
+
+    opt = AdamWConfig(lr=3e-3, weight_decay=0.01, warmup_steps=20,
+                      total_steps=args.steps)
+    loop = TrainLoopConfig(total_steps=args.steps, checkpoint_every=50,
+                           checkpoint_dir=args.ckpt)
+    params, res = train(loss_fn, params0,
+                        build_batches(tg, ft, snaps, args.steps), opt, loop)
+    k = max(1, len(res.losses) // 10)
+    print(f"resumed_from={res.resumed_from} steps={res.final_step}")
+    print(f"loss: first10={np.mean(res.losses[:k]):.4f} "
+          f"last10={np.mean(res.losses[-k:]):.4f}")
+    print(f"mean step time: {np.mean(res.step_times[1:])*1e3:.1f} ms; "
+          f"stragglers: {res.straggler_steps}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""The paper's primary contribution: DGNN dataflow engines + base models."""
+from repro.core.dataflow import build_model, run_batched, run_stream, stack_time
+from repro.core.evolvegcn import EvolveGCN
+from repro.core.gcrn import GCRN
+from repro.core.stacked import StackedDGNN
+
+__all__ = [
+    "build_model", "run_stream", "run_batched", "stack_time",
+    "EvolveGCN", "GCRN", "StackedDGNN",
+]

@@ -1,0 +1,107 @@
+"""Dataflow engines: sequential baseline, Pipeline-O1, V1, V2.
+
+These wrap a DGNN model's per-snapshot step into a scan over the snapshot
+stream, reproducing the paper's ablation levels (Fig. 6):
+
+  baseline     strict GNN/RNN chain per time step, staged RNN gates.
+  o1           Pipeline-O1: fused RNN gate pipeline.
+  v1 (o2)      Pipeline-O2 for stacked/weights-evolved DGNNs: module-level
+               overlap of GNN and RNN in ADJACENT time steps. For
+               weights-evolved models the overlap is expressed through the
+               primed carry (see core/evolvegcn.py); for stacked models it
+               is classic software pipelining with a one-step pipeline
+               register (prologue/epilogue below).
+  v2 (o2)      Pipeline-O2 for stacked/integrated DGNNs: intra-step fusion
+               (node-queue analogue) via the fused Pallas kernel.
+
+All modes compute IDENTICAL outputs for the same params/stream — that is
+the correctness contract the paper verifies against PyTorch, and what our
+tests assert. The difference is the critical path / fusion structure, which
+shows up in the lowered HLO (benchmarks/fig6_ablation.py measures it).
+
+Snapshot streams are pytrees with a leading T axis (same padding bucket);
+multi-stream batching adds a B axis via vmap (``run_batched``).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.dgnn import DGNNConfig
+from repro.core.evolvegcn import EvolveGCN
+from repro.core.gcrn import GCRN
+from repro.core.stacked import StackedDGNN
+
+Model = Any  # EvolveGCN | GCRN | StackedDGNN
+
+
+def build_model(cfg: DGNNConfig, impl: str = "xla", n_global: int = 4096) -> Model:
+    if cfg.dgnn_type == "weights_evolved":
+        return EvolveGCN(cfg, impl=impl)
+    if cfg.dgnn_type == "integrated":
+        return GCRN(cfg, impl=impl, n_global=n_global)
+    if cfg.dgnn_type == "stacked":
+        return StackedDGNN(cfg, impl=impl, n_global=n_global)
+    raise ValueError(cfg.dgnn_type)
+
+
+def _scan_steps(model: Model, params, state0, snaps_T, mode: str):
+    def body(state, snap):
+        new_state, out = model.step(params, state, snap, mode=mode)
+        return new_state, out
+
+    return jax.lax.scan(body, state0, snaps_T)
+
+
+def _run_stacked_v1(model: StackedDGNN, params, state0, snaps_T):
+    """Software-pipelined stacked DGNN: GCN(G^t) overlaps GRU(X^{t-1}).
+
+    Pipeline register: (X^{t-1}, snap^{t-1}). Prologue computes X^0;
+    body t>=1 computes X^t (GNN) and consumes X^{t-1} (RNN) — two
+    independent subgraphs inside one scan iteration. Epilogue drains the
+    last X. Outputs are identical to the sequential schedule.
+    """
+    first = jax.tree.map(lambda a: a[0], snaps_T)
+    rest = jax.tree.map(lambda a: a[1:], snaps_T)
+    x0 = model.gnn(params, first)  # prologue
+
+    def body(carry, snap):
+        state, x_prev, snap_prev = carry
+        # independent: GNN on this step's graph, RNN on last step's output
+        x_t = model.gnn(params, snap)
+        new_state, h = model.rnn(params, state, snap_prev, x_prev, fused=True)
+        return (new_state, x_t, snap), h
+
+    (state, x_last, snap_last), outs = jax.lax.scan(body, (state0, x0, first), rest)
+    state, h_last = model.rnn(params, state, snap_last, x_last, fused=True)  # epilogue
+    outs = jnp.concatenate([outs, h_last[None]], axis=0)
+    return state, outs
+
+
+def run_stream(model: Model, params, state0, snaps_T, mode: str = "baseline"):
+    """Run one dynamic-graph stream through the chosen dataflow engine.
+
+    Returns (final_state, outputs (T, n_pad, out_dim)).
+    """
+    if mode == "v1" and isinstance(model, StackedDGNN):
+        return _run_stacked_v1(model, params, state0, snaps_T)
+    return _scan_steps(model, params, state0, snaps_T, mode)
+
+
+def run_batched(model: Model, params, states0, snaps_TB, mode: str = "baseline"):
+    """Batched independent streams: snaps arrays are (T, B, ...), states
+    (B, ...). Params are shared across streams; recurrent state is not.
+    This is the production throughput axis (DESIGN §4): streams shard over
+    (pod, data) and the feature dims over model."""
+    fn = partial(run_stream, model, params, mode=mode)
+    return jax.vmap(fn, in_axes=(0, 1), out_axes=(0, 1))(states0, snaps_TB)
+
+
+def stack_time(padded_snaps: list) -> Any:
+    """Stack per-step PaddedSnapshots (same bucket) along a leading T axis."""
+    import numpy as np
+
+    return jax.tree.map(lambda *xs: np.stack(xs, axis=0), *padded_snaps)

@@ -1,0 +1,95 @@
+"""Recurrent cells (GRU / LSTM) with staged vs fused gate computation.
+
+``fused=False`` computes each gate's matmul separately — this models the
+paper's *unpipelined* RNN baseline where stages run back-to-back.
+``fused=True`` is the Pipeline-O1 optimization: all gates issued as one
+concatenated matmul + one fused elementwise block (the MXU analogue of the
+paper's FIFO-connected pipelined RNN stages: no bubbles between small ops).
+The two paths are bit-identical in math (same weights, concatenated).
+
+The matrix-GRU used by EvolveGCN-O reuses the same cell: columns of the
+weight matrix are the batch, the matrix is both input and hidden state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _glorot(rng, shape):
+    scale = jnp.sqrt(2.0 / (shape[0] + shape[-1]))
+    return jax.random.normal(rng, shape, jnp.float32) * scale
+
+
+def init_gru(rng, din: int, hidden: int) -> dict:
+    k1, k2 = jax.random.split(rng)
+    return {
+        "wx": _glorot(k1, (din, 3 * hidden)),    # [r | z | n]
+        "wh": _glorot(k2, (hidden, 3 * hidden)),
+        "b": jnp.zeros((3 * hidden,), jnp.float32),
+    }
+
+
+def gru_cell(params: dict, x: jax.Array, h: jax.Array, *, fused: bool = True) -> jax.Array:
+    hdim = h.shape[-1]
+    if fused:
+        gx = x @ params["wx"] + params["b"]
+        gh = h @ params["wh"]
+        rx, zx, nx = jnp.split(gx, 3, axis=-1)
+        rh, zh, nh = jnp.split(gh, 3, axis=-1)
+    else:
+        wxr, wxz, wxn = jnp.split(params["wx"], 3, axis=-1)
+        whr, whz, whn = jnp.split(params["wh"], 3, axis=-1)
+        br, bz, bn = jnp.split(params["b"], 3, axis=-1)
+        rx, zx, nx = x @ wxr + br, x @ wxz + bz, x @ wxn + bn
+        rh, zh, nh = h @ whr, h @ whz, h @ whn
+    r = jax.nn.sigmoid(rx + rh)
+    z = jax.nn.sigmoid(zx + zh)
+    n = jnp.tanh(nx + r * nh)
+    return (1.0 - z) * n + z * h
+
+
+def init_lstm(rng, din: int, hidden: int) -> dict:
+    k1, k2 = jax.random.split(rng)
+    b = jnp.zeros((4 * hidden,), jnp.float32)
+    # forget-gate bias 1.0 (standard)
+    b = b.at[hidden : 2 * hidden].set(1.0)
+    return {
+        "wx": _glorot(k1, (din, 4 * hidden)),    # [i | f | g | o]
+        "wh": _glorot(k2, (hidden, 4 * hidden)),
+        "b": b,
+    }
+
+
+def lstm_gates(params: dict, x: jax.Array, h: jax.Array, *, fused: bool = True) -> jax.Array:
+    if fused:
+        return x @ params["wx"] + h @ params["wh"] + params["b"]
+    wx4 = jnp.split(params["wx"], 4, axis=-1)
+    wh4 = jnp.split(params["wh"], 4, axis=-1)
+    b4 = jnp.split(params["b"], 4, axis=-1)
+    return jnp.concatenate(
+        [x @ a + h @ c + d for a, c, d in zip(wx4, wh4, b4)], axis=-1
+    )
+
+
+def lstm_apply_gates(gates: jax.Array, c: jax.Array) -> tuple[jax.Array, jax.Array]:
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    c_new = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h_new = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+    return h_new, c_new
+
+
+def lstm_cell(params: dict, x: jax.Array, h: jax.Array, c: jax.Array, *,
+              fused: bool = True) -> tuple[jax.Array, jax.Array]:
+    return lstm_apply_gates(lstm_gates(params, x, h, fused=fused), c)
+
+
+def matrix_gru(params: dict, w: jax.Array, *, fused: bool = True) -> jax.Array:
+    """EvolveGCN-O weight evolution: W^t = GRU(input=W^{t-1}, hidden=W^{t-1}).
+
+    ``w`` is (din, dout); columns are the GRU batch, so the cell runs on
+    w^T with feature dim = din. Cell params are square (din -> din).
+    """
+    wt = w.T  # (dout, din): batch of column vectors
+    out = gru_cell(params, wt, wt, fused=fused)
+    return out.T

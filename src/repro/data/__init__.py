@@ -1,0 +1,3 @@
+from repro.data.tokens import synthetic_lm_batches
+
+__all__ = ["synthetic_lm_batches"]

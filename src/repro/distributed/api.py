@@ -1,0 +1,161 @@
+"""Logical-axis sharding API (MaxText-style rules, with safety fallbacks).
+
+Model code annotates activations/params with LOGICAL axis names; a rules
+table maps them to mesh axes. ``shard(x, *names)`` inserts a sharding
+constraint when a mesh context is active and silently degrades to
+replication for any dim that does not divide the mapped mesh axes — the
+divisibility policy of DESIGN §5 (padding helpers in configs handle the
+dims we care about; anything else falls back rather than failing).
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Optional, Sequence, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Logical = Union[str, None, tuple]
+
+# default rules: logical name -> mesh axis (str) or tuple of mesh axes
+DEFAULT_RULES: tuple[tuple[str, Union[str, tuple, None]], ...] = (
+    ("batch", ("pod", "data")),
+    ("seq", None),
+    ("seq_sp", "model"),        # sequence-parallel residual stream
+    ("kv_seq", None),           # decode KV cache sequence dim
+    ("kv_seq_dp", ("pod", "data")),  # long-context batch=1: shard cache seq over data
+    ("embed", None),
+    ("embed_fsdp", "data"),     # FSDP: weights' embed dim over data
+    ("heads", "model"),
+    ("kv_heads", "model"),
+    ("head_dim", None),
+    ("ffn", "model"),
+    ("experts", "model"),
+    ("vocab", "model"),
+    ("ssm_inner", "model"),
+    ("ssm_heads", "model"),
+    ("ssm_state", None),
+    ("conv_dim", "model"),
+    ("layers", None),
+    ("stream", ("pod", "data")),  # batched DGNN streams
+    ("node", None),
+    ("feat", "model"),          # wide-DGNN feature dim
+)
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: dict = dict(DEFAULT_RULES)
+
+
+_CTX = _Ctx()
+
+
+@contextmanager
+def sharding_ctx(mesh: Optional[Mesh], rules: Optional[dict] = None):
+    old_mesh, old_rules = _CTX.mesh, _CTX.rules
+    _CTX.mesh = mesh
+    _CTX.rules = dict(DEFAULT_RULES) if rules is None else dict(rules)
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = old_mesh, old_rules
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def _mesh_axes_size(mesh: Mesh, axes: Union[str, tuple, None]) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        size *= dict(zip(mesh.axis_names, mesh.devices.shape)).get(a, 1)
+    return size
+
+
+def resolve_spec(shape: Sequence[int], names: Sequence[Logical],
+                 mesh: Optional[Mesh] = None, rules: Optional[dict] = None) -> P:
+    """Logical names -> PartitionSpec with divisibility fallback."""
+    mesh = mesh or _CTX.mesh
+    rules = rules or _CTX.rules
+    assert len(shape) == len(names), (shape, names)
+    entries = []
+    for dim, name in zip(shape, names):
+        if name is None:
+            entries.append(None)
+            continue
+        axes = rules.get(name)
+        if axes is None:
+            entries.append(None)
+            continue
+        if mesh is not None:
+            sz = _mesh_axes_size(mesh, axes)
+            if sz == 1 or dim % sz != 0:
+                entries.append(None)
+                continue
+            # drop mesh axes already absent
+            present = set(mesh.axis_names)
+            if isinstance(axes, str):
+                axes_t = (axes,)
+            else:
+                axes_t = tuple(axes)
+            axes_t = tuple(a for a in axes_t if a in present)
+            if not axes_t:
+                entries.append(None)
+                continue
+            entries.append(axes_t[0] if len(axes_t) == 1 else axes_t)
+        else:
+            entries.append(axes if isinstance(axes, str) else tuple(axes))
+    return P(*entries)
+
+
+def shard(x: jax.Array, *names: Logical) -> jax.Array:
+    """Constrain ``x`` to the sharding the rules give its logical axes."""
+    mesh = _CTX.mesh
+    if mesh is None:
+        return x
+    spec = resolve_spec(x.shape, names, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(shape: Sequence[int], names: Sequence[Logical],
+                   mesh: Optional[Mesh] = None) -> NamedSharding:
+    mesh = mesh or _CTX.mesh
+    assert mesh is not None
+    return NamedSharding(mesh, resolve_spec(shape, names, mesh))
+
+
+class Axes:
+    """Logical-axis annotation leaf (kept opaque to pytree traversal)."""
+
+    __slots__ = ("names",)
+
+    def __init__(self, *names: Logical):
+        self.names = tuple(names)
+
+    def __repr__(self) -> str:
+        return f"Axes{self.names}"
+
+    def __eq__(self, other):
+        return isinstance(other, Axes) and self.names == other.names
+
+    def __hash__(self):
+        return hash(self.names)
+
+
+def tree_shardings(tree_shapes, tree_axes, mesh: Optional[Mesh] = None):
+    """Pytree of shapes (arrays/ShapeDtypeStructs) + matching pytree with
+    ``Axes`` leaves -> NamedShardings for jit in_/out_shardings."""
+    mesh = mesh or _CTX.mesh
+    return jax.tree.map(
+        lambda shp, ax: named_sharding(shp.shape, ax.names, mesh),
+        tree_shapes, tree_axes,
+        is_leaf=lambda v: isinstance(v, Axes),
+    )

@@ -1,0 +1,17 @@
+from repro.graph.coo import COOSnapshot, TemporalGraph, slice_snapshots, snapshot_stats
+from repro.graph.csr import LocalSnapshot, max_in_degree, renumber_and_normalize, to_ell
+from repro.graph.padding import (
+    DEFAULT_BUCKETS,
+    PaddedSnapshot,
+    choose_bucket,
+    pad_snapshot,
+    stack_streams,
+)
+from repro.graph.synthetic import generate_temporal_graph
+
+__all__ = [
+    "COOSnapshot", "TemporalGraph", "slice_snapshots", "snapshot_stats",
+    "LocalSnapshot", "renumber_and_normalize", "to_ell", "max_in_degree",
+    "PaddedSnapshot", "pad_snapshot", "stack_streams", "choose_bucket",
+    "DEFAULT_BUCKETS", "generate_temporal_graph",
+]

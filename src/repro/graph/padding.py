@@ -1,0 +1,104 @@
+"""Static-shape padding of snapshots for the device.
+
+TPU programs have static shapes; the FPGA analogue in the paper is the fixed
+BRAM allocation sized for the largest snapshot. We pad every snapshot into a
+(n_pad, e_pad, k_max) bucket and carry masks. Padded edges point at a
+dedicated sink row with coef 0, so no device-side branching is needed.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import numpy as np
+
+from repro.graph.csr import LocalSnapshot, to_ell
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class PaddedSnapshot:
+    """Device-ready snapshot. All arrays static-shape; a pytree."""
+
+    # COO path (segment-sum reference)
+    src: jax.Array        # (e_pad,) int32
+    dst: jax.Array        # (e_pad,) int32
+    coef: jax.Array       # (e_pad,) f32; 0 on padding
+    edge_feat: jax.Array  # (e_pad, De) f32
+    # ELL path (Pallas kernel)
+    neigh_idx: jax.Array   # (n_pad, k_max) int32
+    neigh_coef: jax.Array  # (n_pad, k_max) f32; 0 on padding
+    neigh_eidx: jax.Array  # (n_pad, k_max) int32 into edge_feat
+    # node data
+    node_feat: jax.Array  # (n_pad, Din) f32
+    node_mask: jax.Array  # (n_pad,) f32; 1 for real nodes
+    renumber: jax.Array   # (n_pad,) int32 local->global (-1 on padding)
+    n_nodes: jax.Array    # () int32
+    n_edges: jax.Array    # () int32
+
+    @property
+    def n_pad(self) -> int:
+        return self.node_feat.shape[0]
+
+    @property
+    def e_pad(self) -> int:
+        return self.src.shape[0]
+
+    @property
+    def k_max(self) -> int:
+        return self.neigh_idx.shape[1]
+
+
+def pad_snapshot(
+    ls: LocalSnapshot,
+    feat_table: np.ndarray,
+    n_pad: int,
+    e_pad: int,
+    k_max: int,
+) -> PaddedSnapshot:
+    """Pad a renumbered snapshot into the (n_pad, e_pad, k_max) bucket.
+
+    ``feat_table`` is the global node-feature store (G, Din); the renumber
+    table selects the active rows — the paper's DRAM->BRAM load, guided by
+    the renumber table.
+    """
+    n, e = ls.n_nodes, ls.src.shape[0]
+    if n > n_pad or e > e_pad:
+        raise ValueError(f"snapshot ({n},{e}) exceeds bucket ({n_pad},{e_pad})")
+    de = ls.edge_feat.shape[1]
+    src = np.full(e_pad, n_pad - 1, np.int32)
+    dst = np.full(e_pad, n_pad - 1, np.int32)
+    coef = np.zeros(e_pad, np.float32)
+    ef = np.zeros((e_pad, de), np.float32)
+    src[:e], dst[:e], coef[:e], ef[:e] = ls.src, ls.dst, ls.coef, ls.edge_feat
+    nidx, ncoe, neid = to_ell(ls, n_pad, k_max)
+    nf = np.zeros((n_pad, feat_table.shape[1]), np.float32)
+    nf[:n] = feat_table[ls.renumber]
+    mask = np.zeros(n_pad, np.float32)
+    mask[:n] = 1.0
+    ren = np.full(n_pad, -1, np.int32)
+    ren[:n] = ls.renumber
+    return PaddedSnapshot(
+        src=src, dst=dst, coef=coef, edge_feat=ef,
+        neigh_idx=nidx, neigh_coef=ncoe, neigh_eidx=neid,
+        node_feat=nf, node_mask=mask, renumber=ren,
+        n_nodes=np.int32(n), n_edges=np.int32(e),
+    )
+
+
+def stack_streams(snaps: list[PaddedSnapshot]) -> PaddedSnapshot:
+    """Stack independent streams along a leading batch axis (B, ...)."""
+    return jax.tree.map(lambda *xs: np.stack(xs, axis=0), *snaps)
+
+
+def choose_bucket(n: int, e: int, k: int,
+                  buckets: tuple[tuple[int, int, int], ...]) -> tuple[int, int, int]:
+    """Pick the smallest bucket that fits (host-side; see serve/engine)."""
+    for b in buckets:
+        if n <= b[0] and e <= b[1] and k <= b[2]:
+            return b
+    raise ValueError(f"no bucket fits snapshot ({n},{e},k={k})")
+
+
+DEFAULT_BUCKETS = ((128, 512, 32), (320, 1024, 48), (640, 4096, 96))

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+csr_spmm.py    ELL SpMM (message passing)         + oracle in ref.py
+fused_rnn.py   fused GRU / LSTM cells (O1)        + oracle in ref.py
+dgnn_fused.py  V2 fused GNN+RNN step (node queue) + oracle in ref.py
+ops.py         jit'd public wrappers (interpret on non-TPU backends)
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

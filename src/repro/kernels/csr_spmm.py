@@ -1,0 +1,83 @@
+"""ELL SpMM Pallas kernel — the MP (message passing) hot spot.
+
+TPU adaptation of the paper's on-FPGA CSR message passing (DESIGN §2): the
+whole snapshot's node features are VMEM-resident (the BRAM analogue — a
+padded snapshot is a few hundred KB), fixed-width ELL rows replace CSR so
+every grid step works on a rectangular (TN, K) tile, and Pallas' automatic
+BlockSpec pipelining double-buffers the per-tile index/coef fetches against
+compute — the hardware-managed version of the paper's GL/MP overlap.
+
+The row gather `x[idx]` lowers to Mosaic's dynamic-gather on TPU; on other
+backends the kernel runs in interpret mode (see ops.py). Tiles:
+  grid = (N // TN,)
+  idx/coef tiles (TN, K) stream per step; x stays resident (constant index
+  map); out tile (TN, D).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _spmm_kernel(idx_ref, coef_ref, x_ref, out_ref):
+    idx = idx_ref[...]            # (TN, K) int32
+    coef = coef_ref[...]          # (TN, K) f32
+    x = x_ref[...]                # (N, D) f32, VMEM-resident
+    tn, k = idx.shape
+    g = jnp.take(x, idx.reshape(-1), axis=0).reshape(tn, k, x.shape[1])
+    out_ref[...] = (g * coef[..., None]).sum(axis=1)
+
+
+def _spmm_edge_kernel(idx_ref, coef_ref, eidx_ref, x_ref, emsg_ref, out_ref):
+    idx = idx_ref[...]
+    coef = coef_ref[...]
+    eidx = eidx_ref[...]
+    x = x_ref[...]
+    em = emsg_ref[...]            # (E, D) projected edge messages
+    tn, k = idx.shape
+    g = jnp.take(x, idx.reshape(-1), axis=0).reshape(tn, k, x.shape[1])
+    ge = jnp.take(em, eidx.reshape(-1), axis=0).reshape(tn, k, x.shape[1])
+    out_ref[...] = ((g + ge) * coef[..., None]).sum(axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("tn", "interpret"))
+def ell_spmm_pallas(neigh_idx, neigh_coef, neigh_eidx, x, edge_msg=None, *,
+                    tn: int = 128, interpret: bool = False):
+    n, k = neigh_idx.shape
+    d = x.shape[1]
+    assert n % tn == 0, (n, tn)
+    grid = (n // tn,)
+    row_tile = lambda i: (i, 0)
+    resident = lambda i: (0, 0)
+    out_shape = jax.ShapeDtypeStruct((n, d), x.dtype)
+    if edge_msg is None:
+        return pl.pallas_call(
+            _spmm_kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((tn, k), row_tile),
+                pl.BlockSpec((tn, k), row_tile),
+                pl.BlockSpec((n, d), resident),
+            ],
+            out_specs=pl.BlockSpec((tn, d), row_tile),
+            out_shape=out_shape,
+            interpret=interpret,
+        )(neigh_idx, neigh_coef, x)
+    e = edge_msg.shape[0]
+    return pl.pallas_call(
+        _spmm_edge_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tn, k), row_tile),
+            pl.BlockSpec((tn, k), row_tile),
+            pl.BlockSpec((tn, k), row_tile),
+            pl.BlockSpec((n, d), resident),
+            pl.BlockSpec((e, d), resident),
+        ],
+        out_specs=pl.BlockSpec((tn, d), row_tile),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(neigh_idx, neigh_coef, neigh_eidx, x, edge_msg)

@@ -1,0 +1,153 @@
+"""DGNN-Booster V2 fused step kernels: the node-queue FIFO as a VMEM tile.
+
+One Pallas kernel per DGNN family fuses, per node tile:
+  MP   — ELL aggregation over VMEM-resident x (and h for GCRN),
+  NT   — the gate / node-transform matmul,
+  RNN  — the recurrent elementwise update,
+so the GNN-output embedding for a tile of nodes never leaves VMEM before
+the RNN consumes it — the exact dataflow the paper builds with FIFOs
+between the GNN PEs and RNN PEs, with Pallas' BlockSpec double-buffering
+playing the role of the queue's back-pressure.
+
+gcrn variant   (GC-LSTM):  h',c' = LSTM(aggx @ wx + aggh @ wh + b, c)
+stacked variant (GCN->GRU): h'   = GRU(agg @ w_gcn + b_gcn, h)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _agg(idx, coef, x):
+    tn, k = idx.shape
+    g = jnp.take(x, idx.reshape(-1), axis=0).reshape(tn, k, x.shape[1])
+    return (g * coef[..., None]).sum(axis=1)
+
+
+def _agg_edge(idx, coef, eidx, x, em):
+    tn, k = idx.shape
+    g = jnp.take(x, idx.reshape(-1), axis=0).reshape(tn, k, x.shape[1])
+    ge = jnp.take(em, eidx.reshape(-1), axis=0).reshape(tn, k, x.shape[1])
+    return ((g + ge) * coef[..., None]).sum(axis=1)
+
+
+def _gcrn_kernel(has_edge, idx_ref, coef_ref, eidx_ref, x_ref, h_ref, c_ref,
+                 wx_ref, wh_ref, b_ref, emsg_ref, h_out_ref, c_out_ref):
+    idx, coef, eidx = idx_ref[...], coef_ref[...], eidx_ref[...]
+    x, h_full, c = x_ref[...], h_ref[...], c_ref[...]
+    if has_edge:
+        agg_x = _agg_edge(idx, coef, eidx, x, emsg_ref[...])
+    else:
+        agg_x = _agg(idx, coef, x)
+    agg_h = _agg(idx, coef, h_full)
+    gates = agg_x @ wx_ref[...] + agg_h @ wh_ref[...] + b_ref[...][None, :]
+    hdim = h_full.shape[1]
+    i = gates[:, :hdim]
+    f = gates[:, hdim:2 * hdim]
+    g = gates[:, 2 * hdim:3 * hdim]
+    o = gates[:, 3 * hdim:]
+    c_new = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h_out_ref[...] = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+    c_out_ref[...] = c_new
+
+
+@functools.partial(jax.jit, static_argnames=("tn", "interpret"))
+def gcrn_fused_pallas(neigh_idx, neigh_coef, neigh_eidx, x, h, c, wx, wh, b,
+                      edge_msg=None, *, tn: int = 128, interpret: bool = False):
+    n, k = neigh_idx.shape
+    din, hdim = x.shape[1], h.shape[1]
+    assert n % tn == 0
+    grid = (n // tn,)
+    row = lambda i: (i, 0)
+    res2 = lambda i: (0, 0)
+    res1 = lambda i: (0,)
+    has_edge = edge_msg is not None
+    if not has_edge:
+        edge_msg = jnp.zeros((8, din), x.dtype)  # unused placeholder
+    e = edge_msg.shape[0]
+    return pl.pallas_call(
+        functools.partial(_gcrn_kernel, has_edge),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tn, k), row),
+            pl.BlockSpec((tn, k), row),
+            pl.BlockSpec((tn, k), row),
+            pl.BlockSpec((n, din), res2),   # x resident (BRAM analogue)
+            pl.BlockSpec((n, hdim), res2),  # h resident (aggregated over)
+            pl.BlockSpec((tn, hdim), row),  # c streams per tile
+            pl.BlockSpec((din, 4 * hdim), res2),
+            pl.BlockSpec((hdim, 4 * hdim), res2),
+            pl.BlockSpec((4 * hdim,), res1),
+            pl.BlockSpec((e, din), res2),
+        ],
+        out_specs=[
+            pl.BlockSpec((tn, hdim), row),
+            pl.BlockSpec((tn, hdim), row),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, hdim), x.dtype),
+            jax.ShapeDtypeStruct((n, hdim), x.dtype),
+        ],
+        interpret=interpret,
+    )(neigh_idx, neigh_coef, neigh_eidx, x, h, c, wx, wh, b, edge_msg)
+
+
+def _stacked_kernel(has_edge, idx_ref, coef_ref, eidx_ref, x_ref, h_ref,
+                    wg_ref, bg_ref, wx_ref, wh_ref, b_ref, emsg_ref, out_ref):
+    idx, coef, eidx = idx_ref[...], coef_ref[...], eidx_ref[...]
+    x, h = x_ref[...], h_ref[...]
+    if has_edge:
+        agg = _agg_edge(idx, coef, eidx, x, emsg_ref[...])
+    else:
+        agg = _agg(idx, coef, x)
+    nt = agg @ wg_ref[...] + bg_ref[...][None, :]   # NT stage (linear)
+    gx = nt @ wx_ref[...] + b_ref[...][None, :]
+    gh = h @ wh_ref[...]
+    hdim = h.shape[1]
+    rx, zx, nx = gx[:, :hdim], gx[:, hdim:2 * hdim], gx[:, 2 * hdim:]
+    rh, zh, nh = gh[:, :hdim], gh[:, hdim:2 * hdim], gh[:, 2 * hdim:]
+    r = jax.nn.sigmoid(rx + rh)
+    z = jax.nn.sigmoid(zx + zh)
+    nn = jnp.tanh(nx + r * nh)
+    out_ref[...] = (1.0 - z) * nn + z * h
+
+
+@functools.partial(jax.jit, static_argnames=("tn", "interpret"))
+def stacked_fused_pallas(neigh_idx, neigh_coef, neigh_eidx, x, h,
+                         w_gcn, b_gcn, wx, wh, b, edge_msg=None, *,
+                         tn: int = 128, interpret: bool = False):
+    n, k = neigh_idx.shape
+    din, hdim = x.shape[1], h.shape[1]
+    dmid = w_gcn.shape[1]
+    assert n % tn == 0
+    grid = (n // tn,)
+    row = lambda i: (i, 0)
+    res2 = lambda i: (0, 0)
+    res1 = lambda i: (0,)
+    has_edge = edge_msg is not None
+    if not has_edge:
+        edge_msg = jnp.zeros((8, din), x.dtype)
+    e = edge_msg.shape[0]
+    return pl.pallas_call(
+        functools.partial(_stacked_kernel, has_edge),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tn, k), row),
+            pl.BlockSpec((tn, k), row),
+            pl.BlockSpec((tn, k), row),
+            pl.BlockSpec((n, din), res2),
+            pl.BlockSpec((tn, hdim), row),  # h only needed for own nodes
+            pl.BlockSpec((din, dmid), res2),
+            pl.BlockSpec((dmid,), res1),
+            pl.BlockSpec((dmid, 3 * hdim), res2),
+            pl.BlockSpec((hdim, 3 * hdim), res2),
+            pl.BlockSpec((3 * hdim,), res1),
+            pl.BlockSpec((e, din), res2),
+        ],
+        out_specs=pl.BlockSpec((tn, hdim), row),
+        out_shape=jax.ShapeDtypeStruct((n, hdim), x.dtype),
+        interpret=interpret,
+    )(neigh_idx, neigh_coef, neigh_eidx, x, h, w_gcn, b_gcn, wx, wh, b, edge_msg)

@@ -1,0 +1,103 @@
+"""Fused RNN-cell Pallas kernels (Pipeline-O1 realized in hardware terms).
+
+The paper pipelines the stages inside the RNN with FIFOs; on TPU the
+analogous win is issuing all gate matmuls as ONE MXU-shaped matmul against
+the concatenated gate weights and applying every elementwise gate op while
+the tile is still in VMEM/VREGs — no HBM round trip between "stages".
+
+Weights use constant index maps (VMEM-resident across grid steps — the
+LUTRAM analogue); the batch/node dim streams in (TB, ·) tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gru_kernel(x_ref, h_ref, wx_ref, wh_ref, b_ref, out_ref):
+    x = x_ref[...]                # (TB, Din)
+    h = h_ref[...]                # (TB, H)
+    gx = x @ wx_ref[...] + b_ref[...][None, :]   # (TB, 3H)
+    gh = h @ wh_ref[...]
+    hdim = h.shape[1]
+    rx, zx, nx = gx[:, :hdim], gx[:, hdim:2 * hdim], gx[:, 2 * hdim:]
+    rh, zh, nh = gh[:, :hdim], gh[:, hdim:2 * hdim], gh[:, 2 * hdim:]
+    r = jax.nn.sigmoid(rx + rh)
+    z = jax.nn.sigmoid(zx + zh)
+    n = jnp.tanh(nx + r * nh)
+    out_ref[...] = (1.0 - z) * n + z * h
+
+
+@functools.partial(jax.jit, static_argnames=("tb", "interpret"))
+def fused_gru_pallas(x, h, wx, wh, b, *, tb: int = 128, interpret: bool = False):
+    bsz, din = x.shape
+    hdim = h.shape[1]
+    assert bsz % tb == 0, (bsz, tb)
+    grid = (bsz // tb,)
+    row = lambda i: (i, 0)
+    res2 = lambda i: (0, 0)
+    res1 = lambda i: (0,)
+    return pl.pallas_call(
+        _gru_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, din), row),
+            pl.BlockSpec((tb, hdim), row),
+            pl.BlockSpec((din, 3 * hdim), res2),
+            pl.BlockSpec((hdim, 3 * hdim), res2),
+            pl.BlockSpec((3 * hdim,), res1),
+        ],
+        out_specs=pl.BlockSpec((tb, hdim), row),
+        out_shape=jax.ShapeDtypeStruct((bsz, hdim), x.dtype),
+        interpret=interpret,
+    )(x, h, wx, wh, b)
+
+
+def _lstm_kernel(x_ref, h_ref, c_ref, wx_ref, wh_ref, b_ref, h_out_ref, c_out_ref):
+    x = x_ref[...]
+    h = h_ref[...]
+    c = c_ref[...]
+    gates = x @ wx_ref[...] + h @ wh_ref[...] + b_ref[...][None, :]
+    hdim = h.shape[1]
+    i = gates[:, :hdim]
+    f = gates[:, hdim:2 * hdim]
+    g = gates[:, 2 * hdim:3 * hdim]
+    o = gates[:, 3 * hdim:]
+    c_new = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h_out_ref[...] = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+    c_out_ref[...] = c_new
+
+
+@functools.partial(jax.jit, static_argnames=("tb", "interpret"))
+def fused_lstm_pallas(x, h, c, wx, wh, b, *, tb: int = 128, interpret: bool = False):
+    bsz, din = x.shape
+    hdim = h.shape[1]
+    assert bsz % tb == 0, (bsz, tb)
+    grid = (bsz // tb,)
+    row = lambda i: (i, 0)
+    res2 = lambda i: (0, 0)
+    res1 = lambda i: (0,)
+    return pl.pallas_call(
+        _lstm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, din), row),
+            pl.BlockSpec((tb, hdim), row),
+            pl.BlockSpec((tb, hdim), row),
+            pl.BlockSpec((din, 4 * hdim), res2),
+            pl.BlockSpec((hdim, 4 * hdim), res2),
+            pl.BlockSpec((4 * hdim,), res1),
+        ],
+        out_specs=[
+            pl.BlockSpec((tb, hdim), row),
+            pl.BlockSpec((tb, hdim), row),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, hdim), x.dtype),
+            jax.ShapeDtypeStruct((bsz, hdim), x.dtype),
+        ],
+        interpret=interpret,
+    )(x, h, c, wx, wh, b)

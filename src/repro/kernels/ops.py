@@ -1,0 +1,68 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On TPU the kernels compile natively; elsewhere (this CPU container) they
+run in interpret mode, which executes the kernel body in Python with the
+same tiling — the correctness contract tests rely on. ``force_ref=True``
+routes to the pure-jnp oracle (used by the XLA production path when the
+Pallas path is not profitable, e.g. tiny snapshots under vmap).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import csr_spmm as _spmm
+from repro.kernels import dgnn_fused as _fused
+from repro.kernels import fused_rnn as _rnn
+from repro.kernels import ref as _ref
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_rows(n: int, tn: int) -> int:
+    return ((n + tn - 1) // tn) * tn
+
+
+def ell_spmm(neigh_idx, neigh_coef, neigh_eidx, x, edge_msg=None, *,
+             tn: int = 128, force_ref: bool = False):
+    if force_ref:
+        return _ref.ell_spmm(neigh_idx, neigh_coef, neigh_eidx, x, edge_msg)
+    n = neigh_idx.shape[0]
+    assert n % tn == 0, f"pad n_pad ({n}) to a multiple of the node tile ({tn})"
+    return _spmm.ell_spmm_pallas(neigh_idx, neigh_coef, neigh_eidx, x,
+                                 edge_msg, tn=tn, interpret=_interpret())
+
+
+def fused_gru(x, h, wx, wh, b, *, tb: int = 128, force_ref: bool = False):
+    if force_ref:
+        return _ref.fused_gru(x, h, wx, wh, b)
+    return _rnn.fused_gru_pallas(x, h, wx, wh, b, tb=tb, interpret=_interpret())
+
+
+def fused_lstm(x, h, c, wx, wh, b, *, tb: int = 128, force_ref: bool = False):
+    if force_ref:
+        return _ref.fused_lstm(x, h, c, wx, wh, b)
+    return _rnn.fused_lstm_pallas(x, h, c, wx, wh, b, tb=tb, interpret=_interpret())
+
+
+def dgnn_fused_step(neigh_idx, neigh_coef, neigh_eidx, x, h, c, wx, wh, b,
+                    edge_msg=None, *, tn: int = 128, force_ref: bool = False):
+    if force_ref:
+        return _ref.dgnn_fused_step(neigh_idx, neigh_coef, neigh_eidx, x, h, c,
+                                    wx, wh, b, edge_msg)
+    return _fused.gcrn_fused_pallas(neigh_idx, neigh_coef, neigh_eidx, x, h, c,
+                                    wx, wh, b, edge_msg, tn=tn,
+                                    interpret=_interpret())
+
+
+def stacked_fused_step(neigh_idx, neigh_coef, neigh_eidx, x, h, w_gcn, b_gcn,
+                       wx, wh, b, edge_msg=None, *, tn: int = 128,
+                       force_ref: bool = False):
+    if force_ref:
+        return _ref.stacked_fused_step(neigh_idx, neigh_coef, neigh_eidx, x, h,
+                                       w_gcn, b_gcn, wx, wh, b, edge_msg)
+    return _fused.stacked_fused_pallas(neigh_idx, neigh_coef, neigh_eidx, x, h,
+                                       w_gcn, b_gcn, wx, wh, b, edge_msg,
+                                       tn=tn, interpret=_interpret())

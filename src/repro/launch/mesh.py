@@ -1,0 +1,32 @@
+"""Production meshes.
+
+Single pod: (data=16, model=16) = 256 chips (v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the 'pod' axis is a
+second data-parallel axis with slower (DCI) links — collectives crossing it
+are what the multi-pod dry-run must prove out.
+
+Functions, not module constants: importing this module never touches jax
+device state (smoke tests see 1 CPU device; only dryrun.py forces 512).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) < need:
+        raise RuntimeError(
+            f"need {need} devices for mesh {shape}, have {len(devs)} — "
+            "run under dryrun.py (XLA_FLAGS=--xla_force_host_platform_device_count=512)")
+    return jax.make_mesh(shape, axes, devices=devs[:need])
+
+
+def make_host_mesh() -> Mesh:
+    """1x1 mesh on the real local device (smoke tests / examples)."""
+    return jax.make_mesh((1, 1), ("data", "model"), devices=jax.devices()[:1])

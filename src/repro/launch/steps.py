@@ -1,0 +1,119 @@
+"""Abstract step builders + input specs for the dry-run and launchers.
+
+Everything here works on ShapeDtypeStructs (jax.eval_shape) — no device
+allocation ever happens for the full-size configs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.api import Axes
+from repro.models import (
+    RuntimeConfig,
+    cache_axes,
+    decode_step,
+    init_caches,
+    init_params,
+    loss_fn,
+    prefill_step,
+)
+from repro.optim import AdamWConfig, apply_updates, init_opt_state, opt_state_axes
+
+
+# --------------------------------------------------------------- specs ----
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> tuple[dict, dict]:
+    """(ShapeDtypeStruct batch, Axes batch) for one input shape."""
+    b = shape.global_batch
+    if shape.is_decode:
+        specs = {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+        axes = {"tokens": Axes("batch", None)}
+        return specs, axes
+    s = shape.seq_len
+    if cfg.input_mode == "embeddings":
+        specs = {"embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)}
+        axes = {"embeds": Axes("batch", None, None)}
+    else:
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        axes = {"tokens": Axes("batch", None)}
+    if shape.kind == "train":
+        specs["targets"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        axes["targets"] = Axes("batch", None)
+    return specs, axes
+
+
+def abstract_params(cfg: ModelConfig, rt: RuntimeConfig) -> tuple[Any, Any]:
+    """(param ShapeDtypeStructs, Axes tree) without allocating."""
+    box = {}
+
+    def f(key):
+        p, ax = init_params(cfg, rt, key)
+        box["ax"] = ax
+        return p
+
+    shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return shapes, box["ax"]
+
+
+def abstract_opt_state(param_shapes, params_axes, opt_cfg: AdamWConfig):
+    shapes = jax.eval_shape(lambda: init_opt_state(
+        jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), param_shapes),
+        opt_cfg))
+    return shapes, opt_state_axes(params_axes, opt_cfg)
+
+
+def abstract_caches(cfg: ModelConfig, rt: RuntimeConfig, batch: int, skv: int):
+    shapes = jax.eval_shape(lambda: init_caches(cfg, rt, batch, skv))
+    return shapes, cache_axes(cfg, rt)
+
+
+# --------------------------------------------------------------- steps ----
+
+
+def make_train_step_fn(cfg: ModelConfig, rt: RuntimeConfig, opt_cfg: AdamWConfig):
+    a = rt.grad_accum
+
+    def step(params, opt_state, batch):
+        if a <= 1:
+            loss, grads = jax.value_and_grad(
+                lambda p: loss_fn(p, cfg, rt, batch))(params)
+        else:
+            # microbatched gradient accumulation: divides every per-token
+            # transient (attention probs, residual cotangents) by `a`
+            micro = jax.tree.map(
+                lambda x: x.reshape(a, x.shape[0] // a, *x.shape[1:]), batch)
+
+            def body(carry, mb):
+                gacc, lacc = carry
+                l, g = jax.value_and_grad(
+                    lambda p: loss_fn(p, cfg, rt, mb))(params)
+                gacc = jax.tree.map(lambda x, y: x + y.astype(x.dtype), gacc, g)
+                return (gacc, lacc + l), None
+
+            gz = jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype), params)
+            (gsum, lsum), _ = jax.lax.scan(body, (gz, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: g / a, gsum)
+            loss = lsum / a
+        params, opt_state, metrics = apply_updates(params, grads, opt_state, opt_cfg)
+        return params, opt_state, loss
+    return step
+
+
+def make_prefill_fn(cfg: ModelConfig, rt: RuntimeConfig):
+    def step(params, batch):
+        return prefill_step(params, cfg, rt, batch)
+    return step
+
+
+def make_decode_fn(cfg: ModelConfig, rt: RuntimeConfig):
+    def step(params, caches, batch):
+        logits, caches = decode_step(params, cfg, rt, batch["tokens"], caches)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+        return nxt, caches
+    return step

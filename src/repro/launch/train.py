@@ -1,0 +1,65 @@
+"""Training launcher.
+
+Trains any registered architecture with the fault-tolerant loop on the
+locally available devices (CPU smoke-scale by default; pass --full to use
+the real config — on a pod that is the production entry point, on this
+container it will lower but not fit, use dryrun.py instead).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-14b --steps 50
+  PYTHONPATH=src python -m repro.launch.train --dgnn evolvegcn --steps 200
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS, list_archs, reduce_for_smoke
+from repro.data import synthetic_lm_batches
+from repro.models import RuntimeConfig, init_params, loss_fn
+from repro.optim import AdamWConfig
+from repro.train import TrainLoopConfig, train
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-14b", choices=list_archs())
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--full", action="store_true",
+                    help="use the full-size config (pod-scale)")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--state-dtype", default="fp32",
+                    choices=["fp32", "bf16", "int8"])
+    args = ap.parse_args()
+
+    cfg = ARCHS[args.arch] if args.full else reduce_for_smoke(ARCHS[args.arch])
+    rt = RuntimeConfig(tp=1, scan_layers=True, remat=args.full,
+                       attn_chunk=min(2048, args.seq), moe_impl="dense",
+                       loss_chunk=min(128, args.seq))
+    params, _ = init_params(cfg, rt, jax.random.PRNGKey(0))
+    n = sum(p.size for p in jax.tree.leaves(params))
+    print(f"training {cfg.name}: {n/1e6:.1f}M params, "
+          f"{args.batch}x{args.seq} tokens/step")
+
+    batches = synthetic_lm_batches(cfg, args.batch, args.seq)
+    opt = AdamWConfig(lr=args.lr, warmup_steps=max(5, args.steps // 10),
+                      total_steps=args.steps, state_dtype=args.state_dtype)
+    loop = TrainLoopConfig(total_steps=args.steps,
+                           checkpoint_every=max(10, args.steps // 4),
+                           checkpoint_dir=args.ckpt)
+    params, res = train(lambda p, b: loss_fn(p, cfg, rt, b), params,
+                        batches, opt, loop)
+    k = max(1, len(res.losses) // 10)
+    print(f"steps={res.final_step} resumed_from={res.resumed_from}")
+    print(f"loss first{k}={np.mean(res.losses[:k]):.4f} "
+          f"last{k}={np.mean(res.losses[-k:]):.4f}")
+    print(f"mean step {np.mean(res.step_times[1:])*1e3:.1f} ms, "
+          f"stragglers {res.straggler_steps}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+from repro.models.lm import (
+    RuntimeConfig,
+    backbone,
+    cache_axes,
+    chunked_ce_loss,
+    decode_step,
+    init_caches,
+    init_params,
+    loss_fn,
+    prefill_step,
+)
+
+__all__ = [
+    "RuntimeConfig", "backbone", "cache_axes", "chunked_ce_loss",
+    "decode_step", "init_caches", "init_params", "loss_fn", "prefill_step",
+]

@@ -1,0 +1,357 @@
+"""Generic LM-family model: dense / MoE / SSM / hybrid / encoder-only.
+
+One implementation covers all 10 assigned architectures, wired from
+ModelConfig.layer_kinds(). Layers are stored STACKED per period position
+(period = lcm of the interleave patterns, e.g. 8 for jamba) and executed
+either scanned (fast compile, used for running models) or unrolled
+(accurate cost_analysis/collective accounting, used by the dry-run —
+XLA's HloCostAnalysis does not multiply while-loop bodies by trip count).
+
+Memory posture (DESIGN §5/§6):
+  - residual stream is sequence-sharded over the model axis (Megatron-SP);
+  - per-layer remat for train (only layer boundaries saved);
+  - cross-entropy is computed in sequence chunks with vocab-sharded logits
+    (never materializes (B, S, V));
+  - decode caches: (B, Skv, Hkv, hd) bf16, sequence-sharded for long_500k.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.api import Axes, shard
+from repro.nn import attention as ATT
+from repro.nn import mamba2 as SSM
+from repro.nn import mlp as MLP
+from repro.nn import moe as MOE
+from repro.nn.layers import (
+    ACT_DTYPE,
+    embed_lookup,
+    init_embedding,
+    init_lm_head,
+    init_rms_norm,
+    rms_norm,
+    vocab_mask,
+)
+
+
+@dataclass(frozen=True)
+class RuntimeConfig:
+    """Runtime/distribution choices (orthogonal to the architecture)."""
+
+    tp: int = 1                 # model-axis size (drives padding)
+    scan_layers: bool = True    # False -> unrolled (dry-run accounting)
+    remat: bool = True          # per-layer rematerialization for train
+    attn_chunk: int = 2048      # q-chunk for long-sequence attention
+    attn_impl: str = "xla"      # "flash" = Pallas kernel (fwd-only: prefill/serve)
+    flash_bq: int = 512         # flash q tile (KV HBM traffic ~ S^2*d/bq)
+    flash_bk: int = 512         # flash kv tile
+    moe_impl: str = "auto"      # "dense" | "ep" | "auto"
+    fsdp: bool = False          # shard weights' embed dim over 'data'
+    long_ctx: bool = False      # sequence-shard the decode KV cache
+    loss_chunk: int = 512       # seq chunk for chunked cross-entropy
+    param_dtype: str = "fp32"   # "bf16" for the ~400B class: bf16 weights +
+                                # bf16 grads + int8 moments (DESIGN §6)
+    grad_accum: int = 1         # microbatches per step (activation memory
+                                # divider; grads accumulate in param dtype)
+    moe_cf_send: float = 1.25   # EP dispatch capacity factor (all_to_all)
+    moe_cf_local: float = 1.25  # EP local expert-bucket capacity factor
+    bwd_bf16: bool = False      # demote the backward residual-stream chain
+                                # (and its collectives) to bf16 (§Perf)
+    kv_quant: bool = False      # int8 KV cache (decode; §Perf)
+
+
+# ------------------------------------------------------------- params ----
+
+
+def _init_layer(key, cfg: ModelConfig, rt: RuntimeConfig, mixer: str, mlp: str):
+    p, ax = {}, {}
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p["norm1"], ax["norm1"] = init_rms_norm(cfg.d_model)
+    if mixer == "attn":
+        p["attn"], ax["attn"] = ATT.init_attention(k1, cfg, rt.tp)
+    else:
+        p["ssm"], ax["ssm"] = SSM.init_mamba(k1, cfg)
+    if mlp != "none":
+        p["norm2"], ax["norm2"] = init_rms_norm(cfg.d_model)
+        if mlp == "dense":
+            p["mlp"], ax["mlp"] = MLP.init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.n_layers)
+        else:
+            p["moe"], ax["moe"] = MOE.init_moe(k2, cfg, rt.tp)
+    return p, ax
+
+
+def init_params(cfg: ModelConfig, rt: RuntimeConfig, rng) -> tuple[dict, dict]:
+    """Returns (params, axes). Layer params stacked per period position."""
+    kinds = cfg.layer_kinds()
+    period = cfg.scan_period()
+    nb = cfg.n_layers // period
+    keys = jax.random.split(rng, cfg.n_layers + 3)
+    params: dict[str, Any] = {}
+    axes: dict[str, Any] = {}
+    vp = cfg.padded_vocab()
+    # embed table always present (even embeddings-input archs decode tokens)
+    params["embed"], axes["embed"] = init_embedding(keys[-1], vp, cfg.d_model)
+    if not cfg.tie_embeddings:
+        params["head"], axes["head"] = init_lm_head(keys[-2], cfg.d_model, vp)
+    params["final_norm"], axes["final_norm"] = init_rms_norm(cfg.d_model)
+    axes["final_norm"] = Axes(None)
+    blocks, blocks_ax = [], []
+    for pos in range(period):
+        per_block = []
+        ax_ref = None
+        for b in range(nb):
+            li = b * period + pos
+            mixer, mlp = kinds[li]
+            pl, al = _init_layer(keys[li], cfg, rt, mixer, mlp)
+            per_block.append(pl)
+            ax_ref = al
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *per_block)
+        blocks.append(stacked)
+        # prepend the stacked "layers" axis to every leaf's Axes
+        blocks_ax.append(jax.tree.map(
+            lambda a: Axes("layers", *a.names), ax_ref,
+            is_leaf=lambda v: isinstance(v, Axes)))
+    params["blocks"] = blocks
+    axes["blocks"] = blocks_ax
+    if rt.param_dtype == "bf16":
+        params = jax.tree.map(lambda a: a.astype(jnp.bfloat16), params)
+    return params, axes
+
+
+# ------------------------------------------------------------ forward ----
+
+
+def _layer_apply(pl: dict, cfg: ModelConfig, rt: RuntimeConfig,
+                 mixer: str, mlp: str, x: jax.Array, positions,
+                 cache: Optional[dict]):
+    h = rms_norm(x, pl["norm1"], cfg.norm_eps)
+    if mixer == "attn":
+        y, new_cache = ATT.attention_block(
+            pl["attn"], cfg, h, positions,
+            attn_chunk=rt.attn_chunk, cache=cache, long_ctx=rt.long_ctx,
+            attn_impl=rt.attn_impl, flash_bq=rt.flash_bq, flash_bk=rt.flash_bk)
+    else:
+        y, new_cache = SSM.mamba_block(pl["ssm"], cfg, h, state=cache)
+    x = x + y
+    x = shard(x, "batch", "seq_sp", None)
+    if mlp != "none":
+        h2 = rms_norm(x, pl["norm2"], cfg.norm_eps)
+        if mlp == "dense":
+            y2 = MLP.mlp_block(pl["mlp"], h2)
+        else:
+            y2 = MOE.moe_block(pl["moe"], cfg, h2, impl=rt.moe_impl,
+                               fsdp=rt.fsdp, cf_send=rt.moe_cf_send,
+                               cf_local=rt.moe_cf_local)
+        x = x + y2
+        x = shard(x, "batch", "seq_sp", None)
+    return x, new_cache
+
+
+def backbone(params: dict, cfg: ModelConfig, rt: RuntimeConfig, x: jax.Array,
+             positions, caches: Optional[list] = None,
+             train: bool = False):
+    """x: (B, S, D) -> (B, S, D); threads per-layer caches when decoding."""
+    kinds = cfg.layer_kinds()
+    period = cfg.scan_period()
+    nb = cfg.n_layers // period
+    x = shard(x.astype(ACT_DTYPE), "batch", "seq_sp", None)
+    new_caches: Optional[list] = None if caches is None else []
+
+    if rt.scan_layers and caches is None and not train:
+        # scanned inference path (compile-time friendly)
+        def body(carry, block_slices):
+            h = carry
+            for pos in range(period):
+                mixer, mlp = kinds[pos]
+                h, _ = _layer_apply(block_slices[pos], cfg, rt, mixer, mlp,
+                                    h, positions, None)
+            return h, None
+
+        x, _ = jax.lax.scan(body, x, tuple(params["blocks"]))
+        return x, None
+
+    if rt.scan_layers and caches is None and train:
+        def body_t(carry, block_slices):
+            h = carry
+            for pos in range(period):
+                mixer, mlp = kinds[pos]
+                h, _ = _layer_apply(block_slices[pos], cfg, rt, mixer, mlp,
+                                    h, positions, None)
+            return h, None
+
+        body_t = jax.checkpoint(body_t) if rt.remat else body_t
+        x, _ = jax.lax.scan(body_t, x, tuple(params["blocks"]))
+        return x, None
+
+    # unrolled path (dry-run accounting; also the decode path)
+    collected: dict[int, list] = {pos: [] for pos in range(period)}
+    for b in range(nb):
+        for pos in range(period):
+            li = b * period + pos
+            mixer, mlp = kinds[li]
+            pl = jax.tree.map(lambda a, b=b: a[b], params["blocks"][pos])
+            cache = None
+            if caches is not None:
+                cache = jax.tree.map(lambda a, b=b: a[b], caches[pos])
+
+            def apply_fn(pl_, x_, cache_, mixer=mixer, mlp=mlp):
+                return _layer_apply(pl_, cfg, rt, mixer, mlp, x_, positions, cache_)
+
+            if train and rt.remat:
+                apply_fn = jax.checkpoint(apply_fn)
+            x, new_cache = apply_fn(pl, x, cache)
+            if caches is not None:
+                collected[pos].append(new_cache)
+    if caches is not None:
+        new_caches = [
+            jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *collected[pos])
+            for pos in range(period)
+        ]
+    return x, new_caches
+
+
+def _inputs_to_stream(params, cfg: ModelConfig, batch: dict) -> jax.Array:
+    if "embeds" in batch:
+        return batch["embeds"].astype(ACT_DTYPE)
+    return embed_lookup(params["embed"], batch["tokens"])
+
+
+def _head_weight(params, cfg: ModelConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["head"]
+
+
+def logits_fn(params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Full logits (only for small S / decode — never for train loss)."""
+    w = _head_weight(params, cfg)
+    logits = jnp.einsum("bsd,dv->bsv", x, w.astype(ACT_DTYPE)).astype(jnp.float32)
+    logits = logits + vocab_mask(w.shape[1], cfg.vocab_size)
+    return shard(logits, "batch", None, "vocab")
+
+
+def chunked_ce_loss(params, cfg: ModelConfig, rt: RuntimeConfig,
+                    x: jax.Array, targets: jax.Array,
+                    mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean CE over (B, S) without materializing (B, S, V)."""
+    b, s, d = x.shape
+    w = _head_weight(params, cfg)
+    vmask = vocab_mask(w.shape[1], cfg.vocab_size)
+    c = min(rt.loss_chunk, s)
+    assert s % c == 0
+    nc = s // c
+    xc = x.reshape(b, nc, c, d).transpose(1, 0, 2, 3)
+    tc = targets.reshape(b, nc, c).transpose(1, 0, 2)
+    if mask is None:
+        mk = jnp.ones((nc, b, c), jnp.float32)
+    else:
+        mk = mask.reshape(b, nc, c).transpose(1, 0, 2).astype(jnp.float32)
+
+    @jax.checkpoint  # recompute per-chunk logits in bwd: residual = x chunk
+    def one(args):
+        xi, ti, mi = args
+        lg = jnp.einsum("bcd,dv->bcv", xi, w.astype(ACT_DTYPE)).astype(jnp.float32)
+        lg = lg + vmask
+        lg = shard(lg, "batch", None, "vocab")
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, ti[..., None], axis=-1)[..., 0]
+        return ((lse - gold) * mi).sum(), mi.sum()
+
+    losses, counts = jax.lax.map(one, (xc, tc, mk))
+    return losses.sum() / jnp.maximum(counts.sum(), 1.0)
+
+
+def loss_fn(params, cfg: ModelConfig, rt: RuntimeConfig, batch: dict) -> jax.Array:
+    from repro.nn.layers import bf16_cotangent
+
+    x = _inputs_to_stream(params, cfg, batch)
+    b, s = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    h, _ = backbone(params, cfg, rt, x, positions, train=True)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    if rt.bwd_bf16:
+        # the loss head promotes cotangents to fp32; round them back to bf16
+        # before they flow into the (long) backward residual chain
+        h = bf16_cotangent(h)
+    return chunked_ce_loss(params, cfg, rt, h, batch["targets"], batch.get("mask"))
+
+
+def prefill_step(params, cfg: ModelConfig, rt: RuntimeConfig, batch: dict):
+    """Forward pass producing last-position logits (+ caches for handoff)."""
+    x = _inputs_to_stream(params, cfg, batch)
+    b, s = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    h, _ = backbone(params, cfg, rt, x, positions, train=False)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return logits_fn(params, cfg, h[:, -1:, :])
+
+
+def init_caches(cfg: ModelConfig, rt: RuntimeConfig, batch: int, skv: int):
+    """Decode caches, stacked per period position (mirrors params['blocks'])."""
+    kinds = cfg.layer_kinds()
+    period = cfg.scan_period()
+    nb = cfg.n_layers // period
+    caches: list = []
+    for pos in range(period):
+        mixer, _ = kinds[pos]
+        if mixer == "attn":
+            one = ATT.init_decode_cache(cfg, batch, skv, rt.tp,
+                                        quant=rt.kv_quant)
+        else:
+            one = SSM.init_mamba_state(cfg, batch)
+        caches.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (nb, *a.shape)), one))
+    return caches
+
+
+def cache_axes(cfg: ModelConfig, rt: RuntimeConfig) -> list:
+    """Logical axes for the cache pytree (for dry-run in_shardings)."""
+    kinds = cfg.layer_kinds()
+    period = cfg.scan_period()
+    kv_ax = "kv_seq_dp" if rt.long_ctx else "kv_seq"
+    out = []
+    for pos in range(period):
+        mixer, _ = kinds[pos]
+        if mixer == "attn":
+            ax = {
+                "k": Axes("layers", "batch", kv_ax, "kv_heads", None),
+                "v": Axes("layers", "batch", kv_ax, "kv_heads", None),
+                "len": Axes("layers"),
+            }
+            if rt.kv_quant:
+                ax["k_s"] = Axes("layers", "batch", kv_ax, "kv_heads")
+                ax["v_s"] = Axes("layers", "batch", kv_ax, "kv_heads")
+            out.append(ax)
+        else:
+            out.append({
+                "conv": Axes("layers", "batch", None, "conv_dim"),
+                "ssm": Axes("layers", "batch", "ssm_heads", None, None),
+            })
+    return out
+
+
+def decode_step(params, cfg: ModelConfig, rt: RuntimeConfig, tokens: jax.Array,
+                caches: list):
+    """One new token per sequence against the caches. tokens: (B, 1)."""
+    x = embed_lookup(params["embed"], tokens)
+    # position = current cache length (attn layers carry it; ssm-only models
+    # track positions implicitly, rope unused there)
+    pos = None
+    for c in caches:
+        if c is not None and "len" in c:
+            pos = c["len"][0]
+            break
+    if pos is None:
+        pos = jnp.zeros((), jnp.int32)
+    positions = jnp.broadcast_to(pos[None], (tokens.shape[0], 1))
+    h, new_caches = backbone(params, cfg, rt, x, positions, caches=caches,
+                             train=False)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = logits_fn(params, cfg, h)
+    return logits, new_caches

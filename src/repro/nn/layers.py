@@ -1,0 +1,111 @@
+"""Common NN layers: norms, RoPE, embeddings, init helpers.
+
+Every init function returns (params, axes) — two same-structure dicts, the
+second holding ``Axes`` logical-axis leaves consumed by distributed/api.
+Compute follows the bf16-activations / fp32-norms-and-softmax convention.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.api import Axes
+
+ACT_DTYPE = jnp.bfloat16
+
+
+def normal_init(key, shape, scale: float):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(jnp.float32)
+
+
+# §Perf iteration switch (per-process; the dry-run sets it from overrides so
+# baseline cells stay baseline): low-mem norm avoids any full-width fp32
+# intermediate, keeping residual-stream collectives bf16 on the wire.
+LOWMEM_NORM = False
+
+
+def set_lowmem_norm(v: bool) -> None:
+    global LOWMEM_NORM
+    LOWMEM_NORM = bool(v)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    xf32 = x.astype(jnp.float32)
+    var = jnp.mean(xf32 * xf32, axis=-1, keepdims=True)
+    if LOWMEM_NORM:
+        # fp32 statistics, but the (B,S,D) tensor is only touched in its own
+        # dtype -> forward all-gathers / backward reduce-scatters stay bf16
+        inv = (jax.lax.rsqrt(var + eps)).astype(x.dtype)
+        return x * inv * scale.astype(x.dtype)
+    return ((xf32 * jax.lax.rsqrt(var + eps))
+            * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+@jax.custom_vjp
+def bf16_cotangent(x: jax.Array) -> jax.Array:
+    """Identity whose backward rounds the cotangent through bf16.
+
+    Placed at the backbone->loss boundary it demotes the entire backward
+    residual-stream chain (and thus every backward TP collective) from the
+    fp32 the loss head promotes to, to bf16 — 2x less gradient-activation
+    wire/HBM traffic. Parameter gradients keep their dtype.
+    """
+    return x
+
+
+def _bf16_ct_fwd(x):
+    # zero-size token carries the primal dtype (dtypes aren't JAX types)
+    return x, jnp.zeros((0,), x.dtype)
+
+
+def _bf16_ct_bwd(tok, g):
+    # demote to bf16 (the wire dtype), then to the primal dtype if narrower
+    g = g.astype(jnp.bfloat16)
+    return (g if tok.dtype == jnp.bfloat16 else g.astype(tok.dtype),)
+
+
+bf16_cotangent.defvjp(_bf16_ct_fwd, _bf16_ct_bwd)
+
+
+def init_rms_norm(d: int):
+    return jnp.ones((d,), jnp.float32), Axes(None)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S).
+
+    Trig is always fp32 (position precision); under LOWMEM_NORM the wide
+    (B,S,H,hd) elementwise chain runs in x.dtype instead of fp32 — §Perf
+    iteration D4 (rope was ~25% of per-layer HBM bytes at 32k)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                        # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    wide_dt = x.dtype if LOWMEM_NORM else jnp.float32
+    cos = jnp.cos(ang)[..., None, :].astype(wide_dt)     # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :].astype(wide_dt)
+    x1, x2 = jnp.split(x.astype(wide_dt), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def init_embedding(key, vocab_pad: int, d: int):
+    w = normal_init(key, (vocab_pad, d), 0.02)
+    return w, Axes("vocab", "embed_fsdp")
+
+
+def embed_lookup(w: jax.Array, tokens: jax.Array) -> jax.Array:
+    return w.astype(ACT_DTYPE)[tokens]
+
+
+def init_lm_head(key, d: int, vocab_pad: int):
+    w = normal_init(key, (d, vocab_pad), 0.02)
+    return w, Axes("embed_fsdp", "vocab")
+
+
+def vocab_mask(vocab_pad: int, vocab: int) -> jax.Array:
+    """0 for real vocab entries, -inf (large negative) for padding columns."""
+    return jnp.where(jnp.arange(vocab_pad) < vocab, 0.0, -1e9).astype(jnp.float32)

@@ -1,0 +1,260 @@
+"""Mamba2 mixer: chunked SSD (state-space duality) + O(1) decode.
+
+The chunked SSD algorithm is itself the paper's V1 insight transplanted
+(DESIGN §2, §Arch-applicability): within a chunk, computation is dense and
+parallel (MXU matmuls, no recurrence); only a small (nheads, P, N) state
+crosses chunk boundaries through a short scan — the "recurrent small op
+overlapped with parallel large op" split that DGNN-Booster exploits
+between RNN and GNN.
+
+Shapes: x (B, S, D) -> in_proj -> z (B,S,d_inner), xb (B,S,d_inner),
+B/C (B,S,G,N), dt (B,S,H). Heads H = d_inner / P (P = ssm_head_dim).
+Chunked scan with chunk length Q:
+  intra-chunk: Y_intra = (C B^T ⊙ decay-mask) @ X   (dense, per chunk)
+  inter-chunk: states S_c = (decay-weighted B X^T) accumulated by a scan
+               over chunks; Y_inter = C @ S_carried.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.api import Axes, shard
+from repro.nn.layers import ACT_DTYPE, normal_init, rms_norm
+
+
+def init_mamba(key, cfg: ModelConfig):
+    d, di = cfg.d_model, cfg.d_inner
+    g, n, h = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    conv_ch = di + 2 * g * n
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d_in_proj = 2 * di + 2 * g * n + h
+    out_scale = 0.02 / math.sqrt(2 * cfg.n_layers)
+    # dt bias: softplus^-1 of dt in [1e-3, 1e-1] (mamba2 init)
+    u = jax.random.uniform(k3, (h,), jnp.float32)
+    dt = jnp.exp(u * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))
+    p = {
+        "in_proj": normal_init(k1, (d, d_in_proj), 0.02),
+        "conv_w": normal_init(k2, (cfg.ssm_conv, conv_ch), 0.2),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": dt_bias,
+        "ssm_norm": jnp.ones((di,), jnp.float32),
+        "out_proj": normal_init(k4, (di, d), out_scale),
+    }
+    ax = {
+        "in_proj": Axes("embed_fsdp", "ssm_inner"),
+        "conv_w": Axes(None, "conv_dim"),
+        "conv_b": Axes("conv_dim",),
+        "A_log": Axes("ssm_heads",),
+        "D": Axes("ssm_heads",),
+        "dt_bias": Axes("ssm_heads",),
+        "ssm_norm": Axes("ssm_inner",),
+        "out_proj": Axes("ssm_inner", "embed_fsdp"),
+    }
+    return p, ax
+
+
+def _split_proj(cfg: ModelConfig, proj: jax.Array):
+    di, g, n, h = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    z = proj[..., :di]
+    xbc = proj[..., di : di + di + 2 * g * n]
+    dt = proj[..., di + di + 2 * g * n :]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. xbc (B,S,C), w (K,C).
+
+    Under LOWMEM (the §Perf m4 switch) this is a single grouped
+    conv_general_dilated — one fused op instead of K shifted multiply-adds
+    (whose autodiff chain materialized ~4x the tensor in fp32)."""
+    from repro.nn.layers import LOWMEM_NORM
+
+    k = w.shape[0]
+    if LOWMEM_NORM:
+        c = xbc.shape[-1]
+        out = jax.lax.conv_general_dilated(
+            xbc, w[:, None, :].astype(xbc.dtype),  # (K, 1, C) HIO-ish
+            window_strides=(1,), padding=[(k - 1, 0)],
+            dimension_numbers=("NWC", "WIO", "NWC"),
+            feature_group_count=c)
+        return jax.nn.silu(out + b.astype(xbc.dtype))
+    out = xbc * w[k - 1].astype(xbc.dtype)
+    for i in range(1, k):
+        shifted = jnp.pad(xbc, ((0, 0), (i, 0), (0, 0)))[:, : xbc.shape[1]]
+        out = out + shifted * w[k - 1 - i].astype(xbc.dtype)
+    return jax.nn.silu(out + b.astype(xbc.dtype))
+
+
+# §Perf switch (per-process, set by the dry-run from overrides): compute the
+# SSD state/output einsums in bf16 (fp32 accumulation via
+# preferred_element_type) instead of full fp32.
+SSD_BF16 = False
+
+
+def set_ssd_bf16(v: bool) -> None:
+    global SSD_BF16
+    SSD_BF16 = bool(v)
+
+
+def ssd_chunked(xh, dt, A, Bm, Cm, chunk: int):
+    """Chunked SSD scan.
+
+    xh (B,S,H,P), dt (B,S,H) (post-softplus), A (H,) negative,
+    Bm/Cm (B,S,G,N). Returns y (B,S,H,P), final_state (B,H,P,N).
+    """
+    b, s, h, p = xh.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    if s % chunk:
+        # pad to a chunk multiple with dt=0 steps: decay=1 and update=0, so
+        # the final state is untouched; padded outputs are sliced off below
+        pad = chunk - s % chunk
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    s_orig, s = s, xh.shape[1]
+    nc = s // chunk
+    rep = h // g
+    # chunk-major layout so lax.map streams one chunk at a time — bounds the
+    # O(q^2) intra-chunk buffers to a single chunk (the V1 lesson: dense
+    # intra-chunk work is independent across chunks; only the small state
+    # recurrence serializes).
+    xc = xh.reshape(b, nc, chunk, h, p).transpose(1, 0, 2, 3, 4)      # (nc,b,q,h,p)
+    dtc = dt.reshape(b, nc, chunk, h).transpose(1, 0, 2, 3)           # (nc,b,q,h)
+    Bc = Bm.reshape(b, nc, chunk, g, n).transpose(1, 0, 2, 3, 4)
+    Cc = Cm.reshape(b, nc, chunk, g, n).transpose(1, 0, 2, 3, 4)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    @jax.checkpoint  # the O(q^2) intra-chunk buffers are recomputed in bwd
+    def per_chunk(args):
+        xq, dtq, Bq, Cq = args            # (b,q,h,p), (b,q,h), (b,q,g,n) x2
+        cums = jnp.cumsum(dtq * A, axis=1)                # (b,q,h)
+        li = cums[:, :, None, :] - cums[:, None, :, :]    # (b,q,q,h)
+        L = jnp.where(mask[None, :, :, None], jnp.exp(li), 0.0).astype(ACT_DTYPE)
+        Bh = jnp.repeat(Bq, rep, axis=2)                  # (b,q,h,n)
+        Ch = jnp.repeat(Cq, rep, axis=2)
+        scores = jnp.einsum("bqhn,bkhn->bqkh", Ch, Bh).astype(ACT_DTYPE)
+        ydt = (dtq[..., None] * xq).astype(ACT_DTYPE)     # (b,q,h,p)
+        y_intra = jnp.einsum("bqkh,bkhp->bqhp", scores * L, ydt).astype(jnp.float32)
+        decay_to_end = jnp.exp(cums[:, -1:, :] - cums)    # (b,q,h)
+        if SSD_BF16:
+            state = jnp.einsum(
+                "bqhn,bqh,bqhp->bhpn",
+                Bh.astype(ACT_DTYPE), (decay_to_end * dtq).astype(ACT_DTYPE),
+                xq.astype(ACT_DTYPE),
+                preferred_element_type=jnp.float32)
+        else:
+            state = jnp.einsum("bqhn,bqh,bqhp->bhpn", Bh, decay_to_end * dtq, xq)
+        return y_intra, state, cums
+
+    y_intra, states, cums_all = jax.lax.map(per_chunk, (xc, dtc, Bc, Cc))
+    # states (nc,b,h,p,n); cums_all (nc,b,q,h)
+    chunk_decay = jnp.exp(cums_all[:, :, -1, :])          # (nc,b,h)
+
+    def scan_body(carry, inp):
+        st, dec = inp                                     # (b,h,p,n), (b,h)
+        new = carry * dec[:, :, None, None] + st
+        return new, carry                                 # emit state ENTERING chunk
+
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    final, entering = jax.lax.scan(scan_body, init, (states, chunk_decay))
+    # inter-chunk output (no q^2 term): y_inter = C . entering-state . decay
+    decay_from_start = jnp.exp(cums_all)                  # (nc,b,q,h)
+    Ch_all = jnp.repeat(Cc, rep, axis=3)                  # (nc,b,q,h,n)
+    if SSD_BF16:
+        y_inter = jnp.einsum(
+            "cbqhn,cbhpn,cbqh->cbqhp", Ch_all.astype(ACT_DTYPE),
+            entering.astype(ACT_DTYPE), decay_from_start.astype(ACT_DTYPE),
+            preferred_element_type=jnp.float32)
+    else:
+        y_inter = jnp.einsum("cbqhn,cbhpn,cbqh->cbqhp", Ch_all, entering,
+                             decay_from_start)
+    y = (y_intra + y_inter).transpose(1, 0, 2, 3, 4).reshape(b, s, h, p)
+    return y[:, :s_orig], final
+
+
+def mamba_block(p: dict, cfg: ModelConfig, x: jax.Array, *,
+                state: dict | None = None):
+    """Mamba2 sublayer (no norm/residual). Returns (out, new_state).
+
+    state (decode): {"conv": (B, K-1, C), "ssm": (B, H, P, N)}.
+    """
+    di, gn, n, h = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    pp = cfg.ssm_head_dim
+    proj = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(ACT_DTYPE))
+    proj = shard(proj, "batch", None, "ssm_inner")
+    z, xbc, dt = _split_proj(cfg, proj)
+    A = -jnp.exp(p["A_log"])  # (H,)
+    if state is None:
+        xbc_raw = xbc
+        xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+        xpart = xbc[..., :di]
+        Bm = xbc[..., di : di + gn * n].reshape(*xbc.shape[:2], gn, n)
+        Cm = xbc[..., di + gn * n :].reshape(*xbc.shape[:2], gn, n)
+        dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+        xh = xpart.reshape(*xpart.shape[:2], h, pp)
+        y, final = ssd_chunked(xh.astype(jnp.float32), dtv, A,
+                               Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+                               cfg.ssm_chunk)
+        y = y + xh.astype(jnp.float32) * p["D"][:, None]
+        # prefill -> decode handoff state (conv state is pre-activation taps)
+        new_state = {
+            "conv": xbc_raw[:, -(cfg.ssm_conv - 1):, :].astype(ACT_DTYPE),
+            "ssm": final,
+        }
+    else:
+        # one-token recurrent update
+        conv_state = state["conv"]  # (B, K-1, C)
+        window = jnp.concatenate([conv_state, xbc], axis=1)  # (B, K, C)
+        w = p["conv_w"].astype(window.dtype)
+        conv_out = jax.nn.silu((window * w[None]).sum(axis=1, keepdims=True)
+                               + p["conv_b"].astype(window.dtype))
+        new_conv = window[:, 1:]
+        xpart = conv_out[..., :di]
+        Bm = conv_out[..., di : di + gn * n].reshape(-1, 1, gn, n)
+        Cm = conv_out[..., di + gn * n :].reshape(-1, 1, gn, n)
+        dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,1,H)
+        xh = xpart.reshape(-1, 1, h, pp).astype(jnp.float32)
+        rep = h // gn
+        Bh = jnp.repeat(Bm, rep, axis=2).astype(jnp.float32)  # (B,1,H,N)
+        Ch = jnp.repeat(Cm, rep, axis=2).astype(jnp.float32)
+        dA = jnp.exp(dtv[:, 0, :] * A)  # (B,H)
+        ssm = state["ssm"].astype(jnp.float32)  # (B,H,P,N)
+        upd = jnp.einsum("bhn,bhp->bhpn", Bh[:, 0] * dtv[:, 0, :, None], xh[:, 0])
+        ssm_new = ssm * dA[:, :, None, None] + upd
+        y = jnp.einsum("bhn,bhpn->bhp", Ch[:, 0], ssm_new)[:, None]  # (B,1,H,P)
+        y = y + xh * p["D"][:, None]
+        new_state = {"conv": new_conv, "ssm": ssm_new.astype(state["ssm"].dtype)}
+    y = y.astype(ACT_DTYPE)
+    # gated per-head RMS norm (TP-local: normalizes within heads; DESIGN §5)
+    yh = y.reshape(*y.shape[:2], h, pp)
+    sc = p["ssm_norm"].reshape(h, pp)
+    yn = _gated_norm(yh, z, sc, cfg.norm_eps)
+    y = yn.reshape(*yn.shape[:2], di).astype(ACT_DTYPE)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(ACT_DTYPE))
+    return out, new_state
+
+
+def _gated_norm(yh, z, scale_h, eps):
+    """RMSNorm(y * silu(z)) per head (norm over head_dim only)."""
+    zh = z.reshape(yh.shape)
+    g = yh * jax.nn.silu(zh.astype(jnp.float32)).astype(yh.dtype)
+    gf = g.astype(jnp.float32)
+    var = jnp.mean(gf * gf, axis=-1, keepdims=True)
+    return (gf * jax.lax.rsqrt(var + eps) * scale_h).astype(yh.dtype)
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    di, gn, n = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state
+    conv_ch = di + 2 * gn * n
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), ACT_DTYPE),
+        "ssm": jnp.zeros((batch, cfg.ssm_nheads, cfg.ssm_head_dim, n), dtype),
+    }

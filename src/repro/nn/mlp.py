@@ -1,0 +1,36 @@
+"""SwiGLU MLP."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.api import Axes, shard
+from repro.nn.layers import ACT_DTYPE, normal_init
+
+
+def init_mlp(key, d: int, f: int, n_layers: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    down_scale = 0.02 / math.sqrt(2 * n_layers)
+    p = {
+        "w_gate": normal_init(k1, (d, f), 0.02),
+        "w_up": normal_init(k2, (d, f), 0.02),
+        "w_down": normal_init(k3, (f, d), down_scale),
+    }
+    ax = {
+        "w_gate": Axes("embed_fsdp", "ffn"),
+        "w_up": Axes("embed_fsdp", "ffn"),
+        "w_down": Axes("ffn", "embed_fsdp"),
+    }
+    return p, ax
+
+
+def mlp_block(p: dict, x: jax.Array) -> jax.Array:
+    """x (B,S,D) -> (B,S,D); intermediate sharded on ffn/model axis."""
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(ACT_DTYPE))
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(ACT_DTYPE))
+    h = jax.nn.silu(g) * u
+    h = shard(h, "batch", None, "ffn")
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(ACT_DTYPE))

@@ -1,0 +1,188 @@
+"""AdamW with optional quantized moments (no external deps).
+
+``state_dtype``:
+  fp32   exact moments (default).
+  bf16   half-cost moments.
+  int8   blockwise-quantized moments (8-bit-Adam style): int8 codes with
+         per-block absmax scales (block = 256 elements). Needed for the
+         ~400B-class archs to fit fp32 params + moments on a 16GB/chip pod
+         (DESIGN §6; the dry-run memory analysis depends on it).
+
+Optimizer state is stored as FLAT LISTS aligned with
+``jax.tree.flatten(params)`` so quantized leaves (dicts of q/scale) never
+confuse pytree traversal of the param structure.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+_BLOCK = 256
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    state_dtype: str = "fp32"  # fp32 | bf16 | int8
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((s - cfg.warmup_steps) /
+                    jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(s < cfg.warmup_steps, warm, cos)
+
+
+# ---------------------------------------------------------- quantization ----
+
+
+def _block_for(last_dim: int) -> int:
+    """Largest divisor of last_dim that is <= _BLOCK (axis-preserving)."""
+    b = min(last_dim, _BLOCK)
+    while last_dim % b:
+        b -= 1
+    return max(b, 1)
+
+
+def quantize_blockwise(x: jax.Array) -> dict:
+    """int8 absmax quantization in blocks along the LAST dim.
+
+    Axis-preserving: q keeps the param's shape (int8), scale has shape
+    param.shape[:-1] + (last/block,) — so both inherit the param's sharding
+    (the leading dims carry the TP/FSDP axes). This is what lets the int8
+    moments of a 400B model shard exactly like its weights.
+    """
+    if x.ndim == 0:
+        x = x[None]
+    block = _block_for(x.shape[-1])
+    nb = x.shape[-1] // block
+    xb = x.astype(jnp.float32).reshape(*x.shape[:-1], nb, block)
+    scale = jnp.maximum(jnp.max(jnp.abs(xb), axis=-1) / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(xb / scale[..., None]), -127, 127).astype(jnp.int8)
+    return {"q": q.reshape(x.shape), "scale": scale.astype(jnp.float32)}
+
+
+def dequantize_blockwise(qd: dict, shape) -> jax.Array:
+    q = qd["q"]
+    scale = qd["scale"]
+    block = q.shape[-1] // scale.shape[-1] if q.ndim == scale.ndim else q.shape[-1]
+    nb = scale.shape[-1]
+    xb = q.astype(jnp.float32).reshape(*q.shape[:-1], nb, q.shape[-1] // nb)
+    return (xb * scale[..., None]).reshape(q.shape).reshape(shape)
+
+
+def _encode(x: jax.Array, dtype: str, moment: str = "m"):
+    if dtype == "fp32":
+        return x.astype(jnp.float32)
+    if dtype == "bf16":
+        return x.astype(jnp.bfloat16)
+    # int8 mode: first moment int8 (values within a block are same-scale);
+    # second moment bf16 — its dynamic range breaks absmax-linear int8
+    # (8-bit-Adam uses dynamic-exponent codes for v; bf16 is the jnp-native
+    # equivalent). Memory: 1 + 2 bytes/param vs 8 fp32.
+    if moment == "v":
+        return x.astype(jnp.bfloat16)
+    return quantize_blockwise(x)
+
+
+def _decode(s, dtype: str, shape, moment: str = "m") -> jax.Array:
+    if dtype in ("fp32", "bf16") or moment == "v":
+        return s.astype(jnp.float32)
+    return dequantize_blockwise(s, shape)
+
+
+# -------------------------------------------------------------- adamw ----
+
+
+def init_opt_state(params, cfg: AdamWConfig) -> dict:
+    leaves = jax.tree.leaves(params)
+    z = [_encode(jnp.zeros(l.shape, jnp.float32), cfg.state_dtype, "m")
+         for l in leaves]
+    z2 = [_encode(jnp.zeros(l.shape, jnp.float32), cfg.state_dtype, "v")
+          for l in leaves]
+    return {"m": z, "v": z2, "step": jnp.zeros((), jnp.int32)}
+
+
+def opt_state_axes(params_axes, cfg: AdamWConfig) -> dict:
+    """Logical-axis tree matching init_opt_state's structure.
+
+    int8 moments inherit the param's axes (q keeps the shape; scale keeps
+    the leading dims, last dim axis dropped to None — divisibility fallback
+    covers the blocked tail).
+    """
+    from repro.distributed.api import Axes
+
+    leaves = [l for l in jax.tree.leaves(
+        params_axes, is_leaf=lambda v: isinstance(v, Axes))]
+
+    def one(ax: "Axes", moment: str):
+        names = ax.names if len(ax.names) else (None,)
+        if cfg.state_dtype in ("fp32", "bf16") or moment == "v":
+            return Axes(*names)
+        return {"q": Axes(*names), "scale": Axes(*names)}
+
+    ms = [one(a, "m") for a in leaves]
+    vs = [one(a, "v") for a in leaves]
+    return {"m": ms, "v": vs, "step": Axes()}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def apply_updates(params, grads, opt_state, cfg: AdamWConfig):
+    """One AdamW step. Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    lr = schedule(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+
+    p_leaves, treedef = jax.tree.flatten(params)
+    g_leaves = jax.tree.leaves(grads)
+    assert len(p_leaves) == len(g_leaves)
+    new_p, new_m, new_v = [], [], []
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+    # token chain: optimization_barrier serializes per-leaf updates so the
+    # transient fp32 decode of the (possibly quantized) moments peaks at ONE
+    # leaf, not the whole state (critical for the 400B-class memory fit)
+    def leaf_update(p, g, m_s, v_s):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * _decode(m_s, cfg.state_dtype, p.shape, "m") + (1 - cfg.b1) * g
+        v = cfg.b2 * _decode(v_s, cfg.state_dtype, p.shape, "v") + (1 - cfg.b2) * g * g
+        delta = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+        delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return newp, _encode(m, cfg.state_dtype, "m"), _encode(v, cfg.state_dtype, "v")
+
+    token = jnp.zeros((), jnp.float32)
+    for p, g, m_s, v_s in zip(p_leaves, g_leaves, opt_state["m"], opt_state["v"]):
+        g, m_s, v_s, token = jax.lax.optimization_barrier((g, m_s, v_s, token))
+        if p.ndim >= 3 and p.shape[0] <= 128 and p.size > 10**8:
+            # huge stacked-block leaf: stream the update over the leading
+            # (layers) dim so the fp32 moment decode peaks at one block
+            newp, m_new, v_new = jax.lax.map(
+                lambda args: leaf_update(*args), (p, g, m_s, v_s))
+        else:
+            newp, m_new, v_new = leaf_update(p, g, m_s, v_s)
+        token = newp.ravel()[0].astype(jnp.float32)
+        new_p.append(newp)
+        new_m.append(m_new)
+        new_v.append(v_new)
+    metrics = {"grad_norm": gnorm, "lr": lr, "step": step}
+    return (jax.tree.unflatten(treedef, new_p),
+            {"m": new_m, "v": new_v, "step": step}, metrics)

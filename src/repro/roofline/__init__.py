@@ -1,0 +1,14 @@
+from repro.roofline.analysis import (
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS,
+    CollectiveStats,
+    Roofline,
+    collective_bytes,
+    model_flops,
+)
+
+__all__ = [
+    "HBM_BW", "ICI_BW", "PEAK_FLOPS", "CollectiveStats", "Roofline",
+    "collective_bytes", "model_flops",
+]

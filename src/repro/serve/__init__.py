@@ -1,0 +1,4 @@
+from repro.serve.engine import ServeStats, SnapshotServer
+from repro.serve.lm_serve import generate, make_serve_step
+
+__all__ = ["ServeStats", "SnapshotServer", "generate", "make_serve_step"]

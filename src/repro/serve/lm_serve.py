@@ -1,0 +1,43 @@
+"""LM serving: batched greedy decode against KV caches / SSM states."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import RuntimeConfig, decode_step, init_caches
+
+
+def make_serve_step(cfg: ModelConfig, rt: RuntimeConfig):
+    """Returns jitted (params, tokens (B,1), caches) -> (next (B,1), caches)."""
+
+    @functools.partial(jax.jit, donate_argnums=(2,))
+    def step(params, tokens, caches):
+        logits, caches = decode_step(params, cfg, rt, tokens, caches)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+        return nxt, caches
+
+    return step
+
+
+def generate(params, cfg: ModelConfig, rt: RuntimeConfig, prompt: jax.Array,
+             steps: int, skv: int):
+    """Greedy generation: feeds the prompt token by token, then samples.
+
+    prompt: (B, P) int32. Returns (B, steps) int32.
+    """
+    b, plen = prompt.shape
+    caches = init_caches(cfg, rt, b, skv)
+    step = make_serve_step(cfg, rt)
+    tok = prompt[:, :1]
+    out = []
+    for i in range(plen + steps - 1):
+        nxt, caches = step(params, tok, caches)
+        if i + 1 < plen:
+            tok = prompt[:, i + 1 : i + 2]  # teacher-forced prompt phase
+        else:
+            tok = nxt
+            out.append(nxt)
+    return jnp.concatenate(out, axis=1) if out else jnp.zeros((b, 0), jnp.int32)

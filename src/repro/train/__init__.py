@@ -1,0 +1,3 @@
+from repro.train.loop import TrainLoopConfig, TrainResult, make_train_step, train
+
+__all__ = ["TrainLoopConfig", "TrainResult", "make_train_step", "train"]

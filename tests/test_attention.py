@@ -1,0 +1,101 @@
+"""Attention: chunked == full; decode == last row of full; GQA grouping."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduce_for_smoke
+from repro.nn import attention as A
+
+CFG = dataclasses.replace(reduce_for_smoke(ARCHS["qwen2.5-14b"]), n_layers=2)
+
+
+def _qkv(b=2, s=64, hq=4, hkv=2, hd=16):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, s, hq, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, hkv, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, hkv, hd), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("chunk", [16, 32])
+def test_chunked_equals_full(causal, chunk):
+    q, k, v = _qkv()
+    full = A.full_attention(q, k, v, causal=causal)
+    ch = A.chunked_attention(q, k, v, causal=causal, chunk=chunk)
+    np.testing.assert_allclose(ch, full, atol=1e-5)
+
+
+def test_gqa_grouping_equals_repeated_kv():
+    """Grouped einsum == materialized KV-head repeat."""
+    q, k, v = _qkv(hq=8, hkv=2)
+    got = A.full_attention(q, k, v, causal=True)
+    krep = jnp.repeat(k, 4, axis=2)
+    vrep = jnp.repeat(v, 4, axis=2)
+    want = A.full_attention(q, krep, vrep, causal=True)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+def test_decode_matches_full_last_row():
+    q, k, v = _qkv(s=32)
+    full = A.full_attention(q, k, v, causal=True)
+    # decode the last position against the cache of all 32 (len = 32)
+    out = A.decode_attention(q[:, -1:], k, v, kv_len=32)
+    np.testing.assert_allclose(out[:, 0], full[:, -1], atol=1e-5)
+
+
+def test_decode_masks_beyond_len():
+    q, k, v = _qkv(s=32)
+    out_short = A.decode_attention(q[:, :1], k, v, kv_len=5)
+    k2 = k.at[:, 5:].set(999.0)  # junk beyond len must not matter
+    v2 = v.at[:, 5:].set(999.0)
+    out_junk = A.decode_attention(q[:, :1], k2, v2, kv_len=5)
+    np.testing.assert_allclose(out_short, out_junk, atol=1e-5)
+
+
+def test_attention_block_incremental_decode_consistency():
+    """Feeding tokens one by one through the cache == full causal attention."""
+    import repro.nn.layers as L
+
+    cfg = CFG
+    p, _ = A.init_attention(jax.random.PRNGKey(0), cfg, tp=1)
+    b, s, d = 2, 8, cfg.d_model
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, d), jnp.float32).astype(L.ACT_DTYPE)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    full, _ = A.attention_block(p, cfg, x, positions)
+    cache = A.init_decode_cache(cfg, b, s, tp=1, dtype=jnp.float32)
+    outs = []
+    for t in range(s):
+        y, cache = A.attention_block(p, cfg, x[:, t : t + 1],
+                                     positions[:, t : t + 1], cache=cache)
+        outs.append(y)
+    inc = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(inc, np.float32),
+                               np.asarray(full, np.float32),
+                               atol=3e-2, rtol=3e-2)  # bf16 activations
+
+
+def test_int8_kv_cache_close_to_bf16():
+    """int8 KV cache decode ~= exact decode (per-token absmax quant)."""
+    cfg = CFG
+    p, _ = A.init_attention(jax.random.PRNGKey(0), cfg, tp=1)
+    b, s, d = 2, 8, cfg.d_model
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, d), jnp.float32).astype(jnp.bfloat16)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    exact_cache = A.init_decode_cache(cfg, b, s, tp=1, dtype=jnp.float32)
+    q_cache = A.init_decode_cache(cfg, b, s, tp=1, quant=True)
+    outs_e, outs_q = [], []
+    for t in range(s):
+        ye, exact_cache = A.attention_block(p, cfg, x[:, t:t+1],
+                                            positions[:, t:t+1], cache=exact_cache)
+        yq, q_cache = A.attention_block(p, cfg, x[:, t:t+1],
+                                        positions[:, t:t+1], cache=q_cache)
+        outs_e.append(np.asarray(ye, np.float32))
+        outs_q.append(np.asarray(yq, np.float32))
+    e = np.concatenate(outs_e, 1)
+    q = np.concatenate(outs_q, 1)
+    rel = np.abs(e - q).max() / (np.abs(e).max() + 1e-9)
+    assert rel < 0.06, rel

@@ -1,0 +1,83 @@
+"""The paper's correctness contract: every dataflow engine (baseline /
+O1 / V1 / V2) computes identical outputs for the same weights + stream."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.dgnn import BC_ALPHA, DGNN_CONFIGS
+from repro.core import build_model, run_batched, run_stream, stack_time
+from repro.graph import (
+    generate_temporal_graph,
+    pad_snapshot,
+    renumber_and_normalize,
+    slice_snapshots,
+)
+
+MODES = {
+    "evolvegcn": ["baseline", "o1", "v1"],
+    "gcrn-m2": ["baseline", "o1", "v2"],
+    "stacked-gcn-gru": ["baseline", "o1", "v1", "v2"],
+}
+
+
+@pytest.fixture(scope="module")
+def stream():
+    tg, ft = generate_temporal_graph(BC_ALPHA)
+    snaps = slice_snapshots(tg, 1.0)[:8]
+    pads = [pad_snapshot(renumber_and_normalize(s), ft, 640, 4096, 64)
+            for s in snaps]
+    return tg, stack_time(pads)
+
+
+@pytest.mark.parametrize("name", sorted(DGNN_CONFIGS))
+def test_dataflow_modes_identical(stream, name):
+    tg, sT = stream
+    cfg = DGNN_CONFIGS[name]
+    model = build_model(cfg, n_global=tg.n_global_nodes)
+    params = model.init(jax.random.PRNGKey(0))
+    outs = {}
+    for mode in MODES[name]:
+        st = model.init_state(params, mode=mode)
+        _, o = run_stream(model, params, st, sT, mode=mode)
+        outs[mode] = np.asarray(o)
+    base = outs["baseline"]
+    assert np.isfinite(base).all()
+    assert np.abs(base).max() > 0  # non-degenerate
+    for mode, o in outs.items():
+        np.testing.assert_allclose(o, base, atol=2e-5,
+                                   err_msg=f"{name} mode={mode}")
+
+
+@pytest.mark.parametrize("name", sorted(DGNN_CONFIGS))
+def test_recurrence_actually_carries_state(stream, name):
+    """Shuffling the stream must change outputs (temporal dependence)."""
+    tg, sT = stream
+    cfg = DGNN_CONFIGS[name]
+    model = build_model(cfg, n_global=tg.n_global_nodes)
+    params = model.init(jax.random.PRNGKey(0))
+    st = model.init_state(params, mode="baseline")
+    _, o1 = run_stream(model, params, st, sT, mode="baseline")
+    rev = jax.tree.map(lambda a: a[::-1], sT)
+    st = model.init_state(params, mode="baseline")
+    _, o2 = run_stream(model, params, st, rev, mode="baseline")
+    # last outputs differ because recurrent state path differs
+    assert not np.allclose(np.asarray(o1)[-1], np.asarray(o2)[0])
+
+
+def test_batched_streams(stream):
+    tg, sT = stream
+    cfg = DGNN_CONFIGS["gcrn-m2"]
+    model = build_model(cfg, n_global=tg.n_global_nodes)
+    params = model.init(jax.random.PRNGKey(0))
+    B = 3
+    sTB = jax.tree.map(lambda a: np.stack([a] * B, axis=1), sT)
+    states = jax.tree.map(
+        lambda a: np.stack([np.asarray(a)] * B, axis=0),
+        model.init_state(params, mode="baseline"))
+    _, oB = run_batched(model, params, states, sTB, mode="baseline")
+    st = model.init_state(params, mode="baseline")
+    _, o1 = run_stream(model, params, st, sT, mode="baseline")
+    # identical streams -> identical outputs per lane
+    for b in range(B):
+        np.testing.assert_allclose(np.asarray(oB)[:, b], np.asarray(o1),
+                                   atol=1e-5)

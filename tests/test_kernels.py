@@ -1,0 +1,146 @@
+"""Per-kernel allclose vs the pure-jnp oracle, swept over shapes/dtypes.
+
+Kernels run in interpret mode on CPU (same tiling as the TPU build)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+def _ell(key, n, k, e):
+    k1, k2, k3 = jax.random.split(key, 3)
+    idx = jax.random.randint(k1, (n, k), 0, n)
+    coef = jax.random.uniform(k2, (n, k))
+    # kill ~half the lanes (padding semantics)
+    coef = coef * (jax.random.uniform(k3, (n, k)) > 0.5)
+    eidx = jax.random.randint(k1, (n, k), 0, e)
+    return idx.astype(jnp.int32), coef.astype(jnp.float32), eidx.astype(jnp.int32)
+
+
+@pytest.mark.parametrize("n,k,d", [(128, 8, 32), (256, 16, 64), (640, 32, 128)])
+@pytest.mark.parametrize("edge", [False, True])
+def test_ell_spmm(n, k, d, edge):
+    e = 4 * n
+    idx, coef, eidx = _ell(KEY, n, k, e)
+    x = _rand(jax.random.PRNGKey(1), (n, d))
+    em = _rand(jax.random.PRNGKey(2), (e, d)) if edge else None
+    got = ops.ell_spmm(idx, coef, eidx, x, em, tn=128)
+    want = ref.ell_spmm(idx, coef, eidx, x, em)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+@pytest.mark.parametrize("b,din,h", [(128, 32, 64), (256, 64, 128), (384, 128, 96)])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_fused_gru(b, din, h, dtype):
+    ks = jax.random.split(KEY, 5)
+    x = _rand(ks[0], (b, din), dtype)
+    hh = _rand(ks[1], (b, h), dtype)
+    wx = _rand(ks[2], (din, 3 * h), dtype)
+    wh = _rand(ks[3], (h, 3 * h), dtype)
+    bb = _rand(ks[4], (3 * h,), dtype)
+    got = ops.fused_gru(x, hh, wx, wh, bb, tb=128)
+    want = ref.fused_gru(x, hh, wx, wh, bb)
+    np.testing.assert_allclose(got, want, atol=2e-4)
+
+
+@pytest.mark.parametrize("b,din,h", [(128, 32, 64), (256, 48, 128)])
+def test_fused_lstm(b, din, h):
+    ks = jax.random.split(KEY, 6)
+    x = _rand(ks[0], (b, din))
+    hh = _rand(ks[1], (b, h))
+    cc = _rand(ks[2], (b, h))
+    wx = _rand(ks[3], (din, 4 * h))
+    wh = _rand(ks[4], (h, 4 * h))
+    bb = _rand(ks[5], (4 * h,))
+    gh, gc = ops.fused_lstm(x, hh, cc, wx, wh, bb, tb=128)
+    wh_, wc_ = ref.fused_lstm(x, hh, cc, wx, wh, bb)
+    np.testing.assert_allclose(gh, wh_, atol=2e-4)
+    np.testing.assert_allclose(gc, wc_, atol=2e-4)
+
+
+@pytest.mark.parametrize("n,k,din,h", [(128, 8, 32, 64), (256, 16, 64, 128)])
+@pytest.mark.parametrize("edge", [False, True])
+def test_dgnn_fused_gcrn(n, k, din, h, edge):
+    e = 4 * n
+    idx, coef, eidx = _ell(KEY, n, k, e)
+    ks = jax.random.split(jax.random.PRNGKey(3), 7)
+    x = _rand(ks[0], (n, din))
+    hh = _rand(ks[1], (n, h))
+    cc = _rand(ks[2], (n, h))
+    wx = _rand(ks[3], (din, 4 * h))
+    wh = _rand(ks[4], (h, 4 * h))
+    bb = _rand(ks[5], (4 * h,))
+    em = _rand(ks[6], (e, din)) if edge else None
+    gh, gc = ops.dgnn_fused_step(idx, coef, eidx, x, hh, cc, wx, wh, bb, em, tn=128)
+    wh_, wc_ = ref.dgnn_fused_step(idx, coef, eidx, x, hh, cc, wx, wh, bb, em)
+    np.testing.assert_allclose(gh, wh_, atol=2e-4)
+    np.testing.assert_allclose(gc, wc_, atol=2e-4)
+
+
+@pytest.mark.parametrize("n,k,din,dmid,h", [(128, 8, 32, 48, 64), (256, 16, 64, 64, 128)])
+def test_stacked_fused(n, k, din, dmid, h):
+    e = 4 * n
+    idx, coef, eidx = _ell(KEY, n, k, e)
+    ks = jax.random.split(jax.random.PRNGKey(4), 7)
+    x = _rand(ks[0], (n, din))
+    hh = _rand(ks[1], (n, h))
+    wg = _rand(ks[2], (din, dmid))
+    bg = _rand(ks[3], (dmid,))
+    wx = _rand(ks[4], (dmid, 3 * h))
+    wh = _rand(ks[5], (h, 3 * h))
+    bb = _rand(ks[6], (3 * h,))
+    got = ops.stacked_fused_step(idx, coef, eidx, x, hh, wg, bg, wx, wh, bb, tn=128)
+    want = ref.stacked_fused_step(idx, coef, eidx, x, hh, wg, bg, wx, wh, bb)
+    np.testing.assert_allclose(got, want, atol=2e-4)
+
+
+def test_kernel_vs_segment_sum_production_path():
+    """ELL kernel == the XLA segment-sum path on a real padded snapshot."""
+    from repro.configs.dgnn import UCI
+    from repro.core.gcn import propagate_segment
+    from repro.graph import (
+        generate_temporal_graph, pad_snapshot, renumber_and_normalize,
+        slice_snapshots)
+
+    tg, ft = generate_temporal_graph(UCI)
+    snap = slice_snapshots(tg, 1.0)[0]
+    ps = pad_snapshot(renumber_and_normalize(snap), ft, 640, 4096, 64)
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(640, 64)), jnp.float32)
+    a = propagate_segment(ps, x)
+    b = ops.ell_spmm(ps.neigh_idx, ps.neigh_coef, ps.neigh_eidx, x, tn=128)
+    np.testing.assert_allclose(a, b, atol=1e-4)
+
+
+@pytest.mark.parametrize("s,bq,bk", [(128, 32, 32), (256, 64, 128)])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("group", [1, 4])
+def test_flash_attention(s, bq, bk, causal, group):
+    """Flash kernel (interpret) vs the grouped-einsum oracle, incl. GQA."""
+    from repro.nn import attention as A
+
+    b, hkv, hd = 2, 2, 32
+    hq = hkv * group
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (b, s, hq, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, hkv, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, hkv, hd), jnp.float32)
+    want = A.full_attention(q, k, v, causal=causal)
+    got = A.flash_attention(q, k, v, causal=causal, bq=bq, bk=bk)
+    np.testing.assert_allclose(got, want, atol=2e-5)
+
+
+def test_flash_flops_accounting_causal_saves_half():
+    from repro.kernels.flash_attention import flops_bytes
+
+    full = flops_bytes(1, 8, 8, 4096, 128, causal=False)
+    caus = flops_bytes(1, 8, 8, 4096, 128, causal=True)
+    assert caus["flops"] < 0.6 * full["flops"]
+    assert caus["flops"] > 0.45 * full["flops"]

@@ -1,0 +1,106 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graph.coo import COOSnapshot, TemporalGraph, slice_snapshots
+from repro.graph.csr import max_in_degree, renumber_and_normalize, to_ell
+from repro.kernels import ref
+from repro.optim import dequantize_blockwise, quantize_blockwise
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@st.composite
+def coo_snapshots(draw):
+    n_pool = draw(st.integers(4, 200))
+    e = draw(st.integers(1, 400))
+    rng = np.random.default_rng(draw(st.integers(0, 2**31)))
+    src = rng.integers(0, n_pool, e)
+    dst = rng.integers(0, n_pool, e)
+    keep = src != dst
+    if not keep.any():
+        src, dst = np.array([0]), np.array([1])
+        keep = np.array([True])
+    src, dst = src[keep], dst[keep]
+    ef = rng.normal(size=(src.size, 4)).astype(np.float32)
+    return COOSnapshot(src=src, dst=dst, edge_feat=ef, t_index=0)
+
+
+@given(coo_snapshots())
+def test_renumber_preserves_edge_count_and_density(snap):
+    ls = renumber_and_normalize(snap)
+    # e' = 2e (reverse edges) + n (self loops)
+    assert ls.src.shape[0] == 2 * snap.n_edges + ls.n_nodes
+    assert ls.n_nodes == snap.active_nodes().size
+    # normalization positive, finite
+    assert np.isfinite(ls.coef).all() and (ls.coef > 0).all()
+
+
+@given(coo_snapshots())
+def test_ell_spmm_equals_segment_sum(snap):
+    """ELL aggregation == explicit COO segment sum, any random graph."""
+    ls = renumber_and_normalize(snap)
+    n_pad = max(8, int(np.ceil(ls.n_nodes / 8)) * 8)
+    k = max(1, max_in_degree(ls))
+    idx, coef, eidx = to_ell(ls, n_pad, k)
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(n_pad, 16)).astype(np.float32)
+    got = np.asarray(ref.ell_spmm(jnp.asarray(idx), jnp.asarray(coef),
+                                  jnp.asarray(eidx), jnp.asarray(x)))
+    want = np.zeros_like(x)
+    np.add.at(want, ls.dst, ls.coef[:, None] * x[ls.src])
+    np.testing.assert_allclose(got, want, atol=1e-4)
+
+
+@given(st.integers(0, 2**31), st.integers(1, 4))
+def test_time_splitter_partition(seed, width):
+    rng = np.random.default_rng(seed)
+    e = rng.integers(10, 300)
+    tg = TemporalGraph(
+        src=rng.integers(0, 50, e), dst=rng.integers(0, 50, e),
+        time=rng.uniform(0, 20, e), edge_feat=np.zeros((e, 0), np.float32),
+        n_global_nodes=50)
+    snaps = slice_snapshots(tg, float(width))
+    assert sum(s.n_edges for s in snaps) == e  # exact partition
+    assert all(s.n_edges > 0 for s in snaps)   # empty windows dropped
+
+
+@given(st.lists(st.floats(-1e4, 1e4, allow_nan=False), min_size=1, max_size=500))
+def test_quantize_roundtrip_bound(vals):
+    x = jnp.asarray(np.array(vals, np.float32))
+    qd = quantize_blockwise(x)
+    back = np.asarray(dequantize_blockwise(qd, x.shape))
+    scale = np.asarray(qd["scale"])
+    # per-block error bound: half a quantization step
+    err = np.abs(back - np.asarray(x))
+    assert err.max() <= scale.max() * 0.5 + 1e-6
+
+
+@given(st.integers(0, 2**31))
+def test_gru_state_bounded(seed):
+    """GRU output is a convex combination -> bounded by input magnitudes."""
+    from repro.core import rnn as R
+
+    rng = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(rng, 3)
+    p = R.init_gru(k1, 8, 8)
+    x = jax.random.normal(k2, (4, 8))
+    h = jnp.clip(jax.random.normal(k3, (4, 8)), -1, 1)
+    out = R.gru_cell(p, x, h)
+    bound = jnp.maximum(jnp.abs(h), 1.0)  # |n| <= 1 (tanh), |h| <= bound
+    assert (jnp.abs(out) <= bound + 1e-5).all()
+
+
+@given(st.integers(2, 64), st.integers(0, 2**31))
+def test_softmax_ce_lower_bound(vocab, seed):
+    """Chunked CE >= 0 and == -log p(target)."""
+    rng = np.random.default_rng(seed)
+    logits = rng.normal(size=(vocab,)).astype(np.float32)
+    t = int(rng.integers(0, vocab))
+    lse = np.log(np.exp(logits).sum())
+    ce = lse - logits[t]
+    assert ce >= -1e-6

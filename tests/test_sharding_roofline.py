@@ -1,0 +1,94 @@
+"""Sharding rules resolution + roofline parsing/math."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, cell_status, runnable_cells
+from repro.distributed.api import Axes, resolve_spec, sharding_ctx
+from repro.roofline import Roofline, collective_bytes, model_flops
+from repro.roofline.corrections import total_corrections
+
+
+def test_resolve_divisibility_fallback():
+    mesh = jax.make_mesh((1, 1), ("data", "model"), devices=jax.devices()[:1])
+    # with axis size 1 everything degrades to replication
+    spec = resolve_spec((64, 128), ("batch", "ffn"), mesh)
+    assert spec == P(None, None)
+
+
+def test_resolve_spec_no_mesh_passthrough():
+    spec = resolve_spec((64, 128), ("batch", "ffn"), mesh=None)
+    assert spec == P(("pod", "data"), "model")
+
+
+def test_padding_policies():
+    c = ARCHS["deepseek-coder-33b"]
+    assert c.padded_heads(16) == 64      # 56 -> 64
+    assert c.padded_kv_heads(16) == 16   # 8 -> repeat to 16
+    g = ARCHS["granite-moe-3b-a800m"]
+    assert g.padded_experts(16) == 48    # 40 -> 48
+    assert g.padded_vocab() % 256 == 0
+
+
+def test_cell_skip_rules():
+    assert cell_status(ARCHS["hubert-xlarge"], SHAPES["decode_32k"]).startswith("skip")
+    assert cell_status(ARCHS["deepseek-coder-33b"], SHAPES["long_500k"]).startswith("skip")
+    assert cell_status(ARCHS["jamba-v0.1-52b"], SHAPES["long_500k"]) == "run"
+    assert cell_status(ARCHS["mamba2-2.7b"], SHAPES["long_500k"]) == "run"
+    assert len(runnable_cells()) == 31
+
+
+HLO = """
+HloModule test
+ENTRY main {
+  %p0 = f32[16,128]{1,0} parameter(0)
+  %ag = f32[16,2048]{1,0} all-gather(%p0), dimensions={1}
+  %ar = f32[16,2048]{1,0} all-reduce(%ag), to_apply=sum
+  %a2a = f32[16,2048]{1,0} all-to-all(%ar), dimensions={0}
+  %cp = f32[16,2048]{1,0} collective-permute(%a2a), source_target_pairs={{0,1}}
+  %rs.1 = f32[16,128]{1,0} reduce-scatter(%cp), dimensions={1}
+  ROOT %out = f32[16,128]{1,0} add(%rs.1, %p0)
+}
+"""
+
+
+def test_collective_bytes_parsing():
+    st = collective_bytes(HLO)
+    assert st.count_by_op == {"all-gather": 1, "all-reduce": 1,
+                              "all-to-all": 1, "collective-permute": 1,
+                              "reduce-scatter": 1}
+    # all-gather operand = p0 = 16*128*4 bytes
+    assert st.bytes_by_op["all-gather"] == 16 * 128 * 4
+    assert st.bytes_by_op["all-reduce"] == 16 * 2048 * 4
+    assert st.bytes_by_op["reduce-scatter"] == 16 * 2048 * 4
+
+
+def test_roofline_terms_and_bottleneck():
+    r = Roofline(flops=197e12, bytes_hbm=819e9 * 2, bytes_coll=0, chips=256,
+                 model_flops=197e12 * 256 * 0.5)
+    assert r.t_compute == pytest.approx(1.0)
+    assert r.t_memory == pytest.approx(2.0)
+    assert r.bottleneck == "memory"
+    assert r.roofline_fraction == pytest.approx(0.25)
+    assert r.useful_ratio == pytest.approx(0.5)
+
+
+def test_model_flops_scales():
+    dense = model_flops(ARCHS["deepseek-coder-33b"], SHAPES["train_4k"])
+    # >= 6*N*D
+    assert dense >= 6 * ARCHS["deepseek-coder-33b"].param_count() * 256 * 4096
+    moe = model_flops(ARCHS["llama4-maverick-400b-a17b"], SHAPES["train_4k"])
+    # active params only: far below 6*N_total*D
+    assert moe < 6 * ARCHS["llama4-maverick-400b-a17b"].param_count() * 256 * 4096 / 5
+
+
+def test_corrections_are_itemized_and_nonnegative():
+    c = total_corrections(ARCHS["mamba2-2.7b"], SHAPES["prefill_32k"], 16,
+                          2048, 512)
+    assert c["flops"] >= 0 and c["bytes_hbm"] >= 0
+    sites = {i["site"] for i in c["items"]}
+    assert "ssd" in sites
+    c2 = total_corrections(ARCHS["phi3-mini-3.8b"], SHAPES["train_4k"], 16,
+                           2048, 512)
+    assert {i["site"] for i in c2["items"]} == {"attention", "loss"}
