@@ -1,9 +1,11 @@
 """End-to-end DGNN serving driver (the paper's deployment scenario).
 
-Runs both base models (EvolveGCN -> V1, GCRN-M2 -> V2) over both datasets
-(BC-Alpha, UCI), with the paper's ablation levels, and prints the Table IV /
-Fig. 6 style comparison measured on this host. Batched multi-stream serving
-is included (--streams N).
+Runs both base models (EvolveGCN -> V1, GCRN-M2 -> V2/V3) over both
+datasets (BC-Alpha, UCI), with the paper's ablation levels, and prints the
+Table IV / Fig. 6 style comparison measured on this host. V3 is the
+time-fused stream engine: the server batches snapshots into chunks and the
+recurrent state stays in VMEM across each chunk. Batched multi-stream
+serving is included (--streams N).
 
     PYTHONPATH=src python examples/serve_stream.py [--snapshots 32] [--streams 4]
 """
@@ -30,12 +32,12 @@ def main():
     ap.add_argument("--streams", type=int, default=4)
     args = ap.parse_args()
 
-    pairs = [("evolvegcn", "v1"), ("gcrn-m2", "v2")]
+    pairs = [("evolvegcn", ("v1",)), ("gcrn-m2", ("v2", "v3"))]
     for ds in (BC_ALPHA, UCI):
         tg, ft = generate_temporal_graph(ds)
         snaps = slice_snapshots(tg, 1.0)[: args.snapshots]
-        for name, mode in pairs:
-            for m in ("baseline", mode):
+        for name, modes in pairs:
+            for m in ("baseline",) + modes:
                 srv = SnapshotServer(DGNN_CONFIGS[name], ft,
                                      n_global=tg.n_global_nodes, mode=m)
                 params, state = srv.init(jax.random.PRNGKey(0))

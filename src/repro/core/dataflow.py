@@ -1,4 +1,4 @@
-"""Dataflow engines: sequential baseline, Pipeline-O1, V1, V2.
+"""Dataflow engines: sequential baseline, Pipeline-O1, V1, V2, V3.
 
 These wrap a DGNN model's per-snapshot step into a scan over the snapshot
 stream, reproducing the paper's ablation levels (Fig. 6):
@@ -13,6 +13,24 @@ stream, reproducing the paper's ablation levels (Fig. 6):
                register (prologue/epilogue below).
   v2 (o2)      Pipeline-O2 for stacked/integrated DGNNs: intra-step fusion
                (node-queue analogue) via the fused Pallas kernel.
+  v3           Time-fused stream: the whole T-step stream runs inside ONE
+               Pallas kernel (kernels/stream_fused.py) with the recurrent
+               node-state store living in VMEM scratch between snapshots —
+               the paper's BRAM-resident intermediate results. h/c cross
+               HBM once per stream instead of once per step (T× less
+               recurrent-state traffic). Models expose it as
+               ``step_stream``; weights-evolved DGNNs carry weight-matrix
+               (not node) state, so v3 falls back to the v1 overlapped
+               schedule for them.
+
+Ablation summary (what each level removes from the critical path):
+
+  level     | scope of fusion       | recurrent-state HBM traffic
+  baseline  | none                  | 2T transfers / stream (in + out each step)
+  o1        | RNN gate pipeline     | 2T
+  v1        | adjacent-step overlap | 2T (pipeline register added)
+  v2        | intra-step GNN+RNN    | 2T (gate tensor stays in VMEM)
+  v3        | whole stream          | 2  (state resident across all T steps)
 
 All modes compute IDENTICAL outputs for the same params/stream — that is
 the correctness contract the paper verifies against PyTorch, and what our
@@ -88,6 +106,11 @@ def run_stream(model: Model, params, state0, snaps_T, mode: str = "baseline"):
     """
     if mode == "v1" and isinstance(model, StackedDGNN):
         return _run_stacked_v1(model, params, state0, snaps_T)
+    if mode == "v3" and hasattr(model, "step_stream"):
+        return model.step_stream(params, state0, snaps_T)
+    # weights-evolved DGNNs have no node-resident recurrent state for the
+    # stream kernel to keep in VMEM; their step() treats v3 as the v1
+    # overlapped schedule (init_state primes the carry for both).
     return _scan_steps(model, params, state0, snaps_T, mode)
 
 

@@ -54,10 +54,14 @@ class EvolveGCN:
 
         v1 primes the pipeline by evolving once, so that inside the scan
         body the GCN consumes W^t while the GRU produces W^{t+1}; outputs
-        then match baseline exactly.
+        then match baseline exactly. v3 (the time-fused stream engine) has
+        no node-resident recurrent state to keep in VMEM for this family —
+        the recurrence is over the weight matrices, whose evolution is a
+        tiny matrix-GRU — so it falls back to the v1 overlapped schedule
+        (see core/dataflow.py) and needs the same priming.
         """
         weights = [p["w"] for p in params["gcn"]]
-        if mode == "v1":
+        if mode in ("v1", "v3"):
             weights = [
                 R.matrix_gru(g, w, fused=True)
                 for g, w in zip(params["gru"], weights)
@@ -66,8 +70,11 @@ class EvolveGCN:
 
     def step(self, params: dict, state: dict, snap: PaddedSnapshot, *,
              mode: str = "baseline") -> tuple[dict, jax.Array]:
-        fused = mode in ("o1", "v1")
-        if mode == "v1":
+        # v3 falls back to the v1 overlapped schedule (see init_state): the
+        # state is primed identically, so treating them apart would evolve
+        # the weights twice per step.
+        fused = mode in ("o1", "v1", "v3")
+        if mode in ("v1", "v3"):
             # DGNN-Booster V1: GCN and GRU are independent given the carry.
             w_now = state["weights"]
             out = G.gcn_forward_weights(params["gcn"], w_now, snap,

@@ -20,6 +20,11 @@ Dataflow modes:
              per node tile inside one Pallas kernel (kernels/dgnn_fused.py)
              — the node-queue FIFO becomes a VMEM-resident tile. Identical
              math, no HBM round-trip for the gate tensor.
+  v3         + time fusion (``step_stream``): the whole snapshot stream runs
+             in ONE Pallas kernel (kernels/stream_fused.py) with the h/c
+             global stores living in VMEM scratch across all T steps — the
+             BRAM-resident recurrent state of the paper. The store crosses
+             HBM once per stream instead of once per step.
 """
 from __future__ import annotations
 
@@ -109,3 +114,21 @@ class GCRN:
             "c": self._scatter(state["c"], snap, c_new),
         }
         return new_state, out * m
+
+    def step_stream(self, params: dict, state: dict, snaps_T: PaddedSnapshot
+                    ) -> tuple[dict, jax.Array]:
+        """V3: run a whole (T, ...) snapshot stream through the time-fused
+        kernel; h/c stay in VMEM across steps (gather/scatter included)."""
+        from repro.kernels import ops as kops
+
+        w_edge = params.get("w_edge")
+        edge_msg = snaps_T.edge_feat @ w_edge if w_edge is not None else None
+        outs_h, h_T, c_T = kops.dgnn_stream_steps(
+            snaps_T.neigh_idx, snaps_T.neigh_coef, snaps_T.neigh_eidx,
+            snaps_T.node_feat, snaps_T.renumber, snaps_T.node_mask,
+            state["h"], state["c"],
+            params["lstm"]["wx"], params["lstm"]["wh"], params["lstm"]["b"],
+            edge_msg,
+        )
+        out = outs_h @ params["head"]["w"] + params["head"]["b"]
+        return {"h": h_T, "c": c_T}, out * snaps_T.node_mask[..., None]

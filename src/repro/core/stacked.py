@@ -13,6 +13,10 @@ Dataflow modes:
              GRU(X^{t-1}) concurrently (X carried in the state, one-step
              prologue/epilogue handled in core/dataflow.py).
   v2         intra-step fusion via the Pallas fused kernel (GRU variant).
+  v3         time fusion (``step_stream``): last GCN layer + GRU for the
+             whole stream in one Pallas kernel, the global h store
+             VMEM-resident across all T steps (kernels/stream_fused.py).
+             Earlier GCN layers are time-independent and run vmapped.
 """
 from __future__ import annotations
 
@@ -92,3 +96,31 @@ class StackedDGNN:
         x = self.gnn(params, snap)
         new_state, h_new = self.rnn(params, state, snap, x, fused=fused)
         return new_state, h_new
+
+    def step_stream(self, params: dict, state: dict, snaps_T: PaddedSnapshot
+                    ) -> tuple[dict, jax.Array]:
+        """V3: whole (T, ...) stream through the time-fused kernel.
+
+        GCN layers before the last have no temporal dependence, so they run
+        vmapped over T; the last layer + GRU + store gather/scatter execute
+        inside the stream kernel with h resident in VMEM."""
+        from repro.kernels import ops as kops
+
+        x = snaps_T.node_feat
+        for p in params["gcn"][:-1]:
+            x = jax.vmap(
+                lambda s, xx, p=p: G.gcn_layer(p, s, xx, impl=self.impl)
+            )(snaps_T, x)
+        p_last = params["gcn"][-1]
+        w_edge = params["gcn"][0].get("w_edge")
+        edge_msg = (snaps_T.edge_feat @ w_edge
+                    if (w_edge is not None and len(params["gcn"]) == 1)
+                    else None)
+        outs_h, h_T = kops.stacked_stream_steps(
+            snaps_T.neigh_idx, snaps_T.neigh_coef, snaps_T.neigh_eidx,
+            x, snaps_T.renumber, snaps_T.node_mask, state["h"],
+            p_last["w"], p_last["b"],
+            params["gru"]["wx"], params["gru"]["wh"], params["gru"]["b"],
+            edge_msg,
+        )
+        return {"h": h_T}, outs_h

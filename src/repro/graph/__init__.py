@@ -4,6 +4,7 @@ from repro.graph.padding import (
     DEFAULT_BUCKETS,
     PaddedSnapshot,
     choose_bucket,
+    empty_like_padded,
     pad_snapshot,
     stack_streams,
 )
@@ -13,5 +14,5 @@ __all__ = [
     "COOSnapshot", "TemporalGraph", "slice_snapshots", "snapshot_stats",
     "LocalSnapshot", "renumber_and_normalize", "to_ell", "max_in_degree",
     "PaddedSnapshot", "pad_snapshot", "stack_streams", "choose_bucket",
-    "DEFAULT_BUCKETS", "generate_temporal_graph",
+    "empty_like_padded", "DEFAULT_BUCKETS", "generate_temporal_graph",
 ]

@@ -87,6 +87,33 @@ def pad_snapshot(
     )
 
 
+def empty_like_padded(ps: PaddedSnapshot) -> PaddedSnapshot:
+    """An all-padding snapshot in the same bucket as ``ps``.
+
+    Running it through any dataflow engine is a no-op on the recurrent
+    state (masks 0, renumber -1 so every scatter drops) and produces
+    all-zero outputs — used to pad the tail of a stream chunk so the
+    time-fused V3 kernel always sees a static T.
+    """
+    n_pad, e_pad, k_max = ps.n_pad, ps.e_pad, ps.k_max
+    de = ps.edge_feat.shape[1]
+    din = ps.node_feat.shape[1]
+    return PaddedSnapshot(
+        src=np.full(e_pad, n_pad - 1, np.int32),
+        dst=np.full(e_pad, n_pad - 1, np.int32),
+        coef=np.zeros(e_pad, np.float32),
+        edge_feat=np.zeros((e_pad, de), np.float32),
+        neigh_idx=np.zeros((n_pad, k_max), np.int32),
+        neigh_coef=np.zeros((n_pad, k_max), np.float32),
+        neigh_eidx=np.zeros((n_pad, k_max), np.int32),
+        node_feat=np.zeros((n_pad, din), np.float32),
+        node_mask=np.zeros(n_pad, np.float32),
+        renumber=np.full(n_pad, -1, np.int32),
+        n_nodes=np.int32(0),
+        n_edges=np.int32(0),
+    )
+
+
 def stack_streams(snaps: list[PaddedSnapshot]) -> PaddedSnapshot:
     """Stack independent streams along a leading batch axis (B, ...)."""
     return jax.tree.map(lambda *xs: np.stack(xs, axis=0), *snaps)

@@ -1,9 +1,12 @@
 """Pallas TPU kernels for the paper's compute hot spots.
 
-csr_spmm.py    ELL SpMM (message passing)         + oracle in ref.py
-fused_rnn.py   fused GRU / LSTM cells (O1)        + oracle in ref.py
-dgnn_fused.py  V2 fused GNN+RNN step (node queue) + oracle in ref.py
-ops.py         jit'd public wrappers (interpret on non-TPU backends)
+csr_spmm.py      ELL SpMM (message passing)         + oracle in ref.py
+fused_rnn.py     fused GRU / LSTM cells (O1)        + oracle in ref.py
+dgnn_fused.py    V2 fused GNN+RNN step (node queue) + oracle in ref.py
+stream_fused.py  V3 time-fused stream (VMEM-resident recurrent state)
+                 + stream oracles in ref.py
+ops.py           jit'd public wrappers (interpret on non-TPU backends,
+                 auto-padding for ragged node counts)
 """
 from repro.kernels import ops, ref
 

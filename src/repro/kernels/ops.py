@@ -5,6 +5,11 @@ run in interpret mode, which executes the kernel body in Python with the
 same tiling — the correctness contract tests rely on. ``force_ref=True``
 routes to the pure-jnp oracle (used by the XLA production path when the
 Pallas path is not profitable, e.g. tiny snapshots under vmap).
+
+Ragged node counts are handled here: row-tiled inputs are auto-padded to
+the node tile ``tn`` (the sink-row coef-0 convention of graph/padding.py:
+padded lanes carry coef 0, padded rows are sliced off the outputs), so
+callers never need ``n % tn == 0``.
 """
 from __future__ import annotations
 
@@ -15,6 +20,7 @@ from repro.kernels import csr_spmm as _spmm
 from repro.kernels import dgnn_fused as _fused
 from repro.kernels import fused_rnn as _rnn
 from repro.kernels import ref as _ref
+from repro.kernels import stream_fused as _stream
 
 
 def _interpret() -> bool:
@@ -25,14 +31,27 @@ def _pad_rows(n: int, tn: int) -> int:
     return ((n + tn - 1) // tn) * tn
 
 
+def _pad_to(a, n2: int, axis: int, fill=0):
+    """Pad ``a`` to ``n2`` rows along ``axis`` with a constant fill."""
+    n = a.shape[axis]
+    if n == n2:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, n2 - n)
+    return jnp.pad(a, widths, constant_values=fill)
+
+
 def ell_spmm(neigh_idx, neigh_coef, neigh_eidx, x, edge_msg=None, *,
              tn: int = 128, force_ref: bool = False):
     if force_ref:
         return _ref.ell_spmm(neigh_idx, neigh_coef, neigh_eidx, x, edge_msg)
     n = neigh_idx.shape[0]
-    assert n % tn == 0, f"pad n_pad ({n}) to a multiple of the node tile ({tn})"
-    return _spmm.ell_spmm_pallas(neigh_idx, neigh_coef, neigh_eidx, x,
-                                 edge_msg, tn=tn, interpret=_interpret())
+    n2 = _pad_rows(n, tn)
+    out = _spmm.ell_spmm_pallas(
+        _pad_to(neigh_idx, n2, 0), _pad_to(neigh_coef, n2, 0),
+        _pad_to(neigh_eidx, n2, 0), x,
+        edge_msg, tn=tn, interpret=_interpret())
+    return out[:n]
 
 
 def fused_gru(x, h, wx, wh, b, *, tb: int = 128, force_ref: bool = False):
@@ -52,9 +71,13 @@ def dgnn_fused_step(neigh_idx, neigh_coef, neigh_eidx, x, h, c, wx, wh, b,
     if force_ref:
         return _ref.dgnn_fused_step(neigh_idx, neigh_coef, neigh_eidx, x, h, c,
                                     wx, wh, b, edge_msg)
-    return _fused.gcrn_fused_pallas(neigh_idx, neigh_coef, neigh_eidx, x, h, c,
-                                    wx, wh, b, edge_msg, tn=tn,
-                                    interpret=_interpret())
+    n = neigh_idx.shape[0]
+    n2 = _pad_rows(n, tn)
+    h_new, c_new = _fused.gcrn_fused_pallas(
+        _pad_to(neigh_idx, n2, 0), _pad_to(neigh_coef, n2, 0),
+        _pad_to(neigh_eidx, n2, 0), x, h, _pad_to(c, n2, 0),
+        wx, wh, b, edge_msg, tn=tn, interpret=_interpret())
+    return h_new[:n], c_new[:n]
 
 
 def stacked_fused_step(neigh_idx, neigh_coef, neigh_eidx, x, h, w_gcn, b_gcn,
@@ -63,6 +86,81 @@ def stacked_fused_step(neigh_idx, neigh_coef, neigh_eidx, x, h, w_gcn, b_gcn,
     if force_ref:
         return _ref.stacked_fused_step(neigh_idx, neigh_coef, neigh_eidx, x, h,
                                        w_gcn, b_gcn, wx, wh, b, edge_msg)
-    return _fused.stacked_fused_pallas(neigh_idx, neigh_coef, neigh_eidx, x, h,
-                                       w_gcn, b_gcn, wx, wh, b, edge_msg,
-                                       tn=tn, interpret=_interpret())
+    n = neigh_idx.shape[0]
+    n2 = _pad_rows(n, tn)
+    out = _fused.stacked_fused_pallas(
+        _pad_to(neigh_idx, n2, 0), _pad_to(neigh_coef, n2, 0),
+        _pad_to(neigh_eidx, n2, 0), x, _pad_to(h, n2, 0),
+        w_gcn, b_gcn, wx, wh, b, edge_msg, tn=tn, interpret=_interpret())
+    return out[:n]
+
+
+# ------------------------------------------------------------ V3 stream ----
+
+def _pad_stream(neigh_idx, neigh_coef, neigh_eidx, node_feat, renumber,
+                node_mask, tn: int):
+    """Auto-pad the node axis (axis 1) of a (T, n, ...) snapshot stream."""
+    n = neigh_idx.shape[1]
+    n2 = _pad_rows(n, tn)
+    return (n,
+            _pad_to(neigh_idx, n2, 1), _pad_to(neigh_coef, n2, 1),
+            _pad_to(neigh_eidx, n2, 1), _pad_to(node_feat, n2, 1),
+            _pad_to(renumber, n2, 1, fill=-1), _pad_to(node_mask, n2, 1))
+
+
+def _stream_index_tables(renumber, neigh_idx, n_global: int):
+    """Precompute the kernel's global-id tables from the renumber stream.
+
+    ``neigh_gidx``: global id of each ELL lane's source node (safe 0 where
+    the lane is padding — its coef is 0). ``row_gidx``: global row of each
+    local node, ``n_global`` (the drop sentinel) on padding rows.
+    """
+    ren_safe = jnp.where(renumber >= 0, renumber, 0).astype(jnp.int32)
+    T = neigh_idx.shape[0]
+    neigh_gidx = jnp.take_along_axis(
+        ren_safe, neigh_idx.reshape(T, -1), axis=1).reshape(neigh_idx.shape)
+    row_gidx = jnp.where(renumber >= 0, renumber, n_global).astype(jnp.int32)
+    return neigh_gidx.astype(jnp.int32), row_gidx
+
+
+def dgnn_stream_steps(neigh_idx, neigh_coef, neigh_eidx, node_feat, renumber,
+                      node_mask, h0, c0, wx, wh, b, edge_msg=None, *,
+                      tn: int = 128, force_ref: bool = False):
+    """Time-fused GCRN stream (V3): T snapshots through one kernel launch.
+
+    The h/c global stores cross HBM exactly once per stream instead of once
+    per step. Returns (per-step h (T, n, H), final h store, final c store).
+    """
+    if force_ref:
+        return _ref.gcrn_stream_ref(neigh_idx, neigh_coef, neigh_eidx,
+                                    node_feat, renumber, node_mask, h0, c0,
+                                    wx, wh, b, edge_msg)
+    n, idx, coef, eidx, x, ren, mask = _pad_stream(
+        neigh_idx, neigh_coef, neigh_eidx, node_feat, renumber, node_mask, tn)
+    gidx, rowg = _stream_index_tables(ren, idx, h0.shape[0])
+    outs, hT, cT = _stream.gcrn_stream_pallas(
+        idx, gidx, coef, eidx, x, rowg, mask, h0, c0, wx, wh, b, edge_msg,
+        tn=tn, interpret=_interpret())
+    return outs[:, :n], hT, cT
+
+
+def stacked_stream_steps(neigh_idx, neigh_coef, neigh_eidx, node_feat,
+                         renumber, node_mask, h0, w_gcn, b_gcn, wx, wh, b,
+                         edge_msg=None, *, tn: int = 128,
+                         force_ref: bool = False):
+    """Time-fused stacked stream (V3): last GCN layer + GRU for T snapshots
+    in one kernel launch, h store VMEM-resident throughout.
+
+    Returns (per-step h (T, n, H), final h store).
+    """
+    if force_ref:
+        return _ref.stacked_stream_ref(neigh_idx, neigh_coef, neigh_eidx,
+                                       node_feat, renumber, node_mask, h0,
+                                       w_gcn, b_gcn, wx, wh, b, edge_msg)
+    n, idx, coef, eidx, x, ren, mask = _pad_stream(
+        neigh_idx, neigh_coef, neigh_eidx, node_feat, renumber, node_mask, tn)
+    _, rowg = _stream_index_tables(ren, idx, h0.shape[0])
+    outs, hT = _stream.stacked_stream_pallas(
+        idx, coef, eidx, x, rowg, mask, h0, w_gcn, b_gcn, wx, wh, b, edge_msg,
+        tn=tn, interpret=_interpret())
+    return outs[:, :n], hT

@@ -61,3 +61,67 @@ def stacked_fused_step(neigh_idx, neigh_coef, neigh_eidx, x, h,
     agg = ell_spmm(neigh_idx, neigh_coef, neigh_eidx, x, edge_msg)
     nt = agg @ w_gcn + b_gcn
     return fused_gru(nt, h, wx, wh, b)
+
+
+# ---------------------------------------------------------------- V3 ----
+# Stream oracles: the per-step V2 math plus the renumber-table-guided
+# gather/scatter against the global node-state store, scanned over T.
+# Ground truth for the time-fused stream kernels (stream_fused.py), whose
+# only difference is that the store never leaves VMEM between steps.
+
+def _gather_rows(store, renumber, mask):
+    safe = jnp.where(renumber >= 0, renumber, 0)
+    return jnp.take(store, safe, axis=0) * mask[:, None]
+
+
+def _scatter_rows(store, renumber, val):
+    idx = jnp.where(renumber >= 0, renumber, store.shape[0])
+    return store.at[idx].set(val, mode="drop")
+
+
+def gcrn_stream_ref(neigh_idx, neigh_coef, neigh_eidx, node_feat, renumber,
+                    node_mask, h0, c0, wx, wh, b, edge_msg=None):
+    """GCRN stream: (T, n, ...) snapshot arrays, (n_global, H) state stores.
+
+    Returns (per-step h outputs (T, n, H), final h store, final c store).
+    """
+    xs = dict(idx=neigh_idx, coef=neigh_coef, eidx=neigh_eidx, x=node_feat,
+              ren=renumber, mask=node_mask)
+    if edge_msg is not None:
+        xs["em"] = edge_msg
+
+    def body(carry, s):
+        h_store, c_store = carry
+        h = _gather_rows(h_store, s["ren"], s["mask"])
+        c = _gather_rows(c_store, s["ren"], s["mask"])
+        h_new, c_new = dgnn_fused_step(s["idx"], s["coef"], s["eidx"], s["x"],
+                                       h, c, wx, wh, b, s.get("em"))
+        m = s["mask"][:, None]
+        h_new, c_new = h_new * m, c_new * m
+        return (_scatter_rows(h_store, s["ren"], h_new),
+                _scatter_rows(c_store, s["ren"], c_new)), h_new
+
+    (hT, cT), outs = jax.lax.scan(body, (h0, c0), xs)
+    return outs, hT, cT
+
+
+def stacked_stream_ref(neigh_idx, neigh_coef, neigh_eidx, node_feat, renumber,
+                       node_mask, h0, w_gcn, b_gcn, wx, wh, b, edge_msg=None):
+    """Stacked stream: last GCN layer + GRU per step over the global h store.
+
+    Returns (per-step h outputs (T, n, H), final h store).
+    """
+    xs = dict(idx=neigh_idx, coef=neigh_coef, eidx=neigh_eidx, x=node_feat,
+              ren=renumber, mask=node_mask)
+    if edge_msg is not None:
+        xs["em"] = edge_msg
+
+    def body(h_store, s):
+        h = _gather_rows(h_store, s["ren"], s["mask"])
+        h_new = stacked_fused_step(s["idx"], s["coef"], s["eidx"], s["x"], h,
+                                   w_gcn, b_gcn, wx, wh, b, s.get("em"))
+        h_new = h_new * s["mask"][:, None]
+        return _scatter_rows(h_store, s["ren"], h_new), h_new
+
+    hT, outs = jax.lax.scan(body, h0, xs)
+    return outs, hT

@@ -1,0 +1,299 @@
+"""DGNN-Booster V3 time-fused stream kernels: BRAM-resident recurrent state.
+
+The V2 kernels (dgnn_fused.py) fuse MP+NT+RNN *within* one snapshot but are
+re-invoked per time step from a scan, so the recurrent node-state store
+(h, and c for GCRN) round-trips HBM T times per stream — exactly the DRAM
+traffic the paper's BRAM+FIFO design eliminates. Here the WHOLE snapshot
+stream runs inside a single ``pallas_call`` with grid ``(T, n_pad // tn)``:
+
+  * each step's ELL tiles (neigh_idx / neigh_coef / neigh_eidx / node_feat /
+    renumber rows / node_mask) stream along the leading T grid axis via
+    their BlockSpec index maps (the paper's snapshot DMA),
+  * the global node-state store lives in VMEM **scratch** and never leaves
+    the chip between snapshots — the TPU edition of the paper's BRAM-
+    resident embeddings; the renumber-table-guided DRAM fetch/writeback
+    becomes a VMEM-internal gather/scatter.
+
+Because step t+1's aggregation reads h produced by step t, the T axis is
+sequential (``dimension_semantics`` marks both axes "arbitrary"). The GCRN
+variant aggregates over *neighbours'* h, so within a step every tile must
+see the t-1 store while tiles write the t store: a VMEM ping-pong pair
+(read h[t-1] from one buffer, write h[t] into the other, swapped by t's
+parity) — the V1 ping-pong carry of core/dataflow.py pushed down into the
+kernel. c (GCRN) and h (stacked GRU) are touched only at a node's own row,
+each row owned by exactly one tile per step (renumbering is injective), so
+a single buffer suffices for them.
+
+Correctness contract: identical math to the per-step V2 path + the models'
+gather/scatter, verified against kernels/ref.py stream oracles and the
+mode-equivalence tests (v3 ≡ baseline).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# per-tile ELL aggregation over a step-resident feature table (local ids):
+# shared with the per-step V2 kernels, same math by construction.
+from repro.kernels.dgnn_fused import _agg as _agg_local
+from repro.kernels.dgnn_fused import _agg_edge as _agg_local_edge
+
+
+def _agg_store(gidx, coef, store):
+    """ELL aggregation straight out of the global VMEM store (global ids).
+
+    Lanes with coef != 0 always reference real (renumbered) nodes, so the
+    store row equals the masked local h the per-step path would gather;
+    coef-0 padding lanes are killed regardless of the row they point at.
+    """
+    tn, k = gidx.shape
+    g = jnp.take(store, gidx.reshape(-1), axis=0).reshape(tn, k, store.shape[1])
+    return (g * coef[..., None]).sum(axis=1)
+
+
+def _last_step(t_axis: int = 0, j_axis: int = 1):
+    t = pl.program_id(t_axis)
+    j = pl.program_id(j_axis)
+    return jnp.logical_and(t == pl.num_programs(t_axis) - 1,
+                           j == pl.num_programs(j_axis) - 1)
+
+
+def _gcrn_stream_kernel(has_edge,
+                        idx_ref, gidx_ref, coef_ref, eidx_ref, x_ref,
+                        rowg_ref, mask_ref, h0_ref, c0_ref,
+                        wx_ref, wh_ref, b_ref, emsg_ref,
+                        out_ref, hT_ref, cT_ref,
+                        ha_ref, hb_ref, c_ref):
+    t, j = pl.program_id(0), pl.program_id(1)
+    n_global = h0_ref.shape[0]
+    even = (t % 2) == 0  # state after step t-1 lives in A on even t
+
+    @pl.when(jnp.logical_and(t == 0, j == 0))
+    def _init():
+        ha_ref[...] = h0_ref[...]
+        c_ref[...] = c0_ref[...]
+
+    # copy-forward at the start of each step so rows this snapshot does not
+    # touch carry over; tiles then overwrite only their own rows.
+    @pl.when(jnp.logical_and(j == 0, even))
+    def _fwd_ab():
+        hb_ref[...] = ha_ref[...]
+
+    @pl.when(jnp.logical_and(j == 0, jnp.logical_not(even)))
+    def _fwd_ba():
+        ha_ref[...] = hb_ref[...]
+
+    idx, gidx = idx_ref[0], gidx_ref[0]
+    coef, eidx = coef_ref[0], eidx_ref[0]
+    x = x_ref[0]
+    rowg = rowg_ref[0]
+    mask = mask_ref[0][:, None]
+
+    h_prev = jnp.where(even, ha_ref[...], hb_ref[...])  # untouched t-1 slot
+    if has_edge:
+        agg_x = _agg_local_edge(idx, coef, eidx, x, emsg_ref[0])
+    else:
+        agg_x = _agg_local(idx, coef, x)
+    agg_h = _agg_store(gidx, coef, h_prev)
+
+    gates = agg_x @ wx_ref[...] + agg_h @ wh_ref[...] + b_ref[...][None, :]
+    hdim = h_prev.shape[1]
+    i = gates[:, :hdim]
+    f = gates[:, hdim:2 * hdim]
+    g = gates[:, 2 * hdim:3 * hdim]
+    o = gates[:, 3 * hdim:]
+
+    row_safe = jnp.where(rowg < n_global, rowg, 0)
+    c_old = jnp.take(c_ref[...], row_safe, axis=0) * mask
+    c_new = (jax.nn.sigmoid(f) * c_old + jax.nn.sigmoid(i) * jnp.tanh(g)) * mask
+    h_new = (jax.nn.sigmoid(o) * jnp.tanh(c_new)) * mask
+
+    # scatter back into the write slot; rowg == n_global marks padding rows
+    # (the sink convention) and mode="drop" discards them.
+    @pl.when(even)
+    def _wr_b():
+        hb_ref[...] = hb_ref[...].at[rowg].set(h_new, mode="drop")
+
+    @pl.when(jnp.logical_not(even))
+    def _wr_a():
+        ha_ref[...] = ha_ref[...].at[rowg].set(h_new, mode="drop")
+
+    c_ref[...] = c_ref[...].at[rowg].set(c_new, mode="drop")
+    out_ref[0] = h_new
+
+    @pl.when(_last_step())
+    def _drain():
+        hT_ref[...] = jnp.where(even, hb_ref[...], ha_ref[...])
+        cT_ref[...] = c_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("tn", "interpret"))
+def gcrn_stream_pallas(neigh_idx, neigh_gidx, neigh_coef, neigh_eidx,
+                       node_feat, row_gidx, node_mask, h0, c0, wx, wh, b,
+                       edge_msg=None, *, tn: int = 128,
+                       interpret: bool = False):
+    """Whole-stream GCRN (GC-LSTM): T snapshots in one pallas_call.
+
+    Shapes: neigh_* (T, n, k); node_feat (T, n, din); row_gidx/node_mask
+    (T, n); h0/c0 (n_global, hdim) — the global state store, entering and
+    leaving the chip exactly once per stream.
+    """
+    T, n, k = neigh_idx.shape
+    din, hdim = node_feat.shape[2], h0.shape[1]
+    n_global = h0.shape[0]
+    assert n % tn == 0
+    grid = (T, n // tn)
+    tile = lambda t, j: (t, j, 0)
+    step = lambda t, j: (t, 0, 0)
+    row = lambda t, j: (t, j)
+    res2 = lambda t, j: (0, 0)
+    res1 = lambda t, j: (0,)
+    has_edge = edge_msg is not None
+    if not has_edge:
+        edge_msg = jnp.zeros((T, 8, din), node_feat.dtype)
+    e = edge_msg.shape[1]
+    return pl.pallas_call(
+        functools.partial(_gcrn_stream_kernel, has_edge),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tn, k), tile),       # neigh_idx (local)
+            pl.BlockSpec((1, tn, k), tile),       # neigh_gidx (global)
+            pl.BlockSpec((1, tn, k), tile),       # neigh_coef
+            pl.BlockSpec((1, tn, k), tile),       # neigh_eidx
+            pl.BlockSpec((1, n, din), step),      # node_feat, streamed per t
+            pl.BlockSpec((1, tn), row),           # row_gidx
+            pl.BlockSpec((1, tn), row),           # node_mask
+            pl.BlockSpec((n_global, hdim), res2),  # h0 (loaded once)
+            pl.BlockSpec((n_global, hdim), res2),  # c0 (loaded once)
+            pl.BlockSpec((din, 4 * hdim), res2),
+            pl.BlockSpec((hdim, 4 * hdim), res2),
+            pl.BlockSpec((4 * hdim,), res1),
+            pl.BlockSpec((1, e, din), step),      # edge messages, per t
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tn, hdim), tile),        # per-step h outputs
+            pl.BlockSpec((n_global, hdim), res2),     # final h store
+            pl.BlockSpec((n_global, hdim), res2),     # final c store
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, n, hdim), node_feat.dtype),
+            jax.ShapeDtypeStruct((n_global, hdim), h0.dtype),
+            jax.ShapeDtypeStruct((n_global, hdim), c0.dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((n_global, hdim), h0.dtype),   # h ping
+            pltpu.VMEM((n_global, hdim), h0.dtype),   # h pong
+            pltpu.VMEM((n_global, hdim), c0.dtype),   # c (single buffer)
+        ],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(neigh_idx, neigh_gidx, neigh_coef, neigh_eidx, node_feat,
+      row_gidx, node_mask, h0, c0, wx, wh, b, edge_msg)
+
+
+def _stacked_stream_kernel(has_edge,
+                           idx_ref, coef_ref, eidx_ref, x_ref,
+                           rowg_ref, mask_ref, h0_ref,
+                           wg_ref, bg_ref, wx_ref, wh_ref, b_ref, emsg_ref,
+                           out_ref, hT_ref, hs_ref):
+    t, j = pl.program_id(0), pl.program_id(1)
+    n_global = h0_ref.shape[0]
+
+    @pl.when(jnp.logical_and(t == 0, j == 0))
+    def _init():
+        hs_ref[...] = h0_ref[...]
+
+    idx, coef, eidx = idx_ref[0], coef_ref[0], eidx_ref[0]
+    x = x_ref[0]
+    rowg = rowg_ref[0]
+    mask = mask_ref[0][:, None]
+
+    if has_edge:
+        agg = _agg_local_edge(idx, coef, eidx, x, emsg_ref[0])
+    else:
+        agg = _agg_local(idx, coef, x)
+    nt = agg @ wg_ref[...] + bg_ref[...][None, :]
+
+    # the GRU only reads a node's own h row, each row written by exactly one
+    # tile per step, so no ping-pong is needed here.
+    row_safe = jnp.where(rowg < n_global, rowg, 0)
+    h_old = jnp.take(hs_ref[...], row_safe, axis=0) * mask
+
+    gx = nt @ wx_ref[...] + b_ref[...][None, :]
+    gh = h_old @ wh_ref[...]
+    hdim = h_old.shape[1]
+    rx, zx, nx = gx[:, :hdim], gx[:, hdim:2 * hdim], gx[:, 2 * hdim:]
+    rh, zh, nh = gh[:, :hdim], gh[:, hdim:2 * hdim], gh[:, 2 * hdim:]
+    r = jax.nn.sigmoid(rx + rh)
+    z = jax.nn.sigmoid(zx + zh)
+    nn = jnp.tanh(nx + r * nh)
+    h_new = ((1.0 - z) * nn + z * h_old) * mask
+
+    hs_ref[...] = hs_ref[...].at[rowg].set(h_new, mode="drop")
+    out_ref[0] = h_new
+
+    @pl.when(_last_step())
+    def _drain():
+        hT_ref[...] = hs_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("tn", "interpret"))
+def stacked_stream_pallas(neigh_idx, neigh_coef, neigh_eidx, node_feat,
+                          row_gidx, node_mask, h0, w_gcn, b_gcn, wx, wh, b,
+                          edge_msg=None, *, tn: int = 128,
+                          interpret: bool = False):
+    """Whole-stream stacked DGNN (GCN last layer -> GRU) in one pallas_call."""
+    T, n, k = neigh_idx.shape
+    din, hdim = node_feat.shape[2], h0.shape[1]
+    dmid = w_gcn.shape[1]
+    n_global = h0.shape[0]
+    assert n % tn == 0
+    grid = (T, n // tn)
+    tile = lambda t, j: (t, j, 0)
+    step = lambda t, j: (t, 0, 0)
+    row = lambda t, j: (t, j)
+    res2 = lambda t, j: (0, 0)
+    res1 = lambda t, j: (0,)
+    has_edge = edge_msg is not None
+    if not has_edge:
+        edge_msg = jnp.zeros((T, 8, din), node_feat.dtype)
+    e = edge_msg.shape[1]
+    return pl.pallas_call(
+        functools.partial(_stacked_stream_kernel, has_edge),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tn, k), tile),
+            pl.BlockSpec((1, tn, k), tile),
+            pl.BlockSpec((1, tn, k), tile),
+            pl.BlockSpec((1, n, din), step),
+            pl.BlockSpec((1, tn), row),
+            pl.BlockSpec((1, tn), row),
+            pl.BlockSpec((n_global, hdim), res2),
+            pl.BlockSpec((din, dmid), res2),
+            pl.BlockSpec((dmid,), res1),
+            pl.BlockSpec((dmid, 3 * hdim), res2),
+            pl.BlockSpec((hdim, 3 * hdim), res2),
+            pl.BlockSpec((3 * hdim,), res1),
+            pl.BlockSpec((1, e, din), step),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tn, hdim), tile),
+            pl.BlockSpec((n_global, hdim), res2),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, n, hdim), node_feat.dtype),
+            jax.ShapeDtypeStruct((n_global, hdim), h0.dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((n_global, hdim), h0.dtype),
+        ],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(neigh_idx, neigh_coef, neigh_eidx, node_feat, row_gidx, node_mask,
+      h0, w_gcn, b_gcn, wx, wh, b, edge_msg)

@@ -32,7 +32,8 @@ from repro.launch import steps as S
 from repro.launch.mesh import make_production_mesh
 from repro.models import RuntimeConfig
 from repro.optim import AdamWConfig
-from repro.roofline import Roofline, collective_bytes, model_flops
+from repro.roofline import (Roofline, collective_bytes, cost_analysis_dict,
+                            model_flops)
 from repro.roofline.corrections import total_corrections
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results", "dryrun")
@@ -114,7 +115,7 @@ def _compile_once(cfg, shape, rt, opt_cfg, rules, mesh):
 
 
 def _measure(compiled) -> dict:
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis_dict(compiled)
     coll = collective_bytes(compiled.as_text())
     return {
         "flops": float(ca.get("flops", 0.0)),

@@ -5,10 +5,11 @@ from repro.roofline.analysis import (
     CollectiveStats,
     Roofline,
     collective_bytes,
+    cost_analysis_dict,
     model_flops,
 )
 
 __all__ = [
     "HBM_BW", "ICI_BW", "PEAK_FLOPS", "CollectiveStats", "Roofline",
-    "collective_bytes", "model_flops",
+    "collective_bytes", "cost_analysis_dict", "model_flops",
 ]

@@ -40,6 +40,20 @@ _INSTR_RE = re.compile(
 _OPERAND_RE = re.compile(r"%([\w\.\-]+)")
 
 
+def cost_analysis_dict(compiled) -> dict:
+    """Normalize ``compiled.cost_analysis()`` across jax versions.
+
+    Older jaxlibs return a one-element list of per-program dicts; newer
+    ones return the dict directly. Indexing the list with a string key is
+    the seed's ``TypeError: list indices must be integers`` dry-run
+    failure (tests/test_multidevice.py::test_mini_dryrun_8dev_mesh).
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
 def _type_bytes(type_str: str) -> int:
     total = 0
     for m in _SHAPE_RE.finditer(type_str):

@@ -9,6 +9,18 @@ Implements the §IV-D task-scheduling scheme:
     graph loading overlaps inference (the paper's GL/GNN overlap, host
     edition — the in-graph edition is the V1 ping-pong carry).
 
+Bucketed padding: with ``buckets`` set, each snapshot is padded into the
+smallest bucket that fits (graph/padding.choose_bucket) instead of the
+worst-case shape — small snapshots stop paying big-snapshot compute. The
+jit cache holds one compiled step per bucket.
+
+V3 fast path: when the engine runs the time-fused stream dataflow
+(mode="v3" and the model exposes ``step_stream``), consecutive same-bucket
+snapshots are batched into fixed-T chunks (tail padded with no-op empty
+snapshots) and the WHOLE chunk is handed to the stream kernel in one
+launch, so the recurrent state crosses HBM once per chunk, not per
+snapshot.
+
 Also hosts the batched-streams production mode: many independent dynamic
 graphs served concurrently, streams sharded over (pod, data).
 """
@@ -24,10 +36,15 @@ import jax
 import numpy as np
 
 from repro.configs.dgnn import DGNNConfig
-from repro.core.dataflow import build_model
+from repro.core.dataflow import build_model, stack_time
 from repro.graph.coo import COOSnapshot
 from repro.graph.csr import max_in_degree, renumber_and_normalize
-from repro.graph.padding import PaddedSnapshot, pad_snapshot
+from repro.graph.padding import (
+    PaddedSnapshot,
+    choose_bucket,
+    empty_like_padded,
+    pad_snapshot,
+)
 
 
 @dataclass
@@ -47,15 +64,21 @@ class SnapshotServer:
     def __init__(self, cfg: DGNNConfig, feat_table: np.ndarray,
                  n_global: int, mode: Optional[str] = None,
                  n_pad: int = 640, e_pad: int = 4096, k_max: int = 64,
-                 queue_depth: int = 2):
+                 queue_depth: int = 2,
+                 buckets: Optional[tuple] = None,
+                 stream_chunk: int = 8):
         self.cfg = cfg
         self.mode = mode or cfg.dataflow
         self.model = build_model(cfg, n_global=n_global)
         self.feat_table = feat_table
         self.n_pad, self.e_pad, self.k_max = n_pad, e_pad, k_max
+        self.buckets = buckets  # ((n_pad, e_pad, k_max), ...) smallest-first
+        self.stream_chunk = stream_chunk
         self.queue_depth = queue_depth  # 2 == ping-pong buffers
         self._step = jax.jit(
             lambda p, s, snap: self.model.step(p, s, snap, mode=self.mode))
+        self._stream_step = jax.jit(
+            lambda p, s, sT: self.model.step_stream(p, s, sT))
 
     def init(self, rng):
         params = self.model.init(rng)
@@ -65,12 +88,48 @@ class SnapshotServer:
     # ------------------------------------------------------ host thread ----
 
     def _preprocess(self, snap: COOSnapshot) -> PaddedSnapshot:
-        # fixed bucket: shapes must be static so the jitted step never
-        # recompiles (the "snapshot fits in BRAM" contract; overflow = the
-        # bucket chooser picked wrong and should raise)
+        # shapes must be static so the jitted step never recompiles (the
+        # "snapshot fits in BRAM" contract; overflow = the bucket chooser
+        # picked wrong and should raise). With ``buckets`` the shapes are
+        # static PER BUCKET: one compiled step per bucket in the jit cache.
         ls = renumber_and_normalize(snap)
-        return pad_snapshot(ls, self.feat_table, self.n_pad, self.e_pad,
-                            self.k_max)
+        if self.buckets is not None:
+            n_pad, e_pad, k_max = choose_bucket(
+                ls.n_nodes, ls.src.shape[0], max_in_degree(ls), self.buckets)
+        else:
+            n_pad, e_pad, k_max = self.n_pad, self.e_pad, self.k_max
+        return pad_snapshot(ls, self.feat_table, n_pad, e_pad, k_max)
+
+    # ------------------------------------------------------ device loop ----
+
+    def _use_stream(self) -> bool:
+        return self.mode == "v3" and hasattr(self.model, "step_stream")
+
+    def _run_chunk(self, params, state, chunk: list, outs: list, lat: list):
+        """Feed one same-bucket chunk to the time-fused stream kernel.
+
+        Short flushes (tail of the stream, or a bucket change on a
+        bucket-alternating stream) pad T up to the next power of two, not
+        all the way to ``stream_chunk`` — at most 2× no-op steps while the
+        jit cache stays bounded at log2(stream_chunk)+1 chunk lengths per
+        bucket.
+        """
+        real = len(chunk)
+        target = 1
+        while target < real:
+            target *= 2
+        target = min(target, self.stream_chunk)
+        while len(chunk) < target:  # no-op tail padding
+            chunk.append(empty_like_padded(chunk[0]))
+        t0 = time.perf_counter()
+        state, out_T = self._stream_step(params, state, stack_time(chunk))
+        jax.block_until_ready(out_T)
+        dt = (time.perf_counter() - t0) * 1e3 / real
+        out_np = np.asarray(out_T)
+        for t in range(real):
+            outs.append(out_np[t])
+            lat.append(dt)
+        return state
 
     def run(self, params, state, snaps: Iterable[COOSnapshot]) -> tuple:
         """Returns (final_state, outputs list, ServeStats)."""
@@ -78,26 +137,47 @@ class SnapshotServer:
         pre_ms: list = []
 
         def producer():
-            for s in snaps:
-                t0 = time.perf_counter()
-                ps = self._preprocess(s)
-                pre_ms.append((time.perf_counter() - t0) * 1e3)
-                q.put(ps)
-            q.put(None)
+            try:
+                for s in snaps:
+                    t0 = time.perf_counter()
+                    ps = self._preprocess(s)
+                    pre_ms.append((time.perf_counter() - t0) * 1e3)
+                    q.put(ps)
+                q.put(None)
+            except BaseException as exc:  # propagate, don't hang the consumer
+                q.put(exc)
 
         th = threading.Thread(target=producer, daemon=True)
         t_start = time.perf_counter()
         th.start()
         outs, lat = [], []
+        use_stream = self._use_stream()
+        chunk: list = []
         while True:
             ps = q.get()
             if ps is None:
                 break
-            t0 = time.perf_counter()
-            state, out = self._step(params, state, ps)
-            jax.block_until_ready(out)
-            lat.append((time.perf_counter() - t0) * 1e3)
-            outs.append(np.asarray(out))
+            if isinstance(ps, BaseException):
+                th.join()
+                raise ps  # e.g. choose_bucket: no bucket fits the snapshot
+            if not use_stream:
+                t0 = time.perf_counter()
+                state, out = self._step(params, state, ps)
+                jax.block_until_ready(out)
+                lat.append((time.perf_counter() - t0) * 1e3)
+                outs.append(np.asarray(out))
+                continue
+            # v3: gather same-bucket runs into fixed-T chunks
+            bucket = (ps.n_pad, ps.e_pad, ps.k_max)
+            if chunk and (chunk[0].n_pad, chunk[0].e_pad, chunk[0].k_max) != bucket:
+                state = self._run_chunk(params, state, chunk, outs, lat)
+                chunk = []
+            chunk.append(ps)
+            if len(chunk) == self.stream_chunk:
+                state = self._run_chunk(params, state, chunk, outs, lat)
+                chunk = []
+        if chunk:
+            state = self._run_chunk(params, state, chunk, outs, lat)
         th.join()
         total = (time.perf_counter() - t_start) * 1e3
         return state, outs, ServeStats(lat, pre_ms, total)

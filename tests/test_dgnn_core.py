@@ -14,9 +14,9 @@ from repro.graph import (
 )
 
 MODES = {
-    "evolvegcn": ["baseline", "o1", "v1"],
-    "gcrn-m2": ["baseline", "o1", "v2"],
-    "stacked-gcn-gru": ["baseline", "o1", "v1", "v2"],
+    "evolvegcn": ["baseline", "o1", "v1", "v3"],   # v3 -> documented v1 fallback
+    "gcrn-m2": ["baseline", "o1", "v2", "v3"],
+    "stacked-gcn-gru": ["baseline", "o1", "v1", "v2", "v3"],
 }
 
 

@@ -4,6 +4,8 @@ import pytest
 
 from repro.configs.dgnn import BC_ALPHA, UCI
 from repro.graph import (
+    choose_bucket,
+    empty_like_padded,
     generate_temporal_graph,
     max_in_degree,
     pad_snapshot,
@@ -98,3 +100,41 @@ def test_bucket_overflow_raises(bc):
     ls = renumber_and_normalize(snaps[0])
     with pytest.raises(ValueError):
         pad_snapshot(ls, ft, ls.n_nodes - 1, 4096, 64)
+
+
+BUCKETS = ((128, 512, 32), (320, 1024, 48), (640, 4096, 96))
+
+
+def test_choose_bucket_smallest_fit():
+    assert choose_bucket(100, 400, 16, BUCKETS) == (128, 512, 32)
+    # one dimension overflowing the small bucket promotes the whole snapshot
+    assert choose_bucket(100, 400, 33, BUCKETS) == (320, 1024, 48)
+    assert choose_bucket(100, 2000, 16, BUCKETS) == (640, 4096, 96)
+
+
+def test_choose_bucket_exact_fit_boundary():
+    # <= is inclusive: a snapshot exactly at the bucket limits still fits
+    assert choose_bucket(128, 512, 32, BUCKETS) == (128, 512, 32)
+    assert choose_bucket(640, 4096, 96, BUCKETS) == (640, 4096, 96)
+    # one past the boundary promotes / raises
+    assert choose_bucket(129, 512, 32, BUCKETS) == (320, 1024, 48)
+
+
+def test_choose_bucket_no_fit_raises():
+    with pytest.raises(ValueError):
+        choose_bucket(641, 8, 8, BUCKETS)
+    with pytest.raises(ValueError):
+        choose_bucket(8, 8, 97, BUCKETS)
+
+
+def test_empty_like_padded_is_noop_snapshot(bc):
+    _, ft, snaps = bc
+    ls = renumber_and_normalize(snaps[0])
+    ps = pad_snapshot(ls, ft, 640, 4096, 64)
+    empty = empty_like_padded(ps)
+    assert empty.node_feat.shape == ps.node_feat.shape
+    assert empty.edge_feat.shape == ps.edge_feat.shape
+    assert int(empty.n_nodes) == 0
+    assert np.all(np.asarray(empty.node_mask) == 0)
+    assert np.all(np.asarray(empty.renumber) == -1)
+    assert np.all(np.asarray(empty.neigh_coef) == 0)

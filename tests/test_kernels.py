@@ -102,6 +102,146 @@ def test_stacked_fused(n, k, din, dmid, h):
     np.testing.assert_allclose(got, want, atol=2e-4)
 
 
+def _ragged_slice(n_r, idx, coef, eidx, *rest):
+    """Trim ELL arrays to a ragged (non-tile-multiple) node count."""
+    idx = jnp.clip(idx[:n_r], 0, n_r - 1)
+    return (idx, coef[:n_r], eidx[:n_r]) + tuple(a[:n_r] for a in rest)
+
+
+@pytest.mark.parametrize("n_r", [200, 130, 127])
+def test_auto_padding_ragged_n(n_r):
+    """Regression: node counts that are NOT a multiple of the node tile are
+    auto-padded (sink-row coef-0 convention) instead of asserting."""
+    n, k, din, h = 256, 8, 32, 64
+    e = 4 * n
+    idx0, coef0, eidx0 = _ell(KEY, n, k, e)
+    ks = jax.random.split(jax.random.PRNGKey(8), 7)
+    x0 = _rand(ks[0], (n, din))
+    hh0 = _rand(ks[1], (n, h))
+    cc0 = _rand(ks[2], (n, h))
+    idx, coef, eidx, x, hh, cc = _ragged_slice(n_r, idx0, coef0, eidx0,
+                                               x0, hh0, cc0)
+    em = _rand(ks[6], (e, din))
+    # ELL SpMM
+    got = ops.ell_spmm(idx, coef, eidx, x, em, tn=128)
+    want = ref.ell_spmm(idx, coef, eidx, x, em)
+    assert got.shape == (n_r, din)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+    # fused GCRN step
+    wx = _rand(ks[3], (din, 4 * h))
+    wh = _rand(ks[4], (h, 4 * h))
+    bb = _rand(ks[5], (4 * h,))
+    gh, gc = ops.dgnn_fused_step(idx, coef, eidx, x, hh, cc, wx, wh, bb,
+                                 tn=128)
+    wh_, wc_ = ref.dgnn_fused_step(idx, coef, eidx, x, hh, cc, wx, wh, bb)
+    assert gh.shape == (n_r, h)
+    np.testing.assert_allclose(gh, wh_, atol=2e-4)
+    np.testing.assert_allclose(gc, wc_, atol=2e-4)
+    # fused stacked step
+    wg = _rand(ks[2], (din, 48))
+    bg = _rand(ks[3], (48,))
+    wx2 = _rand(ks[4], (48, 3 * h))
+    wh2 = _rand(ks[5], (h, 3 * h))
+    b2 = _rand(ks[6], (3 * h,))
+    got2 = ops.stacked_fused_step(idx, coef, eidx, x, hh, wg, bg, wx2, wh2,
+                                  b2, tn=128)
+    want2 = ref.stacked_fused_step(idx, coef, eidx, x, hh, wg, bg, wx2, wh2, b2)
+    assert got2.shape == (n_r, h)
+    np.testing.assert_allclose(got2, want2, atol=2e-4)
+
+
+def _stream(key, T, n, k, e, din, n_global):
+    """Random (T, ...) snapshot stream with valid renumber tables: lanes
+    with nonzero coef reference real (masked-in) local nodes, matching the
+    to_ell contract the kernels assume."""
+    rng = np.random.default_rng(int(jax.random.randint(key, (), 0, 2**31 - 1)))
+    arrs = {k_: [] for k_ in ("idx", "coef", "eidx", "x", "ren", "mask")}
+    for _ in range(T):
+        nr = int(rng.integers(max(n // 3, 1), n + 1))
+        idx = rng.integers(0, nr, (n, k)).astype(np.int32)
+        coef = (rng.uniform(size=(n, k)) *
+                (rng.uniform(size=(n, k)) > 0.4)).astype(np.float32)
+        coef[nr:] = 0.0
+        x = rng.normal(size=(n, din)).astype(np.float32)
+        x[nr:] = 0.0
+        ren = np.full(n, -1, np.int32)
+        ren[:nr] = rng.permutation(n_global)[:nr]
+        mask = np.zeros(n, np.float32)
+        mask[:nr] = 1.0
+        for k_, v in zip(("idx", "coef", "eidx", "x", "ren", "mask"),
+                         (idx, coef, rng.integers(0, e, (n, k)).astype(np.int32),
+                          x, ren, mask)):
+            arrs[k_].append(v)
+    return tuple(np.stack(arrs[k_]) for k_ in ("idx", "coef", "eidx", "x",
+                                               "ren", "mask"))
+
+
+@pytest.mark.parametrize("T,n,k,din,h", [(4, 128, 8, 32, 64), (6, 256, 16, 64, 128)])
+@pytest.mark.parametrize("edge", [False, True])
+def test_gcrn_stream_kernel(T, n, k, din, h, edge):
+    """Time-fused V3 stream kernel == per-step scan oracle (GCRN)."""
+    e, G = 4 * n, 2 * n + 17
+    idx, coef, eidx, x, ren, mask = _stream(jax.random.PRNGKey(11), T, n, k,
+                                            e, din, G)
+    ks = jax.random.split(jax.random.PRNGKey(12), 6)
+    wx = _rand(ks[0], (din, 4 * h)) * 0.2
+    wh = _rand(ks[1], (h, 4 * h)) * 0.2
+    bb = _rand(ks[2], (4 * h,)) * 0.1
+    h0 = _rand(ks[3], (G, h)) * 0.5
+    c0 = _rand(ks[4], (G, h)) * 0.5
+    em = _rand(ks[5], (T, e, din)) if edge else None
+    got = ops.dgnn_stream_steps(idx, coef, eidx, x, ren, mask, h0, c0,
+                                wx, wh, bb, em, tn=128)
+    want = ref.gcrn_stream_ref(idx, coef, eidx, x, ren, mask, h0, c0,
+                               wx, wh, bb, em)
+    for g, w, nm in zip(got, want, ("outs", "h_final", "c_final")):
+        np.testing.assert_allclose(g, w, atol=2e-4, err_msg=nm)
+
+
+@pytest.mark.parametrize("T,n,k,din,dmid,h", [(5, 128, 8, 32, 48, 64)])
+@pytest.mark.parametrize("edge", [False, True])
+def test_stacked_stream_kernel(T, n, k, din, dmid, h, edge):
+    """Time-fused V3 stream kernel == per-step scan oracle (stacked)."""
+    e, G = 4 * n, 2 * n + 5
+    idx, coef, eidx, x, ren, mask = _stream(jax.random.PRNGKey(13), T, n, k,
+                                            e, din, G)
+    ks = jax.random.split(jax.random.PRNGKey(14), 7)
+    wg = _rand(ks[0], (din, dmid)) * 0.2
+    bg = _rand(ks[1], (dmid,)) * 0.1
+    wx = _rand(ks[2], (dmid, 3 * h)) * 0.2
+    wh = _rand(ks[3], (h, 3 * h)) * 0.2
+    bb = _rand(ks[4], (3 * h,)) * 0.1
+    h0 = _rand(ks[5], (G, h)) * 0.5
+    em = _rand(ks[6], (T, e, din)) if edge else None
+    got = ops.stacked_stream_steps(idx, coef, eidx, x, ren, mask, h0,
+                                   wg, bg, wx, wh, bb, em, tn=128)
+    want = ref.stacked_stream_ref(idx, coef, eidx, x, ren, mask, h0,
+                                  wg, bg, wx, wh, bb, em)
+    for g, w, nm in zip(got, want, ("outs", "h_final")):
+        np.testing.assert_allclose(g, w, atol=2e-4, err_msg=nm)
+
+
+def test_stream_kernel_ragged_n():
+    """V3 auto-pads a node count that is not a tile multiple."""
+    T, n, k, din, h = 4, 200, 8, 32, 64
+    e, G = 4 * n, 600
+    idx, coef, eidx, x, ren, mask = _stream(jax.random.PRNGKey(15), T, n, k,
+                                            e, din, G)
+    ks = jax.random.split(jax.random.PRNGKey(16), 5)
+    wx = _rand(ks[0], (din, 4 * h)) * 0.2
+    wh = _rand(ks[1], (h, 4 * h)) * 0.2
+    bb = _rand(ks[2], (4 * h,)) * 0.1
+    h0 = _rand(ks[3], (G, h)) * 0.5
+    c0 = _rand(ks[4], (G, h)) * 0.5
+    got = ops.dgnn_stream_steps(idx, coef, eidx, x, ren, mask, h0, c0,
+                                wx, wh, bb, tn=128)
+    want = ref.gcrn_stream_ref(idx, coef, eidx, x, ren, mask, h0, c0,
+                               wx, wh, bb)
+    assert got[0].shape == (T, n, h)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, atol=2e-4)
+
+
 def test_kernel_vs_segment_sum_production_path():
     """ELL kernel == the XLA segment-sum path on a real padded snapshot."""
     from repro.configs.dgnn import UCI

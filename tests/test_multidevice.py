@@ -86,7 +86,7 @@ def test_mini_dryrun_8dev_mesh():
         from repro.launch import steps as S
         from repro.models import RuntimeConfig
         from repro.optim import AdamWConfig
-        from repro.roofline import collective_bytes
+        from repro.roofline import collective_bytes, cost_analysis_dict
         mesh = jax.make_mesh((2, 4), ('data', 'model'))
         cfg = reduce_for_smoke(ARCHS['qwen3-32b'])
         rt = RuntimeConfig(tp=4, scan_layers=False, attn_chunk=64, moe_impl='ep', loss_chunk=16)
@@ -103,7 +103,7 @@ def test_mini_dryrun_8dev_mesh():
             fn = S.make_train_step_fn(cfg, rt, opt)
             c = jax.jit(fn, in_shardings=(pshard, oshard, bshard),
                         donate_argnums=(0,1)).lower(pshapes, oshapes, bspecs).compile()
-            ca = c.cost_analysis()
+            ca = cost_analysis_dict(c)
             st = collective_bytes(c.as_text())
             assert ca['flops'] > 0
             assert st.total_bytes > 0, 'expected collectives on a 2x4 mesh'
@@ -114,7 +114,7 @@ def test_mini_dryrun_8dev_mesh():
             dfn = S.make_decode_fn(cfg, rt)
             dc = jax.jit(dfn, in_shardings=(pshard, cshard, bshard if False else tree_shardings(*S.batch_specs(cfg, dshape), mesh)),
                          donate_argnums=(1,)).lower(pshapes, cshapes, S.batch_specs(cfg, dshape)[0]).compile()
-            assert dc.cost_analysis()['flops'] > 0
+            assert cost_analysis_dict(dc)['flops'] > 0
         print('OK')
     """)
     assert "OK" in out

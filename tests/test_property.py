@@ -3,6 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional dev dependency (requirements-dev.txt); skip, don't "
+           "abort collection, when absent")
 from hypothesis import given, settings, strategies as st
 
 from repro.graph.coo import COOSnapshot, TemporalGraph, slice_snapshots
