@@ -54,6 +54,7 @@ def run() -> list[tuple[str, float, str]]:
     t2 = time_step_fn(f2, x, h, wx, wh, b)
     rows.append(("kernel/fused_gru_xla_ref", t2 * 1e3, "gates=3-in-1 matmul"))
     rows.extend(run_stream_vs_per_step())
+    rows.extend(run_batched_streams())
     return rows
 
 
@@ -114,6 +115,90 @@ def run_stream_vs_per_step(t_steps: int = 8, hidden: int = 128
                  f"state_hbm_bytes={bytes_v3},"
                  f"state_hbm_reduction={bytes_v2 // bytes_v3}x"))
     return rows
+
+
+def run_batched_streams(B: int = 8, t_steps: int = 4, n: int = 64,
+                        k: int = 8, din: int = 16, hidden: int = 32,
+                        n_global: int = 200, iters: int = 11
+                        ) -> list[tuple[str, float, str]]:
+    """Batched V3 (ONE dispatch, B streams) vs B separate V3 dispatches.
+
+    This measures what the multi-tenant server amortizes, in the regime
+    batching exists for: SMALL per-tenant snapshots whose individual
+    streams underutilize the device (the low-parallelism bottleneck of
+    arXiv:2210.03900). Without batching, B clients cost B device
+    dispatches per chunk and B short scans; with the batch grid axis they
+    cost one dispatch whose per-step work is B× wider. Streams are B
+    distinct random streams (identical inputs would let XLA CSE collapse
+    the sequential program and fake the comparison). On CPU the kernel
+    wrappers route to the pure-jnp oracle (set_force_ref) — interpret-mode
+    Pallas wall time would measure the interpreter, not the dataflow; the
+    structural numbers (dispatches B -> 1, recurrent-state HBM transfers
+    2/stream either way) carry over to the TPU build.
+    """
+    import time as _time
+
+    from repro.kernels import ops
+
+    rngs = np.random.default_rng(4)
+
+    def one_stream():
+        idx = rngs.integers(0, n, (t_steps, n, k)).astype(np.int32)
+        coef = (rngs.uniform(size=(t_steps, n, k)) *
+                (rngs.uniform(size=(t_steps, n, k)) > 0.4)).astype(np.float32)
+        eidx = rngs.integers(0, 4 * n, (t_steps, n, k)).astype(np.int32)
+        x = rngs.normal(size=(t_steps, n, din)).astype(np.float32)
+        ren = np.stack([np.sort(rngs.permutation(n_global)[:n])
+                        for _ in range(t_steps)]).astype(np.int32)
+        mask = np.ones((t_steps, n), np.float32)
+        return idx, coef, eidx, x, ren, mask
+
+    streams = [one_stream() for _ in range(B)]
+    single = [tuple(jnp.asarray(a) for a in s) for s in streams]
+    batch = tuple(jnp.asarray(np.stack([s[i] for s in streams]))
+                  for i in range(6))
+    wx = jnp.asarray(rngs.normal(size=(din, 4 * hidden)) * 0.1, jnp.float32)
+    wh = jnp.asarray(rngs.normal(size=(hidden, 4 * hidden)) * 0.1, jnp.float32)
+    b = jnp.zeros((4 * hidden,), jnp.float32)
+    h0B = jnp.asarray(rngs.normal(size=(B, n_global, hidden)) * 0.1,
+                      jnp.float32)
+    c0B = jnp.asarray(rngs.normal(size=(B, n_global, hidden)) * 0.1,
+                      jnp.float32)
+
+    on_cpu = jax.default_backend() != "tpu"
+    ops.set_force_ref(on_cpu)
+    try:
+        one = jax.jit(lambda s, hh, cc: ops.dgnn_stream_steps(
+            *s, hh, cc, wx, wh, b))
+        bat = jax.jit(lambda hB, cB: ops.dgnn_stream_steps_batched(
+            *batch, hB, cB, wx, wh, b))
+        for i in range(B):  # warmup/compile
+            jax.block_until_ready(one(single[i], h0B[i], c0B[i]))
+        jax.block_until_ready(bat(h0B, c0B))
+        ts, tb = [], []
+        for _ in range(iters):
+            t0 = _time.perf_counter()
+            outs = [one(single[i], h0B[i], c0B[i]) for i in range(B)]
+            jax.block_until_ready(outs)
+            ts.append(_time.perf_counter() - t0)
+            t0 = _time.perf_counter()
+            jax.block_until_ready(bat(h0B, c0B))
+            tb.append(_time.perf_counter() - t0)
+    finally:
+        ops.set_force_ref(False)
+    t_seq = float(np.median(ts)) * 1e3  # ms
+    t_bat = float(np.median(tb)) * 1e3  # ms
+    total_snaps = B * t_steps
+    path = "xla_ref" if on_cpu else "pallas"
+    return [
+        (f"kernel/gcrn_v3_sequential_B{B}_T{t_steps}", t_seq * 1e3,
+         f"dispatches={B},path={path},"
+         f"throughput={total_snaps / (t_seq / 1e3):.0f}_snap/s"),
+        (f"kernel/gcrn_v3_batched_B{B}_T{t_steps}", t_bat * 1e3,
+         f"dispatches=1,path={path},"
+         f"throughput={total_snaps / (t_bat / 1e3):.0f}_snap/s,"
+         f"speedup_vs_sequential={t_seq / t_bat:.2f}x"),
+    ]
 
 
 if __name__ == "__main__":

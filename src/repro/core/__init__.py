@@ -1,10 +1,16 @@
 """The paper's primary contribution: DGNN dataflow engines + base models."""
-from repro.core.dataflow import build_model, run_batched, run_stream, stack_time
+from repro.core.dataflow import (
+    build_model,
+    init_states_batched,
+    run_batched,
+    run_stream,
+    stack_time,
+)
 from repro.core.evolvegcn import EvolveGCN
 from repro.core.gcrn import GCRN
 from repro.core.stacked import StackedDGNN
 
 __all__ = [
-    "build_model", "run_stream", "run_batched", "stack_time",
-    "EvolveGCN", "GCRN", "StackedDGNN",
+    "build_model", "run_stream", "run_batched", "init_states_batched",
+    "stack_time", "EvolveGCN", "GCRN", "StackedDGNN",
 ]

@@ -38,7 +38,9 @@ tests assert. The difference is the critical path / fusion structure, which
 shows up in the lowered HLO (benchmarks/fig6_ablation.py measures it).
 
 Snapshot streams are pytrees with a leading T axis (same padding bucket);
-multi-stream batching adds a B axis via vmap (``run_batched``).
+multi-stream batching adds a B axis (``run_batched``): v3 runs the whole
+(B, T) batch in ONE batched stream-kernel launch, other modes vmap the
+per-stream scan.
 """
 from __future__ import annotations
 
@@ -118,9 +120,29 @@ def run_batched(model: Model, params, states0, snaps_TB, mode: str = "baseline")
     """Batched independent streams: snaps arrays are (T, B, ...), states
     (B, ...). Params are shared across streams; recurrent state is not.
     This is the production throughput axis (DESIGN §4): streams shard over
-    (pod, data) and the feature dims over model."""
+    (pod, data) and the feature dims over model.
+
+    mode="v3" dispatches to the model's ``step_stream_batched`` — the batch
+    axis becomes a leading grid dimension of ONE time-fused kernel launch
+    (kernels/stream_fused.py) instead of a vmap over per-step scans, so
+    every stream's recurrent state store still crosses HBM exactly twice.
+    Models without a batched stream kernel (EvolveGCN) take the vmapped
+    per-step path, whose step() treats v3 as the v1 overlapped schedule."""
+    if mode == "v3" and hasattr(model, "step_stream_batched"):
+        snaps_BT = jax.tree.map(lambda a: jnp.swapaxes(a, 0, 1), snaps_TB)
+        state, outs_BT = model.step_stream_batched(params, states0, snaps_BT)
+        return state, jnp.swapaxes(outs_BT, 0, 1)
     fn = partial(run_stream, model, params, mode=mode)
     return jax.vmap(fn, in_axes=(0, 1), out_axes=(0, 1))(states0, snaps_TB)
+
+
+def init_states_batched(model: Model, params, n_streams: int,
+                        mode: str = "baseline"):
+    """Stack ``n_streams`` independent recurrent states along a leading B
+    axis (each stream starts from the model's fresh state)."""
+    s0 = model.init_state(params, mode=mode)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (n_streams,) + a.shape), s0)
 
 
 def stack_time(padded_snaps: list) -> Any:

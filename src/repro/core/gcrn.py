@@ -132,3 +132,24 @@ class GCRN:
         )
         out = outs_h @ params["head"]["w"] + params["head"]["b"]
         return {"h": h_T, "c": c_T}, out * snaps_T.node_mask[..., None]
+
+    def step_stream_batched(self, params: dict, state: dict,
+                            snaps_BT: PaddedSnapshot) -> tuple[dict, jax.Array]:
+        """Batched V3: B independent snapshot streams — (B, T, ...) leaves,
+        state leaves (B, n_global, H) — through ONE launch of the batched
+        time-fused kernel (weights shared, one VMEM-resident store per
+        stream). Row b of the result is bit-close to running stream b alone
+        through ``step_stream``."""
+        from repro.kernels import ops as kops
+
+        w_edge = params.get("w_edge")
+        edge_msg = snaps_BT.edge_feat @ w_edge if w_edge is not None else None
+        outs_h, h_T, c_T = kops.dgnn_stream_steps_batched(
+            snaps_BT.neigh_idx, snaps_BT.neigh_coef, snaps_BT.neigh_eidx,
+            snaps_BT.node_feat, snaps_BT.renumber, snaps_BT.node_mask,
+            state["h"], state["c"],
+            params["lstm"]["wx"], params["lstm"]["wh"], params["lstm"]["b"],
+            edge_msg,
+        )
+        out = outs_h @ params["head"]["w"] + params["head"]["b"]
+        return {"h": h_T, "c": c_T}, out * snaps_BT.node_mask[..., None]

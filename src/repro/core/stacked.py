@@ -124,3 +124,31 @@ class StackedDGNN:
             edge_msg,
         )
         return {"h": h_T}, outs_h
+
+    def step_stream_batched(self, params: dict, state: dict,
+                            snaps_BT: PaddedSnapshot) -> tuple[dict, jax.Array]:
+        """Batched V3: B independent streams — (B, T, ...) leaves, state
+        leaves (B, n_global, H) — through one launch of the batched stream
+        kernel. Pre-last GCN layers are time- AND stream-independent, so
+        they run doubly vmapped; the last layer + GRU + store
+        gather/scatter execute inside the kernel per stream."""
+        from repro.kernels import ops as kops
+
+        x = snaps_BT.node_feat
+        for p in params["gcn"][:-1]:
+            x = jax.vmap(jax.vmap(
+                lambda s, xx, p=p: G.gcn_layer(p, s, xx, impl=self.impl)
+            ))(snaps_BT, x)
+        p_last = params["gcn"][-1]
+        w_edge = params["gcn"][0].get("w_edge")
+        edge_msg = (snaps_BT.edge_feat @ w_edge
+                    if (w_edge is not None and len(params["gcn"]) == 1)
+                    else None)
+        outs_h, h_T = kops.stacked_stream_steps_batched(
+            snaps_BT.neigh_idx, snaps_BT.neigh_coef, snaps_BT.neigh_eidx,
+            x, snaps_BT.renumber, snaps_BT.node_mask, state["h"],
+            p_last["w"], p_last["b"],
+            params["gru"]["wx"], params["gru"]["wh"], params["gru"]["b"],
+            edge_msg,
+        )
+        return {"h": h_T}, outs_h

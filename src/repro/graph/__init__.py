@@ -4,9 +4,11 @@ from repro.graph.padding import (
     DEFAULT_BUCKETS,
     PaddedSnapshot,
     choose_bucket,
+    choose_bucket_batch,
     empty_like_padded,
     pad_snapshot,
     stack_streams,
+    unpad_snapshot,
 )
 from repro.graph.synthetic import generate_temporal_graph
 
@@ -14,5 +16,6 @@ __all__ = [
     "COOSnapshot", "TemporalGraph", "slice_snapshots", "snapshot_stats",
     "LocalSnapshot", "renumber_and_normalize", "to_ell", "max_in_degree",
     "PaddedSnapshot", "pad_snapshot", "stack_streams", "choose_bucket",
-    "empty_like_padded", "DEFAULT_BUCKETS", "generate_temporal_graph",
+    "choose_bucket_batch", "unpad_snapshot", "empty_like_padded",
+    "DEFAULT_BUCKETS", "generate_temporal_graph",
 ]

@@ -119,6 +119,25 @@ def stack_streams(snaps: list[PaddedSnapshot]) -> PaddedSnapshot:
     return jax.tree.map(lambda *xs: np.stack(xs, axis=0), *snaps)
 
 
+def unpad_snapshot(ps: PaddedSnapshot) -> dict:
+    """Strip the padding from a PaddedSnapshot back to ragged host arrays.
+
+    Inverse of ``pad_snapshot`` up to the ELL conversion: returns the live
+    COO slice and per-node arrays (the round-trip contract the property
+    tests assert). Keys: src, dst, coef, edge_feat, node_feat, renumber.
+    """
+    n = int(ps.n_nodes)
+    e = int(ps.n_edges)
+    return {
+        "src": np.asarray(ps.src)[:e],
+        "dst": np.asarray(ps.dst)[:e],
+        "coef": np.asarray(ps.coef)[:e],
+        "edge_feat": np.asarray(ps.edge_feat)[:e],
+        "node_feat": np.asarray(ps.node_feat)[:n],
+        "renumber": np.asarray(ps.renumber)[:n],
+    }
+
+
 def choose_bucket(n: int, e: int, k: int,
                   buckets: tuple[tuple[int, int, int], ...]) -> tuple[int, int, int]:
     """Pick the smallest bucket that fits (host-side; see serve/engine)."""
@@ -126,6 +145,26 @@ def choose_bucket(n: int, e: int, k: int,
         if n <= b[0] and e <= b[1] and k <= b[2]:
             return b
     raise ValueError(f"no bucket fits snapshot ({n},{e},k={k})")
+
+
+def choose_bucket_batch(dims: "list[tuple[int, int, int]]",
+                        buckets: tuple[tuple[int, int, int], ...]
+                        ) -> tuple[int, int, int]:
+    """Smallest bucket covering EVERY (n, e, k) in ``dims``.
+
+    Used to co-bucket the snapshots of one multi-tenant stream chunk (and,
+    transitively, the streams batched into one V3 launch): batching needs
+    identical static shapes, so the chunk pays the max of its members —
+    the multi-tenant padding tradeoff. Equal to the elementwise-max query
+    against ``choose_bucket``, hence >= every member's individual bucket
+    (the monotonicity property tests assert).
+    """
+    if not dims:
+        raise ValueError("empty chunk: no dims to bucket")
+    n = max(d[0] for d in dims)
+    e = max(d[1] for d in dims)
+    k = max(d[2] for d in dims)
+    return choose_bucket(n, e, k, buckets)
 
 
 DEFAULT_BUCKETS = ((128, 512, 32), (320, 1024, 48), (640, 4096, 96))

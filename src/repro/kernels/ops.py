@@ -27,6 +27,20 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+_FORCE_REF = False
+
+
+def set_force_ref(flag: bool) -> None:
+    """Route ALL kernel wrappers to the pure-jnp oracles (the XLA
+    production path) until reset. Benchmarks flip this on CPU hosts, where
+    interpret-mode Pallas wall time measures the interpreter rather than
+    the dataflow; per-call ``force_ref=True`` stays available for targeted
+    use. Affects functions traced AFTER the flip (jit caches keep whatever
+    path they captured)."""
+    global _FORCE_REF
+    _FORCE_REF = flag
+
+
 def _pad_rows(n: int, tn: int) -> int:
     return ((n + tn - 1) // tn) * tn
 
@@ -43,7 +57,7 @@ def _pad_to(a, n2: int, axis: int, fill=0):
 
 def ell_spmm(neigh_idx, neigh_coef, neigh_eidx, x, edge_msg=None, *,
              tn: int = 128, force_ref: bool = False):
-    if force_ref:
+    if force_ref or _FORCE_REF:
         return _ref.ell_spmm(neigh_idx, neigh_coef, neigh_eidx, x, edge_msg)
     n = neigh_idx.shape[0]
     n2 = _pad_rows(n, tn)
@@ -55,20 +69,20 @@ def ell_spmm(neigh_idx, neigh_coef, neigh_eidx, x, edge_msg=None, *,
 
 
 def fused_gru(x, h, wx, wh, b, *, tb: int = 128, force_ref: bool = False):
-    if force_ref:
+    if force_ref or _FORCE_REF:
         return _ref.fused_gru(x, h, wx, wh, b)
     return _rnn.fused_gru_pallas(x, h, wx, wh, b, tb=tb, interpret=_interpret())
 
 
 def fused_lstm(x, h, c, wx, wh, b, *, tb: int = 128, force_ref: bool = False):
-    if force_ref:
+    if force_ref or _FORCE_REF:
         return _ref.fused_lstm(x, h, c, wx, wh, b)
     return _rnn.fused_lstm_pallas(x, h, c, wx, wh, b, tb=tb, interpret=_interpret())
 
 
 def dgnn_fused_step(neigh_idx, neigh_coef, neigh_eidx, x, h, c, wx, wh, b,
                     edge_msg=None, *, tn: int = 128, force_ref: bool = False):
-    if force_ref:
+    if force_ref or _FORCE_REF:
         return _ref.dgnn_fused_step(neigh_idx, neigh_coef, neigh_eidx, x, h, c,
                                     wx, wh, b, edge_msg)
     n = neigh_idx.shape[0]
@@ -83,7 +97,7 @@ def dgnn_fused_step(neigh_idx, neigh_coef, neigh_eidx, x, h, c, wx, wh, b,
 def stacked_fused_step(neigh_idx, neigh_coef, neigh_eidx, x, h, w_gcn, b_gcn,
                        wx, wh, b, edge_msg=None, *, tn: int = 128,
                        force_ref: bool = False):
-    if force_ref:
+    if force_ref or _FORCE_REF:
         return _ref.stacked_fused_step(neigh_idx, neigh_coef, neigh_eidx, x, h,
                                        w_gcn, b_gcn, wx, wh, b, edge_msg)
     n = neigh_idx.shape[0]
@@ -99,13 +113,18 @@ def stacked_fused_step(neigh_idx, neigh_coef, neigh_eidx, x, h, w_gcn, b_gcn,
 
 def _pad_stream(neigh_idx, neigh_coef, neigh_eidx, node_feat, renumber,
                 node_mask, tn: int):
-    """Auto-pad the node axis (axis 1) of a (T, n, ...) snapshot stream."""
-    n = neigh_idx.shape[1]
+    """Auto-pad the node axis of a (..., n, k)/(..., n) snapshot stream.
+
+    Works for both the single-stream (T, n, ...) and the batched
+    (B, T, n, ...) layouts: the node axis is always -2 on the ELL/feature
+    arrays and -1 on the per-node row arrays.
+    """
+    n = neigh_idx.shape[-2]
     n2 = _pad_rows(n, tn)
     return (n,
-            _pad_to(neigh_idx, n2, 1), _pad_to(neigh_coef, n2, 1),
-            _pad_to(neigh_eidx, n2, 1), _pad_to(node_feat, n2, 1),
-            _pad_to(renumber, n2, 1, fill=-1), _pad_to(node_mask, n2, 1))
+            _pad_to(neigh_idx, n2, -2), _pad_to(neigh_coef, n2, -2),
+            _pad_to(neigh_eidx, n2, -2), _pad_to(node_feat, n2, -2),
+            _pad_to(renumber, n2, -1, fill=-1), _pad_to(node_mask, n2, -1))
 
 
 def _stream_index_tables(renumber, neigh_idx, n_global: int):
@@ -113,12 +132,13 @@ def _stream_index_tables(renumber, neigh_idx, n_global: int):
 
     ``neigh_gidx``: global id of each ELL lane's source node (safe 0 where
     the lane is padding — its coef is 0). ``row_gidx``: global row of each
-    local node, ``n_global`` (the drop sentinel) on padding rows.
+    local node, ``n_global`` (the drop sentinel) on padding rows. Leading
+    axes (T,) or (B, T) pass through untouched.
     """
     ren_safe = jnp.where(renumber >= 0, renumber, 0).astype(jnp.int32)
-    T = neigh_idx.shape[0]
-    neigh_gidx = jnp.take_along_axis(
-        ren_safe, neigh_idx.reshape(T, -1), axis=1).reshape(neigh_idx.shape)
+    flat = neigh_idx.reshape(*neigh_idx.shape[:-2], -1)
+    neigh_gidx = jnp.take_along_axis(ren_safe, flat,
+                                     axis=-1).reshape(neigh_idx.shape)
     row_gidx = jnp.where(renumber >= 0, renumber, n_global).astype(jnp.int32)
     return neigh_gidx.astype(jnp.int32), row_gidx
 
@@ -131,7 +151,7 @@ def dgnn_stream_steps(neigh_idx, neigh_coef, neigh_eidx, node_feat, renumber,
     The h/c global stores cross HBM exactly once per stream instead of once
     per step. Returns (per-step h (T, n, H), final h store, final c store).
     """
-    if force_ref:
+    if force_ref or _FORCE_REF:
         return _ref.gcrn_stream_ref(neigh_idx, neigh_coef, neigh_eidx,
                                     node_feat, renumber, node_mask, h0, c0,
                                     wx, wh, b, edge_msg)
@@ -153,7 +173,7 @@ def stacked_stream_steps(neigh_idx, neigh_coef, neigh_eidx, node_feat,
 
     Returns (per-step h (T, n, H), final h store).
     """
-    if force_ref:
+    if force_ref or _FORCE_REF:
         return _ref.stacked_stream_ref(neigh_idx, neigh_coef, neigh_eidx,
                                        node_feat, renumber, node_mask, h0,
                                        w_gcn, b_gcn, wx, wh, b, edge_msg)
@@ -164,3 +184,49 @@ def stacked_stream_steps(neigh_idx, neigh_coef, neigh_eidx, node_feat,
         idx, coef, eidx, x, rowg, mask, h0, w_gcn, b_gcn, wx, wh, b, edge_msg,
         tn=tn, interpret=_interpret())
     return outs[:, :n], hT
+
+
+# -------------------------------------------------- V3 batched streams ----
+
+def dgnn_stream_steps_batched(neigh_idx, neigh_coef, neigh_eidx, node_feat,
+                              renumber, node_mask, h0, c0, wx, wh, b,
+                              edge_msg=None, *, tn: int = 128,
+                              force_ref: bool = False):
+    """B independent time-fused GCRN streams in ONE kernel launch.
+
+    Arrays carry a leading (B, T, ...) layout; h0/c0 are (B, n_global, H) —
+    one recurrent state store per stream, each crossing HBM exactly twice.
+    Returns (per-step h (B, T, n, H), final h (B, G, H), final c (B, G, H)).
+    """
+    if force_ref or _FORCE_REF:
+        return _ref.gcrn_stream_batched_ref(neigh_idx, neigh_coef, neigh_eidx,
+                                            node_feat, renumber, node_mask,
+                                            h0, c0, wx, wh, b, edge_msg)
+    n, idx, coef, eidx, x, ren, mask = _pad_stream(
+        neigh_idx, neigh_coef, neigh_eidx, node_feat, renumber, node_mask, tn)
+    gidx, rowg = _stream_index_tables(ren, idx, h0.shape[1])
+    outs, hT, cT = _stream.gcrn_stream_batched_pallas(
+        idx, gidx, coef, eidx, x, rowg, mask, h0, c0, wx, wh, b, edge_msg,
+        tn=tn, interpret=_interpret())
+    return outs[:, :, :n], hT, cT
+
+
+def stacked_stream_steps_batched(neigh_idx, neigh_coef, neigh_eidx, node_feat,
+                                 renumber, node_mask, h0, w_gcn, b_gcn,
+                                 wx, wh, b, edge_msg=None, *, tn: int = 128,
+                                 force_ref: bool = False):
+    """B independent time-fused stacked streams in ONE kernel launch.
+
+    Returns (per-step h (B, T, n, H), final h store (B, G, H)).
+    """
+    if force_ref or _FORCE_REF:
+        return _ref.stacked_stream_batched_ref(
+            neigh_idx, neigh_coef, neigh_eidx, node_feat, renumber, node_mask,
+            h0, w_gcn, b_gcn, wx, wh, b, edge_msg)
+    n, idx, coef, eidx, x, ren, mask = _pad_stream(
+        neigh_idx, neigh_coef, neigh_eidx, node_feat, renumber, node_mask, tn)
+    _, rowg = _stream_index_tables(ren, idx, h0.shape[1])
+    outs, hT = _stream.stacked_stream_batched_pallas(
+        idx, coef, eidx, x, rowg, mask, h0, w_gcn, b_gcn, wx, wh, b, edge_msg,
+        tn=tn, interpret=_interpret())
+    return outs[:, :, :n], hT

@@ -105,6 +105,25 @@ def gcrn_stream_ref(neigh_idx, neigh_coef, neigh_eidx, node_feat, renumber,
     return outs, hT, cT
 
 
+def gcrn_stream_batched_ref(neigh_idx, neigh_coef, neigh_eidx, node_feat,
+                            renumber, node_mask, h0, c0, wx, wh, b,
+                            edge_msg=None):
+    """B independent GCRN streams: (B, T, n, ...) arrays, (B, G, H) stores.
+
+    vmap of the single-stream oracle — ground truth for the batched stream
+    kernel's no-cross-stream-leakage contract.
+    """
+    if edge_msg is None:
+        fn = lambda i, c, e, x, r, m, h_, c_0: gcrn_stream_ref(
+            i, c, e, x, r, m, h_, c_0, wx, wh, b)
+        return jax.vmap(fn)(neigh_idx, neigh_coef, neigh_eidx, node_feat,
+                            renumber, node_mask, h0, c0)
+    fn = lambda i, c, e, x, r, m, h_, c_0, em: gcrn_stream_ref(
+        i, c, e, x, r, m, h_, c_0, wx, wh, b, em)
+    return jax.vmap(fn)(neigh_idx, neigh_coef, neigh_eidx, node_feat,
+                        renumber, node_mask, h0, c0, edge_msg)
+
+
 def stacked_stream_ref(neigh_idx, neigh_coef, neigh_eidx, node_feat, renumber,
                        node_mask, h0, w_gcn, b_gcn, wx, wh, b, edge_msg=None):
     """Stacked stream: last GCN layer + GRU per step over the global h store.
@@ -125,3 +144,18 @@ def stacked_stream_ref(neigh_idx, neigh_coef, neigh_eidx, node_feat, renumber,
 
     hT, outs = jax.lax.scan(body, h0, xs)
     return outs, hT
+
+
+def stacked_stream_batched_ref(neigh_idx, neigh_coef, neigh_eidx, node_feat,
+                               renumber, node_mask, h0, w_gcn, b_gcn,
+                               wx, wh, b, edge_msg=None):
+    """B independent stacked streams: vmap of the single-stream oracle."""
+    if edge_msg is None:
+        fn = lambda i, c, e, x, r, m, h_: stacked_stream_ref(
+            i, c, e, x, r, m, h_, w_gcn, b_gcn, wx, wh, b)
+        return jax.vmap(fn)(neigh_idx, neigh_coef, neigh_eidx, node_feat,
+                            renumber, node_mask, h0)
+    fn = lambda i, c, e, x, r, m, h_, em: stacked_stream_ref(
+        i, c, e, x, r, m, h_, w_gcn, b_gcn, wx, wh, b, em)
+    return jax.vmap(fn)(neigh_idx, neigh_coef, neigh_eidx, node_feat,
+                        renumber, node_mask, h0, edge_msg)

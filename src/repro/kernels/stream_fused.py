@@ -4,18 +4,18 @@ The V2 kernels (dgnn_fused.py) fuse MP+NT+RNN *within* one snapshot but are
 re-invoked per time step from a scan, so the recurrent node-state store
 (h, and c for GCRN) round-trips HBM T times per stream — exactly the DRAM
 traffic the paper's BRAM+FIFO design eliminates. Here the WHOLE snapshot
-stream runs inside a single ``pallas_call`` with grid ``(T, n_pad // tn)``:
+stream runs inside a single ``pallas_call`` with grid ``(B, T, n_pad//tn)``:
 
   * each step's ELL tiles (neigh_idx / neigh_coef / neigh_eidx / node_feat /
-    renumber rows / node_mask) stream along the leading T grid axis via
-    their BlockSpec index maps (the paper's snapshot DMA),
+    renumber rows / node_mask) stream along the T grid axis via their
+    BlockSpec index maps (the paper's snapshot DMA),
   * the global node-state store lives in VMEM **scratch** and never leaves
     the chip between snapshots — the TPU edition of the paper's BRAM-
     resident embeddings; the renumber-table-guided DRAM fetch/writeback
     becomes a VMEM-internal gather/scatter.
 
 Because step t+1's aggregation reads h produced by step t, the T axis is
-sequential (``dimension_semantics`` marks both axes "arbitrary"). The GCRN
+sequential (``dimension_semantics`` marks every axis "arbitrary"). The GCRN
 variant aggregates over *neighbours'* h, so within a step every tile must
 see the t-1 store while tiles write the t store: a VMEM ping-pong pair
 (read h[t-1] from one buffer, write h[t] into the other, swapped by t's
@@ -24,9 +24,29 @@ kernel. c (GCRN) and h (stacked GRU) are touched only at a node's own row,
 each row owned by exactly one tile per step (renumbering is injective), so
 a single buffer suffices for them.
 
+Batch axis (B independent streams, the production throughput axis)
+------------------------------------------------------------------
+The batch of streams is a LEADING GRID DIMENSION of the same kernel, not a
+``jax.vmap`` over the unbatched ``pallas_call``. Both execute correctly in
+interpret mode, but the vmap batching rule prepends its axis to the grid
+(``grid=(axis_size, *grid)``) while forwarding ``compiler_params``
+unchanged — so the ``dimension_semantics`` tuple we declare would no longer
+describe the axes the ping-pong parity argument depends on, and the scratch
+lifecycle across the vmapped axis becomes an implementation detail of the
+batching rule rather than something the kernel states. With an explicit B
+axis we declare all three axes "arbitrary" (sequential on one core) and the
+state scratch is *serially reused per stream by construction*: at each
+stream's own ``(t==0, j==0)`` the scratch is re-initialized from that
+stream's h0/c0 block, and at its ``(T-1, J-1)`` it drains to that stream's
+hT/cT block, so no state ever aliases between streams and each stream
+restarts the ping-pong at even parity. One launch amortizes the weight
+loads across all B streams and keeps the recurrent state's HBM traffic at
+2 transfers *per stream*, independent of T. The unbatched entry points are
+the B=1 special case of the same kernel body.
+
 Correctness contract: identical math to the per-step V2 path + the models'
 gather/scatter, verified against kernels/ref.py stream oracles and the
-mode-equivalence tests (v3 ≡ baseline).
+differential harness (v3 ≡ baseline ≡ batched-v3 row-sliced).
 """
 from __future__ import annotations
 
@@ -55,7 +75,8 @@ def _agg_store(gidx, coef, store):
     return (g * coef[..., None]).sum(axis=1)
 
 
-def _last_step(t_axis: int = 0, j_axis: int = 1):
+def _stream_done(t_axis: int = 1, j_axis: int = 2):
+    """Last (t, j) program of the CURRENT stream — drain point for its state."""
     t = pl.program_id(t_axis)
     j = pl.program_id(j_axis)
     return jnp.logical_and(t == pl.num_programs(t_axis) - 1,
@@ -68,14 +89,17 @@ def _gcrn_stream_kernel(has_edge,
                         wx_ref, wh_ref, b_ref, emsg_ref,
                         out_ref, hT_ref, cT_ref,
                         ha_ref, hb_ref, c_ref):
-    t, j = pl.program_id(0), pl.program_id(1)
-    n_global = h0_ref.shape[0]
+    t, j = pl.program_id(1), pl.program_id(2)
+    n_global = h0_ref.shape[1]
     even = (t % 2) == 0  # state after step t-1 lives in A on even t
 
+    # every stream re-initializes the scratch from its OWN h0/c0 block at
+    # its (t==0, j==0), so streams reuse the buffers serially and each one
+    # starts the ping-pong at even parity.
     @pl.when(jnp.logical_and(t == 0, j == 0))
     def _init():
-        ha_ref[...] = h0_ref[...]
-        c_ref[...] = c0_ref[...]
+        ha_ref[...] = h0_ref[0]
+        c_ref[...] = c0_ref[0]
 
     # copy-forward at the start of each step so rows this snapshot does not
     # touch carry over; tiles then overwrite only their own rows.
@@ -87,15 +111,15 @@ def _gcrn_stream_kernel(has_edge,
     def _fwd_ba():
         ha_ref[...] = hb_ref[...]
 
-    idx, gidx = idx_ref[0], gidx_ref[0]
-    coef, eidx = coef_ref[0], eidx_ref[0]
-    x = x_ref[0]
-    rowg = rowg_ref[0]
-    mask = mask_ref[0][:, None]
+    idx, gidx = idx_ref[0, 0], gidx_ref[0, 0]
+    coef, eidx = coef_ref[0, 0], eidx_ref[0, 0]
+    x = x_ref[0, 0]
+    rowg = rowg_ref[0, 0]
+    mask = mask_ref[0, 0][:, None]
 
     h_prev = jnp.where(even, ha_ref[...], hb_ref[...])  # untouched t-1 slot
     if has_edge:
-        agg_x = _agg_local_edge(idx, coef, eidx, x, emsg_ref[0])
+        agg_x = _agg_local_edge(idx, coef, eidx, x, emsg_ref[0, 0])
     else:
         agg_x = _agg_local(idx, coef, x)
     agg_h = _agg_store(gidx, coef, h_prev)
@@ -123,66 +147,68 @@ def _gcrn_stream_kernel(has_edge,
         ha_ref[...] = ha_ref[...].at[rowg].set(h_new, mode="drop")
 
     c_ref[...] = c_ref[...].at[rowg].set(c_new, mode="drop")
-    out_ref[0] = h_new
+    out_ref[0, 0] = h_new
 
-    @pl.when(_last_step())
+    @pl.when(_stream_done())
     def _drain():
-        hT_ref[...] = jnp.where(even, hb_ref[...], ha_ref[...])
-        cT_ref[...] = c_ref[...]
+        hT_ref[0] = jnp.where(even, hb_ref[...], ha_ref[...])
+        cT_ref[0] = c_ref[...]
 
 
 @functools.partial(jax.jit, static_argnames=("tn", "interpret"))
-def gcrn_stream_pallas(neigh_idx, neigh_gidx, neigh_coef, neigh_eidx,
-                       node_feat, row_gidx, node_mask, h0, c0, wx, wh, b,
-                       edge_msg=None, *, tn: int = 128,
-                       interpret: bool = False):
-    """Whole-stream GCRN (GC-LSTM): T snapshots in one pallas_call.
+def gcrn_stream_batched_pallas(neigh_idx, neigh_gidx, neigh_coef, neigh_eidx,
+                               node_feat, row_gidx, node_mask, h0, c0,
+                               wx, wh, b, edge_msg=None, *, tn: int = 128,
+                               interpret: bool = False):
+    """B independent whole-stream GCRN (GC-LSTM) runs in one pallas_call.
 
-    Shapes: neigh_* (T, n, k); node_feat (T, n, din); row_gidx/node_mask
-    (T, n); h0/c0 (n_global, hdim) — the global state store, entering and
-    leaving the chip exactly once per stream.
+    Shapes: neigh_* (B, T, n, k); node_feat (B, T, n, din); row_gidx /
+    node_mask (B, T, n); h0/c0 (B, n_global, hdim) — one global state store
+    per stream, each entering and leaving the chip exactly once. Weights
+    are shared across streams and loaded once per launch.
     """
-    T, n, k = neigh_idx.shape
-    din, hdim = node_feat.shape[2], h0.shape[1]
-    n_global = h0.shape[0]
+    B, T, n, k = neigh_idx.shape
+    din, hdim = node_feat.shape[3], h0.shape[2]
+    n_global = h0.shape[1]
     assert n % tn == 0
-    grid = (T, n // tn)
-    tile = lambda t, j: (t, j, 0)
-    step = lambda t, j: (t, 0, 0)
-    row = lambda t, j: (t, j)
-    res2 = lambda t, j: (0, 0)
-    res1 = lambda t, j: (0,)
+    grid = (B, T, n // tn)
+    tile = lambda bi, t, j: (bi, t, j, 0)
+    step = lambda bi, t, j: (bi, t, 0, 0)
+    row = lambda bi, t, j: (bi, t, j)
+    state = lambda bi, t, j: (bi, 0, 0)
+    res2 = lambda bi, t, j: (0, 0)
+    res1 = lambda bi, t, j: (0,)
     has_edge = edge_msg is not None
     if not has_edge:
-        edge_msg = jnp.zeros((T, 8, din), node_feat.dtype)
-    e = edge_msg.shape[1]
+        edge_msg = jnp.zeros((B, T, 8, din), node_feat.dtype)
+    e = edge_msg.shape[2]
     return pl.pallas_call(
         functools.partial(_gcrn_stream_kernel, has_edge),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, tn, k), tile),       # neigh_idx (local)
-            pl.BlockSpec((1, tn, k), tile),       # neigh_gidx (global)
-            pl.BlockSpec((1, tn, k), tile),       # neigh_coef
-            pl.BlockSpec((1, tn, k), tile),       # neigh_eidx
-            pl.BlockSpec((1, n, din), step),      # node_feat, streamed per t
-            pl.BlockSpec((1, tn), row),           # row_gidx
-            pl.BlockSpec((1, tn), row),           # node_mask
-            pl.BlockSpec((n_global, hdim), res2),  # h0 (loaded once)
-            pl.BlockSpec((n_global, hdim), res2),  # c0 (loaded once)
+            pl.BlockSpec((1, 1, tn, k), tile),       # neigh_idx (local)
+            pl.BlockSpec((1, 1, tn, k), tile),       # neigh_gidx (global)
+            pl.BlockSpec((1, 1, tn, k), tile),       # neigh_coef
+            pl.BlockSpec((1, 1, tn, k), tile),       # neigh_eidx
+            pl.BlockSpec((1, 1, n, din), step),      # node_feat, per (b, t)
+            pl.BlockSpec((1, 1, tn), row),           # row_gidx
+            pl.BlockSpec((1, 1, tn), row),           # node_mask
+            pl.BlockSpec((1, n_global, hdim), state),  # h0, per stream
+            pl.BlockSpec((1, n_global, hdim), state),  # c0, per stream
             pl.BlockSpec((din, 4 * hdim), res2),
             pl.BlockSpec((hdim, 4 * hdim), res2),
             pl.BlockSpec((4 * hdim,), res1),
-            pl.BlockSpec((1, e, din), step),      # edge messages, per t
+            pl.BlockSpec((1, 1, e, din), step),      # edge messages, per (b, t)
         ],
         out_specs=[
-            pl.BlockSpec((1, tn, hdim), tile),        # per-step h outputs
-            pl.BlockSpec((n_global, hdim), res2),     # final h store
-            pl.BlockSpec((n_global, hdim), res2),     # final c store
+            pl.BlockSpec((1, 1, tn, hdim), tile),       # per-step h outputs
+            pl.BlockSpec((1, n_global, hdim), state),   # final h store
+            pl.BlockSpec((1, n_global, hdim), state),   # final c store
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((T, n, hdim), node_feat.dtype),
-            jax.ShapeDtypeStruct((n_global, hdim), h0.dtype),
-            jax.ShapeDtypeStruct((n_global, hdim), c0.dtype),
+            jax.ShapeDtypeStruct((B, T, n, hdim), node_feat.dtype),
+            jax.ShapeDtypeStruct((B, n_global, hdim), h0.dtype),
+            jax.ShapeDtypeStruct((B, n_global, hdim), c0.dtype),
         ],
         scratch_shapes=[
             pltpu.VMEM((n_global, hdim), h0.dtype),   # h ping
@@ -190,10 +216,28 @@ def gcrn_stream_pallas(neigh_idx, neigh_gidx, neigh_coef, neigh_eidx,
             pltpu.VMEM((n_global, hdim), c0.dtype),   # c (single buffer)
         ],
         compiler_params=pltpu.TPUCompilerParams(
-            dimension_semantics=("arbitrary", "arbitrary")),
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
         interpret=interpret,
     )(neigh_idx, neigh_gidx, neigh_coef, neigh_eidx, node_feat,
       row_gidx, node_mask, h0, c0, wx, wh, b, edge_msg)
+
+
+def gcrn_stream_pallas(neigh_idx, neigh_gidx, neigh_coef, neigh_eidx,
+                       node_feat, row_gidx, node_mask, h0, c0, wx, wh, b,
+                       edge_msg=None, *, tn: int = 128,
+                       interpret: bool = False):
+    """Whole-stream GCRN (GC-LSTM): the B=1 case of the batched kernel.
+
+    Shapes: neigh_* (T, n, k); node_feat (T, n, din); row_gidx/node_mask
+    (T, n); h0/c0 (n_global, hdim) — the global state store, entering and
+    leaving the chip exactly once per stream.
+    """
+    em = None if edge_msg is None else edge_msg[None]
+    outs, hT, cT = gcrn_stream_batched_pallas(
+        neigh_idx[None], neigh_gidx[None], neigh_coef[None], neigh_eidx[None],
+        node_feat[None], row_gidx[None], node_mask[None], h0[None], c0[None],
+        wx, wh, b, em, tn=tn, interpret=interpret)
+    return outs[0], hT[0], cT[0]
 
 
 def _stacked_stream_kernel(has_edge,
@@ -201,20 +245,21 @@ def _stacked_stream_kernel(has_edge,
                            rowg_ref, mask_ref, h0_ref,
                            wg_ref, bg_ref, wx_ref, wh_ref, b_ref, emsg_ref,
                            out_ref, hT_ref, hs_ref):
-    t, j = pl.program_id(0), pl.program_id(1)
-    n_global = h0_ref.shape[0]
+    t, j = pl.program_id(1), pl.program_id(2)
+    n_global = h0_ref.shape[1]
 
+    # serial scratch reuse across streams: each stream re-loads its own h0.
     @pl.when(jnp.logical_and(t == 0, j == 0))
     def _init():
-        hs_ref[...] = h0_ref[...]
+        hs_ref[...] = h0_ref[0]
 
-    idx, coef, eidx = idx_ref[0], coef_ref[0], eidx_ref[0]
-    x = x_ref[0]
-    rowg = rowg_ref[0]
-    mask = mask_ref[0][:, None]
+    idx, coef, eidx = idx_ref[0, 0], coef_ref[0, 0], eidx_ref[0, 0]
+    x = x_ref[0, 0]
+    rowg = rowg_ref[0, 0]
+    mask = mask_ref[0, 0][:, None]
 
     if has_edge:
-        agg = _agg_local_edge(idx, coef, eidx, x, emsg_ref[0])
+        agg = _agg_local_edge(idx, coef, eidx, x, emsg_ref[0, 0])
     else:
         agg = _agg_local(idx, coef, x)
     nt = agg @ wg_ref[...] + bg_ref[...][None, :]
@@ -235,65 +280,80 @@ def _stacked_stream_kernel(has_edge,
     h_new = ((1.0 - z) * nn + z * h_old) * mask
 
     hs_ref[...] = hs_ref[...].at[rowg].set(h_new, mode="drop")
-    out_ref[0] = h_new
+    out_ref[0, 0] = h_new
 
-    @pl.when(_last_step())
+    @pl.when(_stream_done())
     def _drain():
-        hT_ref[...] = hs_ref[...]
+        hT_ref[0] = hs_ref[...]
 
 
 @functools.partial(jax.jit, static_argnames=("tn", "interpret"))
-def stacked_stream_pallas(neigh_idx, neigh_coef, neigh_eidx, node_feat,
-                          row_gidx, node_mask, h0, w_gcn, b_gcn, wx, wh, b,
-                          edge_msg=None, *, tn: int = 128,
-                          interpret: bool = False):
-    """Whole-stream stacked DGNN (GCN last layer -> GRU) in one pallas_call."""
-    T, n, k = neigh_idx.shape
-    din, hdim = node_feat.shape[2], h0.shape[1]
+def stacked_stream_batched_pallas(neigh_idx, neigh_coef, neigh_eidx,
+                                  node_feat, row_gidx, node_mask, h0,
+                                  w_gcn, b_gcn, wx, wh, b, edge_msg=None, *,
+                                  tn: int = 128, interpret: bool = False):
+    """B independent stacked-DGNN streams (GCN last layer -> GRU) in one
+    pallas_call; one VMEM-resident h store per stream, reused serially."""
+    B, T, n, k = neigh_idx.shape
+    din, hdim = node_feat.shape[3], h0.shape[2]
     dmid = w_gcn.shape[1]
-    n_global = h0.shape[0]
+    n_global = h0.shape[1]
     assert n % tn == 0
-    grid = (T, n // tn)
-    tile = lambda t, j: (t, j, 0)
-    step = lambda t, j: (t, 0, 0)
-    row = lambda t, j: (t, j)
-    res2 = lambda t, j: (0, 0)
-    res1 = lambda t, j: (0,)
+    grid = (B, T, n // tn)
+    tile = lambda bi, t, j: (bi, t, j, 0)
+    step = lambda bi, t, j: (bi, t, 0, 0)
+    row = lambda bi, t, j: (bi, t, j)
+    state = lambda bi, t, j: (bi, 0, 0)
+    res2 = lambda bi, t, j: (0, 0)
+    res1 = lambda bi, t, j: (0,)
     has_edge = edge_msg is not None
     if not has_edge:
-        edge_msg = jnp.zeros((T, 8, din), node_feat.dtype)
-    e = edge_msg.shape[1]
+        edge_msg = jnp.zeros((B, T, 8, din), node_feat.dtype)
+    e = edge_msg.shape[2]
     return pl.pallas_call(
         functools.partial(_stacked_stream_kernel, has_edge),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, tn, k), tile),
-            pl.BlockSpec((1, tn, k), tile),
-            pl.BlockSpec((1, tn, k), tile),
-            pl.BlockSpec((1, n, din), step),
-            pl.BlockSpec((1, tn), row),
-            pl.BlockSpec((1, tn), row),
-            pl.BlockSpec((n_global, hdim), res2),
+            pl.BlockSpec((1, 1, tn, k), tile),
+            pl.BlockSpec((1, 1, tn, k), tile),
+            pl.BlockSpec((1, 1, tn, k), tile),
+            pl.BlockSpec((1, 1, n, din), step),
+            pl.BlockSpec((1, 1, tn), row),
+            pl.BlockSpec((1, 1, tn), row),
+            pl.BlockSpec((1, n_global, hdim), state),
             pl.BlockSpec((din, dmid), res2),
             pl.BlockSpec((dmid,), res1),
             pl.BlockSpec((dmid, 3 * hdim), res2),
             pl.BlockSpec((hdim, 3 * hdim), res2),
             pl.BlockSpec((3 * hdim,), res1),
-            pl.BlockSpec((1, e, din), step),
+            pl.BlockSpec((1, 1, e, din), step),
         ],
         out_specs=[
-            pl.BlockSpec((1, tn, hdim), tile),
-            pl.BlockSpec((n_global, hdim), res2),
+            pl.BlockSpec((1, 1, tn, hdim), tile),
+            pl.BlockSpec((1, n_global, hdim), state),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((T, n, hdim), node_feat.dtype),
-            jax.ShapeDtypeStruct((n_global, hdim), h0.dtype),
+            jax.ShapeDtypeStruct((B, T, n, hdim), node_feat.dtype),
+            jax.ShapeDtypeStruct((B, n_global, hdim), h0.dtype),
         ],
         scratch_shapes=[
             pltpu.VMEM((n_global, hdim), h0.dtype),
         ],
         compiler_params=pltpu.TPUCompilerParams(
-            dimension_semantics=("arbitrary", "arbitrary")),
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
         interpret=interpret,
     )(neigh_idx, neigh_coef, neigh_eidx, node_feat, row_gidx, node_mask,
       h0, w_gcn, b_gcn, wx, wh, b, edge_msg)
+
+
+def stacked_stream_pallas(neigh_idx, neigh_coef, neigh_eidx, node_feat,
+                          row_gidx, node_mask, h0, w_gcn, b_gcn, wx, wh, b,
+                          edge_msg=None, *, tn: int = 128,
+                          interpret: bool = False):
+    """Whole-stream stacked DGNN: the B=1 case of the batched kernel."""
+    em = None if edge_msg is None else edge_msg[None]
+    outs, hT = stacked_stream_batched_pallas(
+        neigh_idx[None], neigh_coef[None], neigh_eidx[None], node_feat[None],
+        row_gidx[None], node_mask[None], h0[None], w_gcn, b_gcn, wx, wh, b,
+        em, tn=tn, interpret=interpret)
+    return outs[0], hT[0]

@@ -21,8 +21,18 @@ snapshots) and the WHOLE chunk is handed to the stream kernel in one
 launch, so the recurrent state crosses HBM once per chunk, not per
 snapshot.
 
-Also hosts the batched-streams production mode: many independent dynamic
-graphs served concurrently, streams sharded over (pod, data).
+Multi-tenant batched serving (``run_multi``): many independent clients'
+snapshot streams served concurrently. Each client stream gets its own
+host preprocessing thread and its own recurrent state store; the device
+loop proceeds in rounds, co-buckets each stream's next chunk
+(choose_bucket_batch), groups same-bucket chunks across clients, and
+hands each group to ONE batched V3 launch — the batch axis is a leading
+grid dimension of the stream kernel, so B streams cost one kernel launch
+and one weight load while every stream's state store still crosses HBM
+exactly twice per chunk. Per-stream outputs are returned in per-stream
+order (rounds are sequential and each stream's snapshots are consumed in
+order). Models without a batched stream kernel (EvolveGCN) fall back to
+round-robin per-snapshot stepping.
 """
 from __future__ import annotations
 
@@ -33,6 +43,7 @@ from dataclasses import dataclass
 from typing import Iterable, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.dgnn import DGNNConfig
@@ -42,8 +53,10 @@ from repro.graph.csr import max_in_degree, renumber_and_normalize
 from repro.graph.padding import (
     PaddedSnapshot,
     choose_bucket,
+    choose_bucket_batch,
     empty_like_padded,
     pad_snapshot,
+    stack_streams,
 )
 
 
@@ -79,6 +92,8 @@ class SnapshotServer:
             lambda p, s, snap: self.model.step(p, s, snap, mode=self.mode))
         self._stream_step = jax.jit(
             lambda p, s, sT: self.model.step_stream(p, s, sT))
+        self._stream_step_batched = jax.jit(
+            lambda p, s, sBT: self.model.step_stream_batched(p, s, sBT))
 
     def init(self, rng):
         params = self.model.init(rng)
@@ -105,6 +120,14 @@ class SnapshotServer:
     def _use_stream(self) -> bool:
         return self.mode == "v3" and hasattr(self.model, "step_stream")
 
+    def _pow2_target(self, real: int, cap: Optional[int] = None) -> int:
+        """Next power of two >= ``real`` (optionally capped): the padded
+        sizes the jit cache is allowed to hold — log2 many per bucket."""
+        target = 1
+        while target < real:
+            target *= 2
+        return min(target, cap) if cap is not None else target
+
     def _run_chunk(self, params, state, chunk: list, outs: list, lat: list):
         """Feed one same-bucket chunk to the time-fused stream kernel.
 
@@ -115,10 +138,7 @@ class SnapshotServer:
         bucket.
         """
         real = len(chunk)
-        target = 1
-        while target < real:
-            target *= 2
-        target = min(target, self.stream_chunk)
+        target = self._pow2_target(real, cap=self.stream_chunk)
         while len(chunk) < target:  # no-op tail padding
             chunk.append(empty_like_padded(chunk[0]))
         t0 = time.perf_counter()
@@ -181,3 +201,178 @@ class SnapshotServer:
         th.join()
         total = (time.perf_counter() - t_start) * 1e3
         return state, outs, ServeStats(lat, pre_ms, total)
+
+    # ------------------------------------------- multi-tenant device loop ----
+
+    def _use_stream_batched(self) -> bool:
+        return (self.mode == "v3"
+                and hasattr(self.model, "step_stream_batched"))
+
+    def _chunk_bucket(self, dims: list) -> tuple:
+        """Bucket covering a whole chunk of (n, e, k) dims (one static shape
+        per chunk so the chunk can batch with same-bucket chunks of other
+        streams)."""
+        if self.buckets is not None:
+            return choose_bucket_batch(dims, self.buckets)
+        return (self.n_pad, self.e_pad, self.k_max)
+
+    def _run_group_batched(self, params, states: dict, group: list,
+                           outs: dict, lat: list):
+        """One batched V3 launch over same-bucket chunks of several streams.
+
+        ``group`` is [(sid, [LocalSnapshot, ...], bucket), ...]. Each
+        stream's chunk is padded to the shared bucket, its T tail padded
+        with no-op snapshots to the common power-of-two length, stacked to
+        a (B, T, ...) batch with the per-stream states stacked alongside.
+        The BATCH axis is pow2-padded with no-op streams too (zero states,
+        all-padding snapshots, results discarded), so the jit cache stays
+        bounded at log2 sizes per (bucket, T) instead of compiling one
+        program per distinct client count as tenants join and finish.
+        Row b of the launch result is that stream's output in stream order.
+        """
+        bucket = group[0][2]
+        real_lens = [len(chunk) for _, chunk, _ in group]
+        target = self._pow2_target(max(real_lens), cap=self.stream_chunk)
+        b_real = len(group)
+        b_target = self._pow2_target(b_real)
+        per_stream = []
+        for _, chunk, _ in group:
+            # fixed-bucket items arrive pre-padded from the producer thread
+            # (host-prep overlap); bucketed items pad here, once the chunk
+            # bucket is known.
+            padded = [ls if isinstance(ls, PaddedSnapshot)
+                      else pad_snapshot(ls, self.feat_table, *bucket)
+                      for ls in chunk]
+            while len(padded) < target:   # no-op tail padding
+                padded.append(empty_like_padded(padded[0]))
+            per_stream.append(stack_time(padded))
+        noop_stream = stack_time([empty_like_padded(
+            jax.tree.map(lambda a: a[0], per_stream[0]))] * target)
+        per_stream.extend([noop_stream] * (b_target - b_real))
+        batch_BT = stack_streams(per_stream)
+        zero_state = jax.tree.map(jnp.zeros_like, states[group[0][0]])
+        states_B = jax.tree.map(
+            lambda *xs: jnp.stack(xs, axis=0),
+            *([states[sid] for sid, _, _ in group]
+              + [zero_state] * (b_target - b_real)))
+        t0 = time.perf_counter()
+        states_B, out_BT = self._stream_step_batched(params, states_B,
+                                                     batch_BT)
+        jax.block_until_ready(out_BT)
+        dt = (time.perf_counter() - t0) * 1e3 / sum(real_lens)
+        out_np = np.asarray(out_BT)
+        for b, (sid, _, _) in enumerate(group):
+            states[sid] = jax.tree.map(lambda a, b=b: a[b], states_B)
+            for t in range(real_lens[b]):
+                outs[sid].append(out_np[b, t])
+                lat.append(dt)
+
+    def run_multi(self, params, states: dict, streams: dict) -> tuple:
+        """Serve many independent client streams concurrently.
+
+        ``streams``: {stream_id: iterable of COOSnapshot}; ``states``:
+        {stream_id: recurrent state} (one store per tenant — state is never
+        shared across clients). Returns (states, {stream_id: [outputs]},
+        ServeStats). Outputs per stream are in that stream's snapshot order.
+
+        Device loop: rounds of up-to-``stream_chunk`` snapshots per stream;
+        same-bucket chunks from different streams batch into one V3 launch.
+        """
+        sids = sorted(streams)
+        qs = {sid: queue.Queue(maxsize=max(self.queue_depth,
+                                           self.stream_chunk))
+              for sid in sids}
+        pre_ms: list = []
+        stop = threading.Event()
+
+        def _put(q, item):
+            while not stop.is_set():
+                try:
+                    q.put(item, timeout=0.05)
+                    return True
+                except queue.Full:
+                    continue
+            return False
+
+        def producer(sid):
+            try:
+                for s in streams[sid]:
+                    t0 = time.perf_counter()
+                    ls = renumber_and_normalize(s)
+                    dims = (ls.n_nodes, ls.src.shape[0], max_in_degree(ls))
+                    if self.buckets is not None:
+                        choose_bucket(*dims, self.buckets)  # fail fast
+                    else:
+                        # fixed bucket known up front: pad here so the host
+                        # prep fully overlaps device work (the bucketed
+                        # case defers padding until the chunk bucket — max
+                        # over its members — is known on the device loop).
+                        ls = pad_snapshot(ls, self.feat_table, self.n_pad,
+                                          self.e_pad, self.k_max)
+                    pre_ms.append((time.perf_counter() - t0) * 1e3)
+                    if not _put(qs[sid], (ls, dims)):
+                        return
+                _put(qs[sid], None)
+            except BaseException as exc:  # propagate, don't hang the consumer
+                _put(qs[sid], exc)
+
+        threads = [threading.Thread(target=producer, args=(sid,), daemon=True)
+                   for sid in sids]
+        t_start = time.perf_counter()
+        for th in threads:
+            th.start()
+        outs: dict = {sid: [] for sid in sids}
+        lat: list = []
+        active = set(sids)
+        batched = self._use_stream_batched()
+        try:
+            while active:
+                # one round: pull the next chunk of every active stream
+                chunks = {}
+                for sid in sorted(active):
+                    chunk: list = []
+                    dims: list = []
+                    while len(chunk) < self.stream_chunk:
+                        item = qs[sid].get()
+                        if item is None:
+                            active.discard(sid)
+                            break
+                        if isinstance(item, BaseException):
+                            active.discard(sid)
+                            raise item
+                        chunk.append(item[0])
+                        dims.append(item[1])
+                        if not batched and chunk:
+                            break  # per-snapshot fallback needs no chunking
+                    if chunk:
+                        chunks[sid] = (chunk, dims)
+                if not chunks:
+                    continue
+                if not batched:
+                    # fallback (e.g. EvolveGCN): round-robin per-step path
+                    for sid, (chunk, dims) in sorted(chunks.items()):
+                        for ls, d in zip(chunk, dims):
+                            ps = (ls if isinstance(ls, PaddedSnapshot)
+                                  else pad_snapshot(ls, self.feat_table,
+                                                    *self._chunk_bucket([d])))
+                            t0 = time.perf_counter()
+                            states[sid], out = self._step(params, states[sid],
+                                                          ps)
+                            jax.block_until_ready(out)
+                            lat.append((time.perf_counter() - t0) * 1e3)
+                            outs[sid].append(np.asarray(out))
+                    continue
+                # group same-bucket chunks across streams -> one launch each
+                groups: dict = {}
+                for sid, (chunk, dims) in sorted(chunks.items()):
+                    bucket = self._chunk_bucket(dims)
+                    groups.setdefault(bucket, []).append((sid, chunk, bucket))
+                for bucket in sorted(groups):
+                    self._run_group_batched(params, states, groups[bucket],
+                                            outs, lat)
+        finally:
+            stop.set()
+            for th in threads:
+                th.join(timeout=5.0)
+        total = (time.perf_counter() - t_start) * 1e3
+        return states, outs, ServeStats(lat, pre_ms, total)

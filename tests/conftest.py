@@ -1,0 +1,18 @@
+"""Shared fixtures: the differential-test harness cases.
+
+``stream_case`` parametrizes over all three DGNN families; each case is B
+independent random snapshot streams (ragged node counts, odd T) padded into
+one shared bucket, plus the family's model + params. Cases are built once
+per session (engines re-run from fresh state inside each test, so sharing
+is safe).
+"""
+import pytest
+
+from repro.configs.dgnn import DGNN_CONFIGS
+
+import harness
+
+
+@pytest.fixture(scope="session", params=sorted(DGNN_CONFIGS))
+def stream_case(request):
+    return harness.make_case(request.param, seed=11, T=5, B=3)

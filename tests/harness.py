@@ -1,0 +1,255 @@
+"""Shared differential-test harness for the dataflow-engine contract.
+
+The paper's correctness claim is that every dataflow level computes the
+SAME function — baseline ≡ o1 ≡ v1 ≡ v2 ≡ v3 — and PR 2 extends it with
+batched-v3: running B independent streams through one batched stream-kernel
+launch must be bit-close to running each stream alone (row-sliced). This
+module builds random snapshot streams (ragged node counts per step, odd T,
+all three model families) and asserts that contract in one place, replacing
+the per-file copy-pasted equivalence loops.
+
+Also hosts the padding/bucket invariant checkers shared by the plain
+regression tests (run everywhere) and the hypothesis property tests
+(test_property.py, run when hypothesis is installed).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.dgnn import DGNN_CONFIGS, DGNNConfig
+from repro.core import (
+    build_model,
+    init_states_batched,
+    run_batched,
+    run_stream,
+    stack_time,
+)
+from repro.graph import (
+    COOSnapshot,
+    choose_bucket,
+    choose_bucket_batch,
+    max_in_degree,
+    pad_snapshot,
+    renumber_and_normalize,
+    unpad_snapshot,
+)
+
+# Which engines apply per DGNN family (v3 on EvolveGCN is the documented
+# fallback to the v1 overlapped schedule — still output-identical).
+MODES = {
+    "evolvegcn": ["baseline", "o1", "v1", "v3"],
+    "gcrn-m2": ["baseline", "o1", "v2", "v3"],
+    "stacked-gcn-gru": ["baseline", "o1", "v1", "v2", "v3"],
+}
+
+
+def small_config(name: str) -> DGNNConfig:
+    """Shrunk copy of a real family config so interpret-mode kernels and
+    the XLA engines stay fast on CPU."""
+    return dataclasses.replace(
+        DGNN_CONFIGS[name], in_dim=16, hidden=32, out_dim=8, edge_dim=4,
+        n_gnn_layers=2, max_nodes=160, max_edges=1024)
+
+
+def random_coo_stream(rng: np.random.Generator, T: int, n_pool: int,
+                      avg_edges: int, edge_dim: int) -> list[COOSnapshot]:
+    """T random COO snapshots over an ``n_pool``-node global id space.
+
+    Each step is restricted to a random subset of the pool, so the active
+    node count is RAGGED across steps (the property the padding/renumber
+    machinery must absorb).
+    """
+    snaps = []
+    for t in range(T):
+        sub = rng.choice(n_pool,
+                         size=int(rng.integers(max(n_pool // 4, 4), n_pool)),
+                         replace=False)
+        e = int(rng.integers(max(avg_edges // 2, 4), avg_edges + 1))
+        src = rng.choice(sub, size=e)
+        dst = rng.choice(sub, size=e)
+        keep = src != dst
+        if not keep.any():
+            src, dst = sub[:1], sub[1:2]
+            keep = np.ones(1, bool)
+        src, dst = src[keep], dst[keep]
+        ef = rng.normal(size=(src.size, edge_dim)).astype(np.float32)
+        snaps.append(COOSnapshot(src=src, dst=dst, edge_feat=ef, t_index=t))
+    return snaps
+
+
+@dataclass
+class StreamCase:
+    """One differential-test scenario: a family + B random padded streams."""
+
+    name: str
+    cfg: DGNNConfig
+    model: object
+    params: dict
+    n_global: int
+    stacked: list          # per stream: PaddedSnapshot pytree with (T, ...) axes
+
+
+def make_case(name: str, seed: int = 0, T: int = 5, B: int = 3) -> StreamCase:
+    """Build a family's case: B independent random streams, odd T, ragged n,
+    shared (same-bucket) padded shapes so the streams can batch."""
+    cfg = small_config(name)
+    rng = np.random.default_rng(seed)
+    n_pool = 96
+    feat_table = rng.normal(size=(n_pool, cfg.in_dim)).astype(np.float32)
+    raw = [random_coo_stream(rng, T, n_pool, avg_edges=80,
+                             edge_dim=cfg.edge_dim) for _ in range(B)]
+    locals_ = [[renumber_and_normalize(s) for s in stream] for stream in raw]
+    # one bucket across all streams: batching needs identical static shapes
+    k_max = max(max_in_degree(ls) for stream in locals_ for ls in stream)
+    k_max = max(k_max, 4)
+    n_pad = max(ls.n_nodes for stream in locals_ for ls in stream)
+    e_pad = max(ls.src.shape[0] for stream in locals_ for ls in stream)
+    stacked = [stack_time([pad_snapshot(ls, feat_table, n_pad, e_pad, k_max)
+                           for ls in stream]) for stream in locals_]
+    model = build_model(cfg, n_global=n_pool)
+    params = model.init(jax.random.PRNGKey(seed + 1))
+    return StreamCase(name=name, cfg=cfg, model=model, params=params,
+                      n_global=n_pool, stacked=stacked)
+
+
+def run_all_modes(model, params, sT, modes) -> dict:
+    """Run one stream through every listed engine from a fresh state."""
+    outs = {}
+    for mode in modes:
+        st = model.init_state(params, mode=mode)
+        _, o = run_stream(model, params, st, sT, mode=mode)
+        outs[mode] = np.asarray(o)
+    return outs
+
+
+def assert_modes_match(outs: dict, atol: float, label: str = ""):
+    """All engines' outputs equal the (finite, non-degenerate) baseline."""
+    base = outs["baseline"]
+    assert np.isfinite(base).all(), label
+    assert np.abs(base).max() > 0, label  # non-degenerate
+    for mode, o in outs.items():
+        np.testing.assert_allclose(o, base, atol=atol,
+                                   err_msg=f"{label} mode={mode}")
+
+
+def assert_engines_equivalent(case: StreamCase, atol: float = 3e-4):
+    """The full differential contract for one case:
+
+    1. per stream: baseline ≡ every engine the family supports (incl. v3);
+    2. batched v3 over all B streams in ONE launch ≡ per-stream baseline,
+       row-sliced (no cross-stream state leakage).
+    """
+    per_stream = []
+    for b, sT in enumerate(case.stacked):
+        outs = run_all_modes(case.model, case.params, sT, MODES[case.name])
+        assert_modes_match(outs, atol, label=f"{case.name} stream={b}")
+        per_stream.append(outs["baseline"])
+    B = len(case.stacked)
+    sTB = jax.tree.map(lambda *xs: jnp.stack(xs, axis=1), *case.stacked)
+    states = init_states_batched(case.model, case.params, B, mode="v3")
+    _, oB = run_batched(case.model, case.params, states, sTB, mode="v3")
+    oB = np.asarray(oB)
+    for b in range(B):
+        np.testing.assert_allclose(
+            oB[:, b], per_stream[b], atol=atol,
+            err_msg=f"{case.name} batched-v3 row {b} != solo baseline")
+
+
+def random_ell_stream(seed: int, T: int, n: int, k: int, e: int, din: int,
+                      n_global: int):
+    """Random (T, ...) padded ELL snapshot stream with valid renumber
+    tables: lanes with nonzero coef reference real (masked-in) local nodes,
+    matching the to_ell contract the kernels assume. Node counts are ragged
+    across steps (rows past each step's n_real carry coef 0 / mask 0).
+
+    Returns (neigh_idx, neigh_coef, neigh_eidx, node_feat, renumber,
+    node_mask) as stacked numpy arrays — kernel-level inputs for the stream
+    oracles and the time-fused kernels.
+    """
+    rng = np.random.default_rng(seed)
+    arrs = {k_: [] for k_ in ("idx", "coef", "eidx", "x", "ren", "mask")}
+    for _ in range(T):
+        nr = int(rng.integers(max(n // 3, 1), n + 1))
+        idx = rng.integers(0, nr, (n, k)).astype(np.int32)
+        coef = (rng.uniform(size=(n, k)) *
+                (rng.uniform(size=(n, k)) > 0.4)).astype(np.float32)
+        coef[nr:] = 0.0
+        x = rng.normal(size=(n, din)).astype(np.float32)
+        x[nr:] = 0.0
+        ren = np.full(n, -1, np.int32)
+        ren[:nr] = rng.permutation(n_global)[:nr]
+        mask = np.zeros(n, np.float32)
+        mask[:nr] = 1.0
+        for k_, v in zip(("idx", "coef", "eidx", "x", "ren", "mask"),
+                         (idx, coef, rng.integers(0, e, (n, k)).astype(np.int32),
+                          x, ren, mask)):
+            arrs[k_].append(v)
+    return tuple(np.stack(arrs[k_]) for k_ in ("idx", "coef", "eidx", "x",
+                                               "ren", "mask"))
+
+
+def random_ell_stream_batch(seed: int, B: int, T: int, n: int, k: int,
+                            e: int, din: int, n_global: int):
+    """B independent random ELL streams stacked on a leading batch axis."""
+    streams = [random_ell_stream(seed + 1000 * b, T, n, k, e, din, n_global)
+               for b in range(B)]
+    return tuple(np.stack([s[i] for s in streams]) for i in range(6))
+
+
+# ------------------------------------------------ padding invariants ----
+# Shared by plain regression tests (always run) and hypothesis property
+# tests (test_property.py, when hypothesis is installed).
+
+def check_pad_unpad_roundtrip(ls, feat_table: np.ndarray,
+                              bucket: tuple[int, int, int]):
+    """pad_snapshot -> unpad_snapshot returns the live data unchanged, and
+    the padding obeys the sink-row coef-0 convention."""
+    n_pad, e_pad, k_max = bucket
+    ps = pad_snapshot(ls, feat_table, n_pad, e_pad, k_max)
+    up = unpad_snapshot(ps)
+    e, n = ls.src.shape[0], ls.n_nodes
+    np.testing.assert_array_equal(up["src"], ls.src)
+    np.testing.assert_array_equal(up["dst"], ls.dst)
+    np.testing.assert_allclose(up["coef"], ls.coef, rtol=1e-6)
+    np.testing.assert_allclose(up["edge_feat"], ls.edge_feat, rtol=1e-6)
+    np.testing.assert_array_equal(up["renumber"], ls.renumber)
+    np.testing.assert_allclose(up["node_feat"], feat_table[ls.renumber],
+                               rtol=1e-6)
+    # sink-row coef-0 convention on the COO padding
+    src, dst, coef = map(np.asarray, (ps.src, ps.dst, ps.coef))
+    assert (coef[e:] == 0).all()
+    assert (src[e:] == n_pad - 1).all() and (dst[e:] == n_pad - 1).all()
+    # node-side padding: mask 0, renumber -1 (scatter-drop sentinel)
+    mask, ren = np.asarray(ps.node_mask), np.asarray(ps.renumber)
+    assert (mask[:n] == 1).all() and (mask[n:] == 0).all()
+    assert (ren[n:] == -1).all()
+    # ELL padding lanes are killed by coef 0 and conserve the edge weights
+    ncoef = np.asarray(ps.neigh_coef)
+    assert (ncoef[n:] == 0).all()
+    np.testing.assert_allclose(ncoef.sum(), ls.coef.sum(), rtol=1e-5)
+
+
+def check_choose_bucket_smallest_fit(n: int, e: int, k: int, buckets):
+    """choose_bucket returns the FIRST (smallest) fitting bucket and no
+    earlier bucket fits."""
+    b = choose_bucket(n, e, k, buckets)
+    i = buckets.index(b)
+    assert n <= b[0] and e <= b[1] and k <= b[2]
+    for earlier in buckets[:i]:
+        assert not (n <= earlier[0] and e <= earlier[1] and k <= earlier[2])
+
+
+def check_bucket_monotone(dims, buckets):
+    """choose_bucket is monotone on a nested bucket chain, and the batch
+    bucket covers (is >= in chain order than) every member's own bucket."""
+    order = {b: i for i, b in enumerate(buckets)}
+    bb = choose_bucket_batch(dims, buckets)
+    for d in dims:
+        own = choose_bucket(*d, buckets)
+        assert order[bb] >= order[own]
+        assert d[0] <= bb[0] and d[1] <= bb[1] and d[2] <= bb[2]

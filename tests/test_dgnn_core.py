@@ -1,23 +1,27 @@
-"""The paper's correctness contract: every dataflow engine (baseline /
-O1 / V1 / V2) computes identical outputs for the same weights + stream."""
+"""The paper's correctness contract on the REAL synthetic datasets: every
+dataflow engine computes identical outputs for the same weights + stream.
+
+The mode lists and comparison loop live in tests/harness.py (shared with
+the random-stream differential tests in test_differential.py)."""
 import jax
 import numpy as np
 import pytest
 
+import harness
 from repro.configs.dgnn import BC_ALPHA, DGNN_CONFIGS
-from repro.core import build_model, run_batched, run_stream, stack_time
+from repro.core import (
+    build_model,
+    init_states_batched,
+    run_batched,
+    run_stream,
+    stack_time,
+)
 from repro.graph import (
     generate_temporal_graph,
     pad_snapshot,
     renumber_and_normalize,
     slice_snapshots,
 )
-
-MODES = {
-    "evolvegcn": ["baseline", "o1", "v1", "v3"],   # v3 -> documented v1 fallback
-    "gcrn-m2": ["baseline", "o1", "v2", "v3"],
-    "stacked-gcn-gru": ["baseline", "o1", "v1", "v2", "v3"],
-}
 
 
 @pytest.fixture(scope="module")
@@ -35,17 +39,8 @@ def test_dataflow_modes_identical(stream, name):
     cfg = DGNN_CONFIGS[name]
     model = build_model(cfg, n_global=tg.n_global_nodes)
     params = model.init(jax.random.PRNGKey(0))
-    outs = {}
-    for mode in MODES[name]:
-        st = model.init_state(params, mode=mode)
-        _, o = run_stream(model, params, st, sT, mode=mode)
-        outs[mode] = np.asarray(o)
-    base = outs["baseline"]
-    assert np.isfinite(base).all()
-    assert np.abs(base).max() > 0  # non-degenerate
-    for mode, o in outs.items():
-        np.testing.assert_allclose(o, base, atol=2e-5,
-                                   err_msg=f"{name} mode={mode}")
+    outs = harness.run_all_modes(model, params, sT, harness.MODES[name])
+    harness.assert_modes_match(outs, atol=2e-5, label=name)
 
 
 @pytest.mark.parametrize("name", sorted(DGNN_CONFIGS))
@@ -64,19 +59,20 @@ def test_recurrence_actually_carries_state(stream, name):
     assert not np.allclose(np.asarray(o1)[-1], np.asarray(o2)[0])
 
 
-def test_batched_streams(stream):
+@pytest.mark.parametrize("mode", ["baseline", "v3"])
+def test_batched_streams(stream, mode):
+    """run_batched == per-stream run_stream on identical replicated rows;
+    mode="v3" takes the single-launch batched stream kernel."""
     tg, sT = stream
     cfg = DGNN_CONFIGS["gcrn-m2"]
     model = build_model(cfg, n_global=tg.n_global_nodes)
     params = model.init(jax.random.PRNGKey(0))
     B = 3
     sTB = jax.tree.map(lambda a: np.stack([a] * B, axis=1), sT)
-    states = jax.tree.map(
-        lambda a: np.stack([np.asarray(a)] * B, axis=0),
-        model.init_state(params, mode="baseline"))
-    _, oB = run_batched(model, params, states, sTB, mode="baseline")
-    st = model.init_state(params, mode="baseline")
-    _, o1 = run_stream(model, params, st, sT, mode="baseline")
+    states = init_states_batched(model, params, B, mode=mode)
+    _, oB = run_batched(model, params, states, sTB, mode=mode)
+    st = model.init_state(params, mode=mode)
+    _, o1 = run_stream(model, params, st, sT, mode=mode)
     # identical streams -> identical outputs per lane
     for b in range(B):
         np.testing.assert_allclose(np.asarray(oB)[:, b], np.asarray(o1),

@@ -150,30 +150,7 @@ def test_auto_padding_ragged_n(n_r):
     np.testing.assert_allclose(got2, want2, atol=2e-4)
 
 
-def _stream(key, T, n, k, e, din, n_global):
-    """Random (T, ...) snapshot stream with valid renumber tables: lanes
-    with nonzero coef reference real (masked-in) local nodes, matching the
-    to_ell contract the kernels assume."""
-    rng = np.random.default_rng(int(jax.random.randint(key, (), 0, 2**31 - 1)))
-    arrs = {k_: [] for k_ in ("idx", "coef", "eidx", "x", "ren", "mask")}
-    for _ in range(T):
-        nr = int(rng.integers(max(n // 3, 1), n + 1))
-        idx = rng.integers(0, nr, (n, k)).astype(np.int32)
-        coef = (rng.uniform(size=(n, k)) *
-                (rng.uniform(size=(n, k)) > 0.4)).astype(np.float32)
-        coef[nr:] = 0.0
-        x = rng.normal(size=(n, din)).astype(np.float32)
-        x[nr:] = 0.0
-        ren = np.full(n, -1, np.int32)
-        ren[:nr] = rng.permutation(n_global)[:nr]
-        mask = np.zeros(n, np.float32)
-        mask[:nr] = 1.0
-        for k_, v in zip(("idx", "coef", "eidx", "x", "ren", "mask"),
-                         (idx, coef, rng.integers(0, e, (n, k)).astype(np.int32),
-                          x, ren, mask)):
-            arrs[k_].append(v)
-    return tuple(np.stack(arrs[k_]) for k_ in ("idx", "coef", "eidx", "x",
-                                               "ren", "mask"))
+from harness import random_ell_stream, random_ell_stream_batch
 
 
 @pytest.mark.parametrize("T,n,k,din,h", [(4, 128, 8, 32, 64), (6, 256, 16, 64, 128)])
@@ -181,8 +158,7 @@ def _stream(key, T, n, k, e, din, n_global):
 def test_gcrn_stream_kernel(T, n, k, din, h, edge):
     """Time-fused V3 stream kernel == per-step scan oracle (GCRN)."""
     e, G = 4 * n, 2 * n + 17
-    idx, coef, eidx, x, ren, mask = _stream(jax.random.PRNGKey(11), T, n, k,
-                                            e, din, G)
+    idx, coef, eidx, x, ren, mask = random_ell_stream(11, T, n, k, e, din, G)
     ks = jax.random.split(jax.random.PRNGKey(12), 6)
     wx = _rand(ks[0], (din, 4 * h)) * 0.2
     wh = _rand(ks[1], (h, 4 * h)) * 0.2
@@ -203,8 +179,7 @@ def test_gcrn_stream_kernel(T, n, k, din, h, edge):
 def test_stacked_stream_kernel(T, n, k, din, dmid, h, edge):
     """Time-fused V3 stream kernel == per-step scan oracle (stacked)."""
     e, G = 4 * n, 2 * n + 5
-    idx, coef, eidx, x, ren, mask = _stream(jax.random.PRNGKey(13), T, n, k,
-                                            e, din, G)
+    idx, coef, eidx, x, ren, mask = random_ell_stream(13, T, n, k, e, din, G)
     ks = jax.random.split(jax.random.PRNGKey(14), 7)
     wg = _rand(ks[0], (din, dmid)) * 0.2
     bg = _rand(ks[1], (dmid,)) * 0.1
@@ -225,8 +200,7 @@ def test_stream_kernel_ragged_n():
     """V3 auto-pads a node count that is not a tile multiple."""
     T, n, k, din, h = 4, 200, 8, 32, 64
     e, G = 4 * n, 600
-    idx, coef, eidx, x, ren, mask = _stream(jax.random.PRNGKey(15), T, n, k,
-                                            e, din, G)
+    idx, coef, eidx, x, ren, mask = random_ell_stream(15, T, n, k, e, din, G)
     ks = jax.random.split(jax.random.PRNGKey(16), 5)
     wx = _rand(ks[0], (din, 4 * h)) * 0.2
     wh = _rand(ks[1], (h, 4 * h)) * 0.2
@@ -240,6 +214,52 @@ def test_stream_kernel_ragged_n():
     assert got[0].shape == (T, n, h)
     for g, w in zip(got, want):
         np.testing.assert_allclose(g, w, atol=2e-4)
+
+
+@pytest.mark.parametrize("B,T,n,k,din,h", [(3, 4, 128, 8, 32, 64)])
+@pytest.mark.parametrize("edge", [False, True])
+def test_gcrn_stream_kernel_batched(B, T, n, k, din, h, edge):
+    """Batched time-fused V3: B streams in one launch == vmapped oracle ==
+    per-stream unbatched launches row-sliced (GCRN)."""
+    e, G = 4 * n, 2 * n + 17
+    S = random_ell_stream_batch(21, B, T, n, k, e, din, G)
+    ks = jax.random.split(jax.random.PRNGKey(22), 6)
+    wx = _rand(ks[0], (din, 4 * h)) * 0.2
+    wh = _rand(ks[1], (h, 4 * h)) * 0.2
+    bb = _rand(ks[2], (4 * h,)) * 0.1
+    h0 = _rand(ks[3], (B, G, h)) * 0.5
+    c0 = _rand(ks[4], (B, G, h)) * 0.5
+    em = _rand(ks[5], (B, T, e, din)) if edge else None
+    got = ops.dgnn_stream_steps_batched(*S, h0, c0, wx, wh, bb, em, tn=128)
+    want = ref.gcrn_stream_batched_ref(*[jnp.asarray(s) for s in S], h0, c0,
+                                       wx, wh, bb, em)
+    for g, w, nm in zip(got, want, ("outs", "h_final", "c_final")):
+        np.testing.assert_allclose(g, w, atol=2e-4, err_msg=nm)
+    for b in range(B):
+        solo = ops.dgnn_stream_steps(*[s[b] for s in S], h0[b], c0[b],
+                                     wx, wh, bb,
+                                     None if em is None else em[b], tn=128)
+        for g, s_ in zip(got, solo):
+            np.testing.assert_allclose(np.asarray(g)[b], s_, atol=2e-4)
+
+
+def test_stacked_stream_kernel_batched():
+    """Batched time-fused V3 == vmapped oracle (stacked GCN->GRU)."""
+    B, T, n, k, din, dmid, h = 2, 5, 128, 8, 32, 48, 64
+    e, G = 4 * n, 2 * n + 5
+    S = random_ell_stream_batch(23, B, T, n, k, e, din, G)
+    ks = jax.random.split(jax.random.PRNGKey(24), 7)
+    wg = _rand(ks[0], (din, dmid)) * 0.2
+    bg = _rand(ks[1], (dmid,)) * 0.1
+    wx = _rand(ks[2], (dmid, 3 * h)) * 0.2
+    wh = _rand(ks[3], (h, 3 * h)) * 0.2
+    bb = _rand(ks[4], (3 * h,)) * 0.1
+    h0 = _rand(ks[5], (B, G, h)) * 0.5
+    got = ops.stacked_stream_steps_batched(*S, h0, wg, bg, wx, wh, bb, tn=128)
+    want = ref.stacked_stream_batched_ref(*[jnp.asarray(s) for s in S], h0,
+                                          wg, bg, wx, wh, bb)
+    for g, w, nm in zip(got, want, ("outs", "h_final")):
+        np.testing.assert_allclose(g, w, atol=2e-4, err_msg=nm)
 
 
 def test_kernel_vs_segment_sum_production_path():

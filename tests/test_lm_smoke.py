@@ -1,5 +1,10 @@
 """Per-architecture smoke tests: reduced same-family config, one forward/
 train step on CPU, output shapes + no NaNs; decode where supported."""
+
+import pytest as _pytest
+
+pytestmark = _pytest.mark.slow  # LM-side e2e: excluded from the fast CI lane
+
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -4,6 +4,11 @@ These need >1 XLA device, so each runs in a subprocess with
 XLA_FLAGS=--xla_force_host_platform_device_count=8 (per the assignment,
 the main test process must keep seeing 1 device).
 """
+
+import pytest as _pytest
+
+pytestmark = _pytest.mark.slow  # LM-side e2e: excluded from the fast CI lane
+
 import os
 import subprocess
 import sys

@@ -4,6 +4,11 @@ Guards the EXPERIMENTS §Perf claims: flash-train, bwd_bf16, lowmem norm,
 fused conv, ssd_bf16 change performance characteristics, not math (within
 bf16 rounding).
 """
+
+import pytest as _pytest
+
+pytestmark = _pytest.mark.slow  # LM-side e2e: excluded from the fast CI lane
+
 import dataclasses
 
 import jax

@@ -10,8 +10,10 @@ pytest.importorskip(
            "abort collection, when absent")
 from hypothesis import given, settings, strategies as st
 
+import harness
 from repro.graph.coo import COOSnapshot, TemporalGraph, slice_snapshots
 from repro.graph.csr import max_in_degree, renumber_and_normalize, to_ell
+from repro.graph.padding import choose_bucket
 from repro.kernels import ref
 from repro.optim import dequantize_blockwise, quantize_blockwise
 
@@ -59,6 +61,74 @@ def test_ell_spmm_equals_segment_sum(snap):
     want = np.zeros_like(x)
     np.add.at(want, ls.dst, ls.coef[:, None] * x[ls.src])
     np.testing.assert_allclose(got, want, atol=1e-4)
+
+
+@given(coo_snapshots(), st.integers(0, 64), st.integers(0, 128),
+       st.integers(0, 8))
+def test_pad_unpad_roundtrip(snap, dn, de, dk):
+    """pad_snapshot -> unpad_snapshot is the identity on the live data for
+    ANY fitting bucket, and the padding obeys the sink-row coef-0
+    convention (checkers shared with test_differential.py)."""
+    ls = renumber_and_normalize(snap)
+    bucket = (ls.n_nodes + dn, ls.src.shape[0] + de,
+              max(max_in_degree(ls), 1) + dk)
+    feat_table = np.random.default_rng(0).normal(
+        size=(256, 5)).astype(np.float32)  # covers every global id (< 200)
+    harness.check_pad_unpad_roundtrip(ls, feat_table, bucket)
+
+
+@st.composite
+def bucket_chains(draw):
+    """Nested (componentwise strictly increasing) bucket chains — the shape
+    serve buckets are configured in (smallest-first, each covering the
+    previous), for which choose_bucket is monotone."""
+    m = draw(st.integers(1, 4))
+    n = draw(st.integers(1, 64))
+    e = draw(st.integers(1, 256))
+    k = draw(st.integers(1, 16))
+    chain = []
+    for _ in range(m):
+        chain.append((n, e, k))
+        n += draw(st.integers(1, 64))
+        e += draw(st.integers(1, 256))
+        k += draw(st.integers(1, 16))
+    return tuple(chain)
+
+
+@given(bucket_chains(), st.data())
+def test_choose_bucket_smallest_fit_and_monotone(chain, data):
+    last = chain[-1]
+    n = data.draw(st.integers(1, last[0]), label="n")
+    e = data.draw(st.integers(1, last[1]), label="e")
+    k = data.draw(st.integers(1, last[2]), label="k")
+    harness.check_choose_bucket_smallest_fit(n, e, k, chain)
+    # bucket monotonicity: growing the snapshot never picks an earlier
+    # (smaller) bucket of the chain
+    n2 = data.draw(st.integers(n, last[0]), label="n2")
+    e2 = data.draw(st.integers(e, last[1]), label="e2")
+    k2 = data.draw(st.integers(k, last[2]), label="k2")
+    order = {b: i for i, b in enumerate(chain)}
+    assert (order[choose_bucket(n2, e2, k2, chain)]
+            >= order[choose_bucket(n, e, k, chain)])
+
+
+@given(bucket_chains(), st.data())
+def test_choose_bucket_batch_covers_every_member(chain, data):
+    """The multi-tenant chunk bucket covers every member's dims and is >=
+    every member's individual bucket in chain order."""
+    last = chain[-1]
+    m = data.draw(st.integers(1, 5), label="batch")
+    dims = [(data.draw(st.integers(1, last[0])),
+             data.draw(st.integers(1, last[1])),
+             data.draw(st.integers(1, last[2]))) for _ in range(m)]
+    harness.check_bucket_monotone(dims, chain)
+
+
+@given(bucket_chains())
+def test_choose_bucket_overflow_raises(chain):
+    last = chain[-1]
+    with pytest.raises(ValueError, match="no bucket fits"):
+        choose_bucket(last[0] + 1, 1, 1, chain)
 
 
 @given(st.integers(0, 2**31), st.integers(1, 4))

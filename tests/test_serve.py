@@ -121,6 +121,108 @@ def test_snapshot_server_no_fit_bucket_raises():
         srv.run(params, state, snaps)
 
 
+def _offline_outputs(cfg, tg, ft, params, snaps,
+                     n_pad=640, e_pad=4096, k_max=64):
+    """Ground truth: the baseline scan over one client's padded stream."""
+    model = build_model(cfg, n_global=tg.n_global_nodes)
+    pads = [pad_snapshot(renumber_and_normalize(s), ft, n_pad, e_pad, k_max)
+            for s in snaps]
+    st = model.init_state(params, mode="baseline")
+    return run_stream(model, params, st, stack_time(pads), mode="baseline")
+
+
+def test_run_multi_batched_v3_matches_per_stream_offline():
+    """Multi-tenant batched V3: three clients with different streams and
+    UNEVEN lengths (forcing no-op tail snapshots inside batched chunks).
+    Every client's outputs must equal its own offline baseline, in its own
+    snapshot order, and its final state must be undisturbed by the other
+    tenants and by the no-op tails."""
+    tg, ft = generate_temporal_graph(UCI)
+    all_snaps = slice_snapshots(tg, 1.0)
+    streams = {"a": all_snaps[:6], "b": all_snaps[4:9], "c": all_snaps[7:10]}
+    srv = SnapshotServer(GCRN_M2, ft, n_global=tg.n_global_nodes, mode="v3",
+                         stream_chunk=4)  # 6 -> 4 + tail-padded chunk of 2
+    params, _ = srv.init(jax.random.PRNGKey(0))
+    states = {sid: srv.model.init_state(params, mode="v3") for sid in streams}
+    states, outs, stats = srv.run_multi(params, states, streams)
+    assert stats.mean_latency_ms > 0
+    assert len(stats.preprocess_ms) == sum(len(s) for s in streams.values())
+    for sid, snaps in streams.items():
+        off_state, off = _offline_outputs(GCRN_M2, tg, ft, params, snaps,
+                                          srv.n_pad, srv.e_pad, srv.k_max)
+        assert len(outs[sid]) == len(snaps)
+        for t in range(len(snaps)):
+            np.testing.assert_allclose(outs[sid][t], np.asarray(off)[t],
+                                       atol=1e-5, err_msg=f"{sid} t={t}")
+        np.testing.assert_allclose(np.asarray(states[sid]["h"]),
+                                   np.asarray(off_state["h"]), atol=1e-5,
+                                   err_msg=f"{sid} final state")
+
+
+def test_run_multi_bucketed_same_bucket_streams_share_launch():
+    """With bucketed padding, same-bucket chunks from different clients
+    batch into one V3 launch while off-bucket clients run separately —
+    outputs stay offline-identical on the real-node rows either way."""
+    tg, ft = generate_temporal_graph(UCI)
+    all_snaps = slice_snapshots(tg, 1.0)
+    streams = {"a": all_snaps[:4], "b": all_snaps[2:6], "c": all_snaps[5:9]}
+    buckets = ((256, 1024, 48), (640, 4096, 64))
+    srv = SnapshotServer(GCRN_M2, ft, n_global=tg.n_global_nodes, mode="v3",
+                         stream_chunk=4, buckets=buckets)
+    params, _ = srv.init(jax.random.PRNGKey(0))
+    states = {sid: srv.model.init_state(params, mode="v3") for sid in streams}
+    states, outs, _ = srv.run_multi(params, states, streams)
+    model = build_model(GCRN_M2, n_global=tg.n_global_nodes)
+    for sid, snaps in streams.items():
+        pads = [pad_snapshot(renumber_and_normalize(s), ft, 640, 4096, 64)
+                for s in snaps]
+        st = model.init_state(params, mode="baseline")
+        _, off = run_stream(model, params, st, stack_time(pads),
+                            mode="baseline")
+        for t, s in enumerate(snaps):
+            nr = renumber_and_normalize(s).n_nodes
+            np.testing.assert_allclose(outs[sid][t][:nr],
+                                       np.asarray(off)[t][:nr], atol=1e-5,
+                                       err_msg=f"{sid} t={t}")
+
+
+def test_run_multi_producer_exception_propagates():
+    """A no-fit snapshot in ONE tenant's stream must raise out of
+    run_multi (not hang the round loop) and leave the producer threads
+    joinable — the multi-tenant edition of the producer-crash regression."""
+    import pytest
+
+    tg, ft = generate_temporal_graph(UCI)
+    all_snaps = slice_snapshots(tg, 1.0)
+    streams = {"ok": all_snaps[:3], "bad": all_snaps[3:6]}
+    srv = SnapshotServer(GCRN_M2, ft, n_global=tg.n_global_nodes, mode="v3",
+                         buckets=((8, 8, 2),))  # nothing fits
+    params, _ = srv.init(jax.random.PRNGKey(0))
+    states = {sid: srv.model.init_state(params, mode="v3") for sid in streams}
+    with pytest.raises(ValueError, match="no bucket fits"):
+        srv.run_multi(params, states, streams)
+
+
+def test_run_multi_evolvegcn_falls_back_to_per_step():
+    """EvolveGCN has no batched stream kernel; run_multi must take the
+    round-robin per-snapshot path and still match each client's offline
+    baseline (interleaved multi-client ordering preserved)."""
+    cfg = DGNN_CONFIGS["evolvegcn"]
+    tg, ft = generate_temporal_graph(UCI)
+    all_snaps = slice_snapshots(tg, 1.0)
+    streams = {"x": all_snaps[:4], "y": all_snaps[1:5]}
+    srv = SnapshotServer(cfg, ft, n_global=tg.n_global_nodes, mode="v3")
+    params, _ = srv.init(jax.random.PRNGKey(0))
+    states = {sid: srv.model.init_state(params, mode="v3") for sid in streams}
+    states, outs, _ = srv.run_multi(params, states, streams)
+    for sid, snaps in streams.items():
+        _, off = _offline_outputs(cfg, tg, ft, params, snaps)
+        assert len(outs[sid]) == len(snaps)
+        for t in range(len(snaps)):
+            np.testing.assert_allclose(outs[sid][t], np.asarray(off)[t],
+                                       atol=1e-5, err_msg=f"{sid} t={t}")
+
+
 def test_lm_generate_greedy_deterministic():
     import jax.numpy as jnp
 
