@@ -37,6 +37,21 @@ def recurrent_state_hbm_bytes(T: int, n_global: int, hidden: int,
     return transfers * per_transfer
 
 
+def evolving_weights_hbm_bytes(T: int, dims, *, time_fused: bool) -> int:
+    """HBM bytes moved for EvolveGCN's evolving weight matrices per stream.
+
+    Per-step engines (baseline/o1/v1) round-trip every layer's W_l^t
+    through HBM each snapshot (the per-step weight-update bottleneck of
+    arXiv:2210.03900): 2T transfers per stream. The weights-resident V3
+    kernel keeps the W_l in VMEM scratch with the matrix-GRU evolution
+    in-kernel, so each crosses HBM exactly twice (primed load + evolved
+    drain): the same T× reduction the node-state kernels get.
+    """
+    per_transfer = sum(di * do * 4 for di, do in dims)
+    transfers = 2 if time_fused else 2 * T
+    return transfers * per_transfer
+
+
 def run() -> list[tuple[str, float, str]]:
     rows = []
     tg, ft, snaps, sT = load_stream(BC_ALPHA, limit=2)
@@ -54,7 +69,9 @@ def run() -> list[tuple[str, float, str]]:
     t2 = time_step_fn(f2, x, h, wx, wh, b)
     rows.append(("kernel/fused_gru_xla_ref", t2 * 1e3, "gates=3-in-1 matmul"))
     rows.extend(run_stream_vs_per_step())
+    rows.extend(run_evolve_stream_vs_per_step())
     rows.extend(run_batched_streams())
+    rows.extend(run_evolve_batched_streams())
     return rows
 
 
@@ -117,6 +134,162 @@ def run_stream_vs_per_step(t_steps: int = 8, hidden: int = 128
     return rows
 
 
+def _random_evolve_stream(rngs, t_steps: int, n: int, k: int, din: int):
+    """Random padded ELL stream (all-live) for the EvolveGCN kernel rows."""
+    idx = rngs.integers(0, n, (t_steps, n, k)).astype(np.int32)
+    coef = (rngs.uniform(size=(t_steps, n, k)) *
+            (rngs.uniform(size=(t_steps, n, k)) > 0.4)).astype(np.float32)
+    x = rngs.normal(size=(t_steps, n, din)).astype(np.float32)
+    mask = np.ones((t_steps, n), np.float32)
+    live = np.ones(t_steps, np.int32)
+    return idx, coef, x, mask, live
+
+
+def _evolve_params(rngs, dims):
+    ws = [jnp.asarray(rngs.normal(size=d) * 0.1, jnp.float32) for d in dims]
+    bg = [jnp.zeros((d[1],), jnp.float32) for d in dims]
+    gwx = [jnp.asarray(rngs.normal(size=(d[0], 3 * d[0])) * 0.1, jnp.float32)
+           for d in dims]
+    gwh = [jnp.asarray(rngs.normal(size=(d[0], 3 * d[0])) * 0.1, jnp.float32)
+           for d in dims]
+    gb = [jnp.zeros((3 * d[0],), jnp.float32) for d in dims]
+    return ws, bg, gwx, gwh, gb
+
+
+def run_evolve_stream_vs_per_step(t_steps: int = 8, n: int = 640,
+                                  k: int = 32, din: int = 64,
+                                  hidden: int = 128, out: int = 64
+                                  ) -> list[tuple[str, float, str]]:
+    """Per-step v1 schedule vs weights-resident V3 on the same EvolveGCN
+    stream.
+
+    The per-step row scans the overlapped v1 schedule (GCN + matrix-GRU
+    per snapshot) with the evolving weights re-entering the device every
+    step; the V3 row is ONE stream-kernel launch with the W_l
+    VMEM-resident and the evolution in-kernel. On CPU BOTH rows route to
+    the XLA oracle (set_force_ref) so neither measures the Pallas
+    interpreter; wall times then mostly coincide and the structural
+    number — the evolving-weights HBM estimate, a T× reduction on TPU —
+    is the signal, the family's edition of the paper's BRAM win.
+    """
+    from repro.kernels import ops
+
+    dims = [(din, hidden), (hidden, out)]
+    rngs = np.random.default_rng(5)
+    stream = _random_evolve_stream(rngs, t_steps, n, k, din)
+    ws, bg, gwx, gwh, gb = _evolve_params(rngs, dims)
+
+    def per_step(weights):  # v1 schedule: weights cross HBM every step
+        return ref.evolve_stream_ref(*stream, weights, bg, gwx, gwh, gb)
+
+    def v3_stream(weights):
+        return ops.evolve_stream_steps(*stream, weights, bg, gwx, gwh, gb)
+
+    bytes_v1 = evolving_weights_hbm_bytes(t_steps, dims, time_fused=False)
+    bytes_v3 = evolving_weights_hbm_bytes(t_steps, dims, time_fused=True)
+    rows = []
+    on_cpu = jax.default_backend() != "tpu"
+    ops.set_force_ref(on_cpu)
+    try:
+        # the per-step row is ALWAYS the XLA scan oracle — that IS the v1
+        # schedule's dataflow (weights re-entering the device each step);
+        # only the v3 row runs the Pallas kernel (on TPU).
+        t_v1 = time_step_fn(jax.jit(per_step), ws, iters=5)
+        rows.append((f"kernel/evolve_per_step_v1_T{t_steps}", t_v1 * 1e3,
+                     f"path=xla_ref,weights_hbm_bytes={bytes_v1} "
+                     "(all W_l in/out every step)"))
+        t_v3 = time_step_fn(jax.jit(v3_stream), ws, iters=5)
+        rows.append((f"kernel/evolve_weights_resident_v3_T{t_steps}",
+                     t_v3 * 1e3,
+                     f"path={'xla_ref' if on_cpu else 'pallas'},"
+                     f"weights_hbm_bytes={bytes_v3},"
+                     f"weights_hbm_reduction={bytes_v1 // bytes_v3}x"))
+    finally:
+        ops.set_force_ref(False)
+    return rows
+
+
+def _time_batched_vs_sequential(one, bat, singles, iters: int):
+    """Shared scaffold for the 1-batched-dispatch-vs-B-sequential rows:
+    warm/compile both jitted programs, then median wall time of B
+    sequential dispatches vs ONE batched dispatch. On CPU the kernel
+    wrappers route to the XLA oracle for the duration (set_force_ref) —
+    interpret-mode Pallas wall time would measure the interpreter, not
+    the dataflow. Returns (t_seq_ms, t_batched_ms, path)."""
+    import time as _time
+
+    from repro.kernels import ops
+
+    on_cpu = jax.default_backend() != "tpu"
+    ops.set_force_ref(on_cpu)
+    try:
+        for s in singles:  # warmup/compile
+            jax.block_until_ready(one(*s))
+        jax.block_until_ready(bat())
+        ts, tb = [], []
+        for _ in range(iters):
+            t0 = _time.perf_counter()
+            outs = [one(*s) for s in singles]
+            jax.block_until_ready(outs)
+            ts.append(_time.perf_counter() - t0)
+            t0 = _time.perf_counter()
+            jax.block_until_ready(bat())
+            tb.append(_time.perf_counter() - t0)
+    finally:
+        ops.set_force_ref(False)
+    return (float(np.median(ts)) * 1e3, float(np.median(tb)) * 1e3,
+            "xla_ref" if on_cpu else "pallas")
+
+
+def _dispatch_rows(family: str, B: int, t_steps: int, t_seq: float,
+                   t_bat: float, path: str) -> list[tuple[str, float, str]]:
+    total_snaps = B * t_steps
+    return [
+        (f"kernel/{family}_v3_sequential_B{B}_T{t_steps}", t_seq * 1e3,
+         f"dispatches={B},path={path},"
+         f"throughput={total_snaps / (t_seq / 1e3):.0f}_snap/s"),
+        (f"kernel/{family}_v3_batched_B{B}_T{t_steps}", t_bat * 1e3,
+         f"dispatches=1,path={path},"
+         f"throughput={total_snaps / (t_bat / 1e3):.0f}_snap/s,"
+         f"speedup_vs_sequential={t_seq / t_bat:.2f}x"),
+    ]
+
+
+def run_evolve_batched_streams(B: int = 8, t_steps: int = 4, n: int = 64,
+                               k: int = 8, din: int = 16, hidden: int = 32,
+                               out: int = 16, iters: int = 11
+                               ) -> list[tuple[str, float, str]]:
+    """Batched weights-resident V3 (ONE dispatch, B EvolveGCN streams)
+    vs B separate single-stream dispatches — the multi-tenant win for the
+    weights-evolved family, in the same small-snapshot regime as the
+    GCRN rows. Streams carry DISTINCT evolving weights (each tenant's
+    recurrent state) and distinct inputs; GRU params are shared and
+    loaded once per launch. The structural numbers (dispatches B -> 1,
+    weight-state transfers 2/stream) carry to TPU.
+    """
+    from repro.kernels import ops
+
+    dims = [(din, hidden), (hidden, out)]
+    rngs = np.random.default_rng(6)
+    streams = [_random_evolve_stream(rngs, t_steps, n, k, din)
+               for _ in range(B)]
+    single = [tuple(jnp.asarray(a) for a in s) for s in streams]
+    batch = tuple(jnp.asarray(np.stack([s[i] for s in streams]))
+                  for i in range(5))
+    _, bg, gwx, gwh, gb = _evolve_params(rngs, dims)
+    wsB = [jnp.asarray(rngs.normal(size=(B,) + d) * 0.1, jnp.float32)
+           for d in dims]
+
+    one = jax.jit(lambda s, w: ops.evolve_stream_steps(
+        *s, w, bg, gwx, gwh, gb))
+    bat = jax.jit(lambda w: ops.evolve_stream_steps_batched(
+        *batch, w, bg, gwx, gwh, gb))
+    t_seq, t_bat, path = _time_batched_vs_sequential(
+        one, lambda: bat(wsB),
+        [(single[i], [w[i] for w in wsB]) for i in range(B)], iters)
+    return _dispatch_rows("evolve", B, t_steps, t_seq, t_bat, path)
+
+
 def run_batched_streams(B: int = 8, t_steps: int = 4, n: int = 64,
                         k: int = 8, din: int = 16, hidden: int = 32,
                         n_global: int = 200, iters: int = 11
@@ -130,14 +303,10 @@ def run_batched_streams(B: int = 8, t_steps: int = 4, n: int = 64,
     dispatches per chunk and B short scans; with the batch grid axis they
     cost one dispatch whose per-step work is B× wider. Streams are B
     distinct random streams (identical inputs would let XLA CSE collapse
-    the sequential program and fake the comparison). On CPU the kernel
-    wrappers route to the pure-jnp oracle (set_force_ref) — interpret-mode
-    Pallas wall time would measure the interpreter, not the dataflow; the
-    structural numbers (dispatches B -> 1, recurrent-state HBM transfers
-    2/stream either way) carry over to the TPU build.
+    the sequential program and fake the comparison); the structural
+    numbers (dispatches B -> 1, recurrent-state HBM transfers 2/stream
+    either way) carry over to the TPU build.
     """
-    import time as _time
-
     from repro.kernels import ops
 
     rngs = np.random.default_rng(4)
@@ -165,40 +334,14 @@ def run_batched_streams(B: int = 8, t_steps: int = 4, n: int = 64,
     c0B = jnp.asarray(rngs.normal(size=(B, n_global, hidden)) * 0.1,
                       jnp.float32)
 
-    on_cpu = jax.default_backend() != "tpu"
-    ops.set_force_ref(on_cpu)
-    try:
-        one = jax.jit(lambda s, hh, cc: ops.dgnn_stream_steps(
-            *s, hh, cc, wx, wh, b))
-        bat = jax.jit(lambda hB, cB: ops.dgnn_stream_steps_batched(
-            *batch, hB, cB, wx, wh, b))
-        for i in range(B):  # warmup/compile
-            jax.block_until_ready(one(single[i], h0B[i], c0B[i]))
-        jax.block_until_ready(bat(h0B, c0B))
-        ts, tb = [], []
-        for _ in range(iters):
-            t0 = _time.perf_counter()
-            outs = [one(single[i], h0B[i], c0B[i]) for i in range(B)]
-            jax.block_until_ready(outs)
-            ts.append(_time.perf_counter() - t0)
-            t0 = _time.perf_counter()
-            jax.block_until_ready(bat(h0B, c0B))
-            tb.append(_time.perf_counter() - t0)
-    finally:
-        ops.set_force_ref(False)
-    t_seq = float(np.median(ts)) * 1e3  # ms
-    t_bat = float(np.median(tb)) * 1e3  # ms
-    total_snaps = B * t_steps
-    path = "xla_ref" if on_cpu else "pallas"
-    return [
-        (f"kernel/gcrn_v3_sequential_B{B}_T{t_steps}", t_seq * 1e3,
-         f"dispatches={B},path={path},"
-         f"throughput={total_snaps / (t_seq / 1e3):.0f}_snap/s"),
-        (f"kernel/gcrn_v3_batched_B{B}_T{t_steps}", t_bat * 1e3,
-         f"dispatches=1,path={path},"
-         f"throughput={total_snaps / (t_bat / 1e3):.0f}_snap/s,"
-         f"speedup_vs_sequential={t_seq / t_bat:.2f}x"),
-    ]
+    one = jax.jit(lambda s, hh, cc: ops.dgnn_stream_steps(
+        *s, hh, cc, wx, wh, b))
+    bat = jax.jit(lambda hB, cB: ops.dgnn_stream_steps_batched(
+        *batch, hB, cB, wx, wh, b))
+    t_seq, t_bat, path = _time_batched_vs_sequential(
+        one, lambda: bat(h0B, c0B),
+        [(single[i], h0B[i], c0B[i]) for i in range(B)], iters)
+    return _dispatch_rows("gcrn", B, t_steps, t_seq, t_bat, path)
 
 
 if __name__ == "__main__":

@@ -1,10 +1,11 @@
 """End-to-end DGNN serving driver (the paper's deployment scenario).
 
-Runs both base models (EvolveGCN -> V1, GCRN-M2 -> V2/V3) over both
+Runs both base models (EvolveGCN -> V1/V3, GCRN-M2 -> V2/V3) over both
 datasets (BC-Alpha, UCI), with the paper's ablation levels, and prints the
 Table IV / Fig. 6 style comparison measured on this host. V3 is the
 time-fused stream engine: the server batches snapshots into chunks and the
-recurrent state stays in VMEM across each chunk. Batched multi-stream
+recurrent state — the node store for GCRN, the evolving weight matrices
+for EvolveGCN — stays in VMEM across each chunk. Batched multi-stream
 serving is included (--streams N).
 
     PYTHONPATH=src python examples/serve_stream.py [--snapshots 32] [--streams 4]
@@ -33,7 +34,7 @@ def main():
     ap.add_argument("--streams", type=int, default=4)
     args = ap.parse_args()
 
-    pairs = [("evolvegcn", ("v1",)), ("gcrn-m2", ("v2", "v3"))]
+    pairs = [("evolvegcn", ("v1", "v3")), ("gcrn-m2", ("v2", "v3"))]
     for ds in (BC_ALPHA, UCI):
         tg, ft = generate_temporal_graph(ds)
         snaps = slice_snapshots(tg, 1.0)[: args.snapshots]

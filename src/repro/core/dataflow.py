@@ -15,13 +15,15 @@ stream, reproducing the paper's ablation levels (Fig. 6):
                (node-queue analogue) via the fused Pallas kernel.
   v3           Time-fused stream: the whole T-step stream runs inside ONE
                Pallas kernel (kernels/stream_fused.py) with the recurrent
-               node-state store living in VMEM scratch between snapshots —
-               the paper's BRAM-resident intermediate results. h/c cross
-               HBM once per stream instead of once per step (T× less
-               recurrent-state traffic). Models expose it as
-               ``step_stream``; weights-evolved DGNNs carry weight-matrix
-               (not node) state, so v3 falls back to the v1 overlapped
-               schedule for them.
+               state living in VMEM scratch between snapshots — the
+               paper's BRAM-resident intermediate results. Every model
+               exposes it as ``step_stream``: GCRN/stacked keep the
+               (n_global, H) node-state store resident (h/c cross HBM
+               once per stream instead of once per step), and EvolveGCN
+               keeps its per-layer evolving weight matrices resident with
+               the matrix-GRU evolution running in-kernel between
+               snapshots (W_l crosses HBM twice per stream instead of
+               twice per step).
 
 Ablation summary (what each level removes from the critical path):
 
@@ -31,6 +33,9 @@ Ablation summary (what each level removes from the critical path):
   v1        | adjacent-step overlap | 2T (pipeline register added)
   v2        | intra-step GNN+RNN    | 2T (gate tensor stays in VMEM)
   v3        | whole stream          | 2  (state resident across all T steps)
+
+(for EvolveGCN the "recurrent state" column reads on the evolving weight
+matrices instead of the node-state store — same 2T -> 2 reduction.)
 
 All modes compute IDENTICAL outputs for the same params/stream — that is
 the correctness contract the paper verifies against PyTorch, and what our
@@ -108,11 +113,10 @@ def run_stream(model: Model, params, state0, snaps_T, mode: str = "baseline"):
     """
     if mode == "v1" and isinstance(model, StackedDGNN):
         return _run_stacked_v1(model, params, state0, snaps_T)
-    if mode == "v3" and hasattr(model, "step_stream"):
+    if mode == "v3":
+        # every family has a time-fused stream engine: node-state-resident
+        # for GCRN/stacked, weights-resident for EvolveGCN.
         return model.step_stream(params, state0, snaps_T)
-    # weights-evolved DGNNs have no node-resident recurrent state for the
-    # stream kernel to keep in VMEM; their step() treats v3 as the v1
-    # overlapped schedule (init_state primes the carry for both).
     return _scan_steps(model, params, state0, snaps_T, mode)
 
 
@@ -125,10 +129,9 @@ def run_batched(model: Model, params, states0, snaps_TB, mode: str = "baseline")
     mode="v3" dispatches to the model's ``step_stream_batched`` — the batch
     axis becomes a leading grid dimension of ONE time-fused kernel launch
     (kernels/stream_fused.py) instead of a vmap over per-step scans, so
-    every stream's recurrent state store still crosses HBM exactly twice.
-    Models without a batched stream kernel (EvolveGCN) take the vmapped
-    per-step path, whose step() treats v3 as the v1 overlapped schedule."""
-    if mode == "v3" and hasattr(model, "step_stream_batched"):
+    every stream's recurrent state (node store or evolving weights) still
+    crosses HBM exactly twice. All three families batch this way."""
+    if mode == "v3":
         snaps_BT = jax.tree.map(lambda a: jnp.swapaxes(a, 0, 1), snaps_TB)
         state, outs_BT = model.step_stream_batched(params, states0, snaps_BT)
         return state, jnp.swapaxes(outs_BT, 0, 1)

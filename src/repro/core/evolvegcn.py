@@ -12,6 +12,16 @@ Dataflow modes (see core/dataflow.py for the scan wrappers):
              GRU(W^t) -> W^{t+1} are dataflow-independent inside the scan
              body — the ping-pong-buffer schedule. Outputs are identical
              to baseline (the state is primed by one evolution).
+  v3         time fusion (``step_stream``): the whole snapshot stream runs
+             in ONE weights-resident Pallas kernel
+             (kernels/stream_fused.py): the per-layer evolving weights
+             W_l^t live in VMEM scratch across all T steps, the
+             matrix-GRU evolution runs in-kernel between snapshots, and
+             the multi-layer GCN consumes the resident weights — each W_l
+             crosses HBM twice per stream (primed load + evolved drain)
+             instead of twice per step. Same primed-carry convention as
+             v1, so v1 and v3 states are interchangeable at chunk
+             boundaries (the serve engine relies on this).
 """
 from __future__ import annotations
 
@@ -54,11 +64,12 @@ class EvolveGCN:
 
         v1 primes the pipeline by evolving once, so that inside the scan
         body the GCN consumes W^t while the GRU produces W^{t+1}; outputs
-        then match baseline exactly. v3 (the time-fused stream engine) has
-        no node-resident recurrent state to keep in VMEM for this family —
-        the recurrence is over the weight matrices, whose evolution is a
-        tiny matrix-GRU — so it falls back to the v1 overlapped schedule
-        (see core/dataflow.py) and needs the same priming.
+        then match baseline exactly. v3 (the weights-resident stream
+        kernel) uses the SAME primed convention: the kernel consumes the
+        incoming weights at its first snapshot without evolving them and
+        evolves at the END of every live step — priming once here and
+        evolving in-kernel would otherwise double-evolve (the regression
+        the differential harness pins).
         """
         weights = [p["w"] for p in params["gcn"]]
         if mode in ("v1", "v3"):
@@ -70,21 +81,86 @@ class EvolveGCN:
 
     def step(self, params: dict, state: dict, snap: PaddedSnapshot, *,
              mode: str = "baseline") -> tuple[dict, jax.Array]:
-        # v3 falls back to the v1 overlapped schedule (see init_state): the
-        # state is primed identically, so treating them apart would evolve
-        # the weights twice per step.
+        # mode="v3" streams route through step_stream (the weights-resident
+        # kernel); per-STEP v3 semantics equal the v1 overlapped schedule
+        # (same primed carry), so a v3 state stepped here stays exchangeable
+        # with the stream kernel's.
         fused = mode in ("o1", "v1", "v3")
+        # an EMPTY snapshot is a no-op in every engine: outputs are masked
+        # to zero and the weights do not evolve — the same contract the
+        # stream kernel's live flag enforces, so all modes stay identical
+        # even on streams containing empty (or no-op padding) snapshots.
+        live = snap.n_nodes > 0
         if mode in ("v1", "v3"):
             # DGNN-Booster V1: GCN and GRU are independent given the carry.
             w_now = state["weights"]
             out = G.gcn_forward_weights(params["gcn"], w_now, snap,
                                         snap.node_feat, impl=self.impl)
-            w_next = [R.matrix_gru(g, w, fused=True)
+            w_next = [jnp.where(live, R.matrix_gru(g, w, fused=True), w)
                       for g, w in zip(params["gru"], w_now)]
             return {"weights": w_next}, out
         # baseline / o1: evolve THEN apply — the sequential critical path.
-        w_now = [R.matrix_gru(g, w, fused=fused)
+        w_now = [jnp.where(live, R.matrix_gru(g, w, fused=fused), w)
                  for g, w in zip(params["gru"], state["weights"])]
         out = G.gcn_forward_weights(params["gcn"], w_now, snap,
                                     snap.node_feat, impl=self.impl)
         return {"weights": w_now}, out
+
+    def _edge_aggs(self, params: dict, snaps: PaddedSnapshot):
+        """Per-layer pre-aggregated edge-message term for the stream
+        kernel: sum_k coef[v,k] * (edge_feat @ w_edge_l)[eidx[v,k]], shape
+        (..., n, din_l) with any leading (T,) / (B, T) axes. The edge
+        contribution is additive in the ELL aggregation, so it factors out
+        of the kernel (which then only gathers node activations)."""
+        if not self.cfg.edge_dim:
+            return None
+        eidx = snaps.neigh_eidx
+        lead = eidx.shape[:-2]
+        n, k = eidx.shape[-2:]
+        flat = eidx.reshape(*lead, n * k, 1)
+        aggs = []
+        for p in params["gcn"]:
+            emsg = snaps.edge_feat @ p["w_edge"]     # (..., e, din_l)
+            g = jnp.take_along_axis(emsg, flat, axis=-2)
+            g = g.reshape(*lead, n, k, emsg.shape[-1])
+            aggs.append((g * snaps.neigh_coef[..., None]).sum(axis=-2))
+        return aggs
+
+    def _run_stream_kernel(self, params: dict, state: dict,
+                           snaps: PaddedSnapshot, batched: bool
+                           ) -> tuple[dict, jax.Array]:
+        """Shared plumbing for the (batched) weights-resident kernel:
+        live flags (n_nodes > 0 — no-op padding snapshots must not evolve
+        the weights), per-layer param lists, edge aggregates."""
+        from repro.kernels import ops as kops
+
+        fn = (kops.evolve_stream_steps_batched if batched
+              else kops.evolve_stream_steps)
+        live = (snaps.n_nodes > 0).astype(jnp.int32)
+        outs, wT = fn(
+            snaps.neigh_idx, snaps.neigh_coef, snaps.node_feat,
+            snaps.node_mask, live, list(state["weights"]),
+            [p["b"] for p in params["gcn"]],
+            [g["wx"] for g in params["gru"]],
+            [g["wh"] for g in params["gru"]],
+            [g["b"] for g in params["gru"]],
+            self._edge_aggs(params, snaps),
+        )
+        return {"weights": list(wT)}, outs
+
+    def step_stream(self, params: dict, state: dict, snaps_T: PaddedSnapshot
+                    ) -> tuple[dict, jax.Array]:
+        """V3: run a whole (T, ...) snapshot stream through the
+        weights-resident kernel; the evolving W_l stay in VMEM across
+        steps and the matrix-GRU evolution runs in-kernel between
+        snapshots."""
+        return self._run_stream_kernel(params, state, snaps_T, batched=False)
+
+    def step_stream_batched(self, params: dict, state: dict,
+                            snaps_BT: PaddedSnapshot) -> tuple[dict, jax.Array]:
+        """Batched V3: B independent streams — (B, T, ...) leaves, weight
+        state leaves (B, din_l, dout_l) — through ONE launch of the
+        batched weights-resident kernel (GRU params shared, one resident
+        weight set per stream). Row b of the result is bit-close to
+        running stream b alone through ``step_stream``."""
+        return self._run_stream_kernel(params, state, snaps_BT, batched=True)

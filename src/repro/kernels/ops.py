@@ -230,3 +230,117 @@ def stacked_stream_steps_batched(neigh_idx, neigh_coef, neigh_eidx, node_feat,
         idx, coef, eidx, x, rowg, mask, h0, w_gcn, b_gcn, wx, wh, b, edge_msg,
         tn=tn, interpret=_interpret())
     return outs[:, :, :n], hT
+
+
+# ---------------------------------------- V3 weights-resident stream ----
+
+def _pad_matrix_gru_params(wx, wh, b, dmax: int):
+    """Zero-pad square matrix-GRU cell params (din -> din) to dmax PER
+    GATE BLOCK, so the padded cell splits its gates at dmax boundaries
+    and the valid region evolves exactly as the unpadded cell. Padded
+    weight ROWS evolve to zero under the padded cell (their gate inputs
+    are identically zero), which is the invariant the kernel's padded
+    matmuls rely on."""
+    def pad_gates(m):
+        blocks = jnp.split(m, 3, axis=1)
+        return jnp.concatenate(
+            [_pad_to(_pad_to(g, dmax, 0), dmax, 1) for g in blocks], axis=1)
+
+    b3 = jnp.split(b, 3)
+    return (pad_gates(wx), pad_gates(wh),
+            jnp.concatenate([_pad_to(g, dmax, 0) for g in b3]))
+
+
+def _stack_padded(mats, dmax: int, batched: bool):
+    """Stack per-layer (optionally per-stream) matrices into one
+    (L, dmax, dmax) / (B, L, dmax, dmax) zero-padded array."""
+    axis = 1 if batched else 0
+    return jnp.stack([_pad_to(_pad_to(w, dmax, -2), dmax, -1) for w in mats],
+                     axis=axis)
+
+
+def _evolve_pack(neigh_idx, neigh_coef, node_feat, node_mask, weights,
+                 b_gcn, gru_wx, gru_wh, gru_b, edge_aggs, tn: int,
+                 batched: bool):
+    """Shared padding/packing for the weights-resident stream wrappers."""
+    n = neigh_idx.shape[-2]
+    n2 = _pad_rows(n, tn)
+    dims = [(w.shape[-2], w.shape[-1]) for w in weights]
+    dmax = max(max(d) for d in dims)
+    idx = _pad_to(neigh_idx, n2, -2)
+    coef = _pad_to(neigh_coef, n2, -2)
+    x = _pad_to(_pad_to(node_feat, n2, -2), dmax, -1)
+    mask = _pad_to(node_mask, n2, -1)
+    w0 = _stack_padded(weights, dmax, batched)
+    bg = jnp.stack([_pad_to(bb, dmax, 0) for bb in b_gcn])
+    if edge_aggs is None:
+        eagg = None  # static has_edge=False specialization in the kernel
+    else:
+        eagg = jnp.stack(
+            [_pad_to(_pad_to(ea, n2, -2), dmax, -1) for ea in edge_aggs],
+            axis=-3)
+    gwx, gwh, gb = zip(*[_pad_matrix_gru_params(wx, wh, bb, dmax)
+                         for wx, wh, bb in zip(gru_wx, gru_wh, gru_b)])
+    return (n, dims, idx, coef, x, mask, w0, bg, eagg,
+            jnp.stack(gwx), jnp.stack(gwh), jnp.stack(gb))
+
+
+def _evolve_unpack(outs, wT, n: int, dims, out_dim: int, batched: bool):
+    """Slice kernel-padded outputs/weights back to their true shapes."""
+    outs = outs[..., :n, :out_dim]
+    sl = (slice(None),) if batched else ()
+    weights = tuple(wT[sl + (i, slice(0, di), slice(0, do))]
+                    for i, (di, do) in enumerate(dims))
+    return outs, weights
+
+
+def evolve_stream_steps(neigh_idx, neigh_coef, node_feat, node_mask, live,
+                        weights, b_gcn, gru_wx, gru_wh, gru_b,
+                        edge_aggs=None, *, tn: int = 128,
+                        force_ref: bool = False):
+    """Time-fused EvolveGCN stream (V3): T snapshots through one launch
+    with the per-layer evolving weights VMEM-resident — each W_l crosses
+    HBM exactly twice per stream (primed load + evolved drain) instead of
+    twice per step.
+
+    ``weights``/``b_gcn``/``gru_*`` are per-layer lists (true, unpadded
+    shapes); ``edge_aggs`` is the per-layer pre-aggregated edge-message
+    term (T, n, din_l) or None; ``live`` (T,) int gates the in-kernel
+    matrix-GRU evolution so no-op tail snapshots leave the weights
+    untouched. Returns (per-step outputs (T, n, out_dim), final weights
+    tuple)."""
+    if force_ref or _FORCE_REF:
+        return _ref.evolve_stream_ref(neigh_idx, neigh_coef, node_feat,
+                                      node_mask, live, weights, b_gcn,
+                                      gru_wx, gru_wh, gru_b, edge_aggs)
+    n, dims, idx, coef, x, mask, w0, bg, eagg, gwx, gwh, gb = _evolve_pack(
+        neigh_idx, neigh_coef, node_feat, node_mask, weights, b_gcn,
+        gru_wx, gru_wh, gru_b, edge_aggs, tn, batched=False)
+    outs, wT = _stream.evolve_stream_pallas(
+        idx, coef, x, mask, jnp.asarray(live, jnp.int32), w0, bg,
+        gwx, gwh, gb, eagg, tn=tn, interpret=_interpret())
+    return _evolve_unpack(outs, wT, n, dims, dims[-1][1], batched=False)
+
+
+def evolve_stream_steps_batched(neigh_idx, neigh_coef, node_feat, node_mask,
+                                live, weights, b_gcn, gru_wx, gru_wh, gru_b,
+                                edge_aggs=None, *, tn: int = 128,
+                                force_ref: bool = False):
+    """B independent time-fused EvolveGCN streams in ONE kernel launch.
+
+    Arrays carry a leading (B, T, ...) layout; ``weights`` leaves are
+    (B, din_l, dout_l) — one evolving-weight state per stream, each
+    crossing HBM exactly twice. GRU params and GCN biases are shared.
+    Returns (per-step outputs (B, T, n, out_dim), final weights tuple of
+    (B, din_l, dout_l))."""
+    if force_ref or _FORCE_REF:
+        return _ref.evolve_stream_batched_ref(
+            neigh_idx, neigh_coef, node_feat, node_mask, live, weights,
+            b_gcn, gru_wx, gru_wh, gru_b, edge_aggs)
+    n, dims, idx, coef, x, mask, w0, bg, eagg, gwx, gwh, gb = _evolve_pack(
+        neigh_idx, neigh_coef, node_feat, node_mask, weights, b_gcn,
+        gru_wx, gru_wh, gru_b, edge_aggs, tn, batched=True)
+    outs, wT = _stream.evolve_stream_batched_pallas(
+        idx, coef, x, mask, jnp.asarray(live, jnp.int32), w0, bg,
+        gwx, gwh, gb, eagg, tn=tn, interpret=_interpret())
+    return _evolve_unpack(outs, wT, n, dims, dims[-1][1], batched=True)

@@ -159,3 +159,68 @@ def stacked_stream_batched_ref(neigh_idx, neigh_coef, neigh_eidx, node_feat,
         i, c, e, x, r, m, h_, w_gcn, b_gcn, wx, wh, b, em)
     return jax.vmap(fn)(neigh_idx, neigh_coef, neigh_eidx, node_feat,
                         renumber, node_mask, h0, edge_msg)
+
+
+def evolve_stream_ref(neigh_idx, neigh_coef, node_feat, node_mask, live,
+                      weights0, b_gcn, gru_wx, gru_wh, gru_b,
+                      edge_aggs=None):
+    """EvolveGCN stream oracle: (T, n, ...) snapshot arrays, per-layer
+    evolving weights as the carry.
+
+    Per step t: the L-layer GCN consumes the CURRENT weights (agg @ W_l +
+    b_l, ReLU between layers, masked every layer — identical to
+    core.gcn.gcn_forward_weights with the edge term pre-aggregated into
+    ``edge_aggs[l]`` (T, n, din_l)), then the matrix-GRU evolves every
+    layer's weight for step t+1. ``live`` (T,) gates the evolution: a
+    no-op (all-padding) snapshot leaves the weights untouched, so serve
+    tail padding never advances the recurrence. Ground truth for the
+    weights-resident stream kernel, whose only difference is that the
+    weights never leave VMEM between steps.
+
+    Returns (per-step outputs (T, n, out_dim), final weights tuple).
+    """
+    L = len(weights0)
+    xs = dict(idx=neigh_idx, coef=neigh_coef, x=node_feat, mask=node_mask,
+              live=live)
+    if edge_aggs is not None:
+        for i, ea in enumerate(edge_aggs):
+            xs[f"ea{i}"] = ea
+
+    def body(ws, s):
+        x = s["x"]
+        m = s["mask"][:, None]
+        for i in range(L):
+            agg = (x[s["idx"]] * s["coef"][..., None]).sum(axis=1)
+            ea = s.get(f"ea{i}")
+            if ea is not None:
+                agg = agg + ea
+            h = agg @ ws[i] + b_gcn[i]
+            if i < L - 1:
+                h = jax.nn.relu(h)
+            x = h * m
+        evolved = tuple(
+            fused_gru(w.T, w.T, wx, wh, b).T
+            for w, wx, wh, b in zip(ws, gru_wx, gru_wh, gru_b))
+        ws_next = tuple(
+            jnp.where(s["live"] > 0, wn, w) for wn, w in zip(evolved, ws))
+        return ws_next, x
+
+    wT, outs = jax.lax.scan(body, tuple(weights0), xs)
+    return outs, wT
+
+
+def evolve_stream_batched_ref(neigh_idx, neigh_coef, node_feat, node_mask,
+                              live, weights0, b_gcn, gru_wx, gru_wh, gru_b,
+                              edge_aggs=None):
+    """B independent EvolveGCN streams: (B, T, ...) arrays, per-layer
+    (B, din_l, dout_l) weights — vmap of the single-stream oracle (GRU
+    params and GCN biases shared across streams)."""
+    if edge_aggs is None:
+        fn = lambda i, c, x, m, lv, ws: evolve_stream_ref(
+            i, c, x, m, lv, ws, b_gcn, gru_wx, gru_wh, gru_b)
+        return jax.vmap(fn)(neigh_idx, neigh_coef, node_feat, node_mask,
+                            live, tuple(weights0))
+    fn = lambda i, c, x, m, lv, ws, ea: evolve_stream_ref(
+        i, c, x, m, lv, ws, b_gcn, gru_wx, gru_wh, gru_b, ea)
+    return jax.vmap(fn)(neigh_idx, neigh_coef, node_feat, node_mask, live,
+                        tuple(weights0), tuple(edge_aggs))

@@ -357,3 +357,211 @@ def stacked_stream_pallas(neigh_idx, neigh_coef, neigh_eidx, node_feat,
         row_gidx[None], node_mask[None], h0[None], w_gcn, b_gcn, wx, wh, b,
         em, tn=tn, interpret=interpret)
     return outs[0], hT[0]
+
+
+# ----------------------------------------------------------------------
+# EvolveGCN: weights-resident stream kernel.
+#
+# The weights-evolved family carries no node-resident recurrent state —
+# its recurrence is over the per-layer GCN weight matrices W_l^t, evolved
+# by a matrix-GRU between snapshots. The per-step schedule therefore
+# round-trips every W_l through HBM twice per snapshot (2T per stream),
+# the exact per-step weight-update bottleneck of arXiv:2210.03900. Here
+# the evolving weights live in VMEM scratch for the whole stream: grid
+# (B, T, L, n_pad//tn) with a layer axis L so the multi-layer GCN's
+# cross-tile dependency (layer l's aggregation reads layer l-1's output
+# for EVERY node) is sequenced by the grid rather than recomputed per
+# tile. Per-step activations ping-pong between two full-(n_pad) VMEM
+# buffers by layer parity; the matrix-GRU evolution runs in-kernel at
+# each live step's last tile program, so W_l crosses HBM exactly twice
+# per stream (initial load + final drain).
+#
+# Padding convention: every layer's weight matrix is zero-padded into a
+# common (dmax, dmax) square (dmax = max layer width) so the L weights
+# stack into one scratch buffer indexed by the layer grid axis. The GRU
+# gate matrices are padded PER GATE BLOCK (ops._pad_matrix_gru_params):
+# gx/gh are then split at dmax boundaries inside the kernel and the
+# valid region evolves exactly as the unpadded cell. Zero-padded weight
+# ROWS stay zero under evolution (their gate inputs are identically 0,
+# giving h_new = 0.5 * tanh(0) + 0.5 * 0 = 0), which is what keeps
+# junk activation columns from leaking into valid output columns.
+#
+# No-op tail snapshots (serve chunk padding) must leave the evolving
+# weights untouched — unlike the node-state kernels, where padding rows
+# simply scatter-drop, weight evolution is per-step, so each step
+# carries an explicit ``live`` flag (n_nodes > 0) gating the evolution.
+
+
+def _matrix_gru_padded(w, wxp, whp, bp):
+    """EvolveGCN-O weight evolution on a (dmax, dmax) zero-padded W.
+
+    Identical math to rnn.matrix_gru on the valid region: columns of W
+    are the GRU batch; gate blocks split at dmax (params padded per gate
+    block by ops._pad_matrix_gru_params).
+    """
+    d = w.shape[0]
+    wt = w.T  # (dout_pad, din_pad): batch of column vectors
+    gx = wt @ wxp + bp[None, :]
+    gh = wt @ whp
+    rx, zx, nx = gx[:, :d], gx[:, d:2 * d], gx[:, 2 * d:]
+    rh, zh, nh = gh[:, :d], gh[:, d:2 * d], gh[:, 2 * d:]
+    r = jax.nn.sigmoid(rx + rh)
+    z = jax.nn.sigmoid(zx + zh)
+    n = jnp.tanh(nx + r * nh)
+    return ((1.0 - z) * n + z * wt).T
+
+
+def _evolve_stream_kernel(has_edge,
+                          idx_ref, coef_ref, x_ref, mask_ref, live_ref,
+                          w0_ref, bg_ref, eagg_ref, wx_ref, wh_ref, bgr_ref,
+                          out_ref, wT_ref,
+                          w_ref, xa_ref, xb_ref):
+    t, l, j = pl.program_id(1), pl.program_id(2), pl.program_id(3)
+    n_layers = pl.num_programs(2)
+    n_tiles = pl.num_programs(3)
+    dmax = xa_ref.shape[1]
+
+    # weight residency: each stream loads its OWN primed W_l block once,
+    # at its (t==0, j==0) program of layer l — streams reuse the scratch
+    # serially, exactly like the node-state kernels above.
+    @pl.when(jnp.logical_and(t == 0, j == 0))
+    def _init_w():
+        w_ref[pl.ds(l, 1)] = w0_ref[0]
+
+    # layer-0 activations are this step's node features: (re)load the
+    # ping buffer at the first program of every step.
+    @pl.when(jnp.logical_and(l == 0, j == 0))
+    def _init_x():
+        xa_ref[...] = x_ref[0, 0]
+
+    even = (l % 2) == 0  # even layers read A / write B, odd the reverse
+    idx, coef = idx_ref[0, 0], coef_ref[0, 0]
+    mask = mask_ref[0, 0][:, None]
+    w = w_ref[pl.ds(l, 1)][0]
+
+    x_prev = jnp.where(even, xa_ref[...], xb_ref[...])
+    tn, k = idx.shape
+    g = jnp.take(x_prev, idx.reshape(-1), axis=0).reshape(tn, k, dmax)
+    agg = (g * coef[..., None]).sum(axis=1)
+    if has_edge:
+        agg = agg + eagg_ref[0, 0, 0]
+    h = agg @ w + bg_ref[0][None, :]
+    h = jnp.where(l == n_layers - 1, h, jnp.maximum(h, 0.0)) * mask
+
+    @pl.when(jnp.logical_not(even))
+    def _wr_a():
+        xa_ref[pl.ds(j * tn, tn)] = h
+
+    @pl.when(even)
+    def _wr_b():
+        xb_ref[pl.ds(j * tn, tn)] = h
+
+    # model output = last layer's (masked, linear) activations
+    @pl.when(l == n_layers - 1)
+    def _out():
+        out_ref[0, 0] = h
+
+    # weight evolution BETWEEN snapshots: after the last tile of layer l
+    # consumed W_l^t, evolve it in place for step t+1. No-op (all-padding)
+    # snapshots are not steps of the stream — their ``live`` flag gates
+    # the evolution off, so serve-side tail padding never advances W.
+    @pl.when(jnp.logical_and(j == n_tiles - 1, live_ref[0, 0] > 0))
+    def _evolve():
+        w_ref[pl.ds(l, 1)] = _matrix_gru_padded(
+            w, wx_ref[0], wh_ref[0], bgr_ref[0])[None]
+
+    # drain: this stream's last program of layer l writes the evolved
+    # weight (state AFTER the final live step) back to HBM.
+    @pl.when(_stream_done(t_axis=1, j_axis=3))
+    def _drain():
+        wT_ref[0, 0] = w_ref[pl.ds(l, 1)][0]
+
+
+@functools.partial(jax.jit, static_argnames=("tn", "interpret"))
+def evolve_stream_batched_pallas(neigh_idx, neigh_coef, node_feat, node_mask,
+                                 live, w0, b_gcn, gru_wx, gru_wh, gru_b,
+                                 edge_agg=None, *, tn: int = 128,
+                                 interpret: bool = False):
+    """B independent whole-stream EvolveGCN runs in one pallas_call.
+
+    Shapes (all widths zero-padded to the common dmax by kernels/ops.py):
+      neigh_idx/neigh_coef (B, T, n, k); node_feat (B, T, n, dmax);
+      node_mask (B, T, n); live (B, T) int32 — 1 where the snapshot is
+      real, 0 on no-op tail padding; w0 (B, L, dmax, dmax) — each
+      stream's primed evolving weights, entering and leaving the chip
+      exactly once per stream; b_gcn (L, dmax); gru_wx/gru_wh
+      (L, dmax, 3*dmax) and gru_b (L, 3*dmax), padded per gate block;
+      edge_agg (B, T, L, n, dmax) — per-layer pre-aggregated
+      edge-message term sum_k coef * (edge_feat @ w_edge_l)[eidx], or
+      None for edge-free configs (a tiny pinned dummy block is streamed
+      instead of a full zero tensor, mirroring the sibling kernels'
+      static has_edge specialization).
+
+    Returns (per-step outputs (B, T, n, dmax), final weights
+    (B, L, dmax, dmax)).
+    """
+    B, T, n, k = neigh_idx.shape
+    L, dmax = w0.shape[1], w0.shape[2]
+    assert n % tn == 0
+    grid = (B, T, L, n // tn)
+    tile = lambda bi, t, l, j: (bi, t, j, 0)
+    step = lambda bi, t, l, j: (bi, t, 0, 0)
+    row = lambda bi, t, l, j: (bi, t, j)
+    flag = lambda bi, t, l, j: (bi, t)
+    layer4 = lambda bi, t, l, j: (bi, l, 0, 0)
+    layer_res3 = lambda bi, t, l, j: (l, 0, 0)
+    layer_res2 = lambda bi, t, l, j: (l, 0)
+    has_edge = edge_agg is not None
+    if has_edge:
+        eagg_map = lambda bi, t, l, j: (bi, t, l, j, 0)
+    else:
+        # one pinned (revisited) dummy block instead of (B,T,L,n,dmax)
+        # of streamed zeros; the kernel never reads it.
+        edge_agg = jnp.zeros((1, 1, 1, tn, dmax), node_feat.dtype)
+        eagg_map = lambda bi, t, l, j: (0, 0, 0, 0, 0)
+    return pl.pallas_call(
+        functools.partial(_evolve_stream_kernel, has_edge),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, tn, k), tile),          # neigh_idx (local)
+            pl.BlockSpec((1, 1, tn, k), tile),          # neigh_coef
+            pl.BlockSpec((1, 1, n, dmax), step),        # node_feat, per (b, t)
+            pl.BlockSpec((1, 1, tn), row),              # node_mask
+            pl.BlockSpec((1, 1), flag),                 # live flag, per (b, t)
+            pl.BlockSpec((1, 1, dmax, dmax), layer4),   # W0, per (stream, l)
+            pl.BlockSpec((1, dmax), layer_res2),        # GCN bias, per l
+            pl.BlockSpec((1, 1, 1, tn, dmax), eagg_map),  # edge agg, per (b,t,l)
+            pl.BlockSpec((1, dmax, 3 * dmax), layer_res3),  # GRU wx, per l
+            pl.BlockSpec((1, dmax, 3 * dmax), layer_res3),  # GRU wh, per l
+            pl.BlockSpec((1, 3 * dmax), layer_res2),        # GRU b, per l
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, tn, dmax), tile),       # per-step outputs
+            pl.BlockSpec((1, 1, dmax, dmax), layer4),   # final weights
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, n, dmax), node_feat.dtype),
+            jax.ShapeDtypeStruct((B, L, dmax, dmax), w0.dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((L, dmax, dmax), w0.dtype),   # resident evolving W_l
+            pltpu.VMEM((n, dmax), node_feat.dtype),  # activation ping
+            pltpu.VMEM((n, dmax), node_feat.dtype),  # activation pong
+        ],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("arbitrary",) * 4),
+        interpret=interpret,
+    )(neigh_idx, neigh_coef, node_feat, node_mask, live,
+      w0, b_gcn, edge_agg, gru_wx, gru_wh, gru_b)
+
+
+def evolve_stream_pallas(neigh_idx, neigh_coef, node_feat, node_mask, live,
+                         w0, b_gcn, gru_wx, gru_wh, gru_b, edge_agg=None, *,
+                         tn: int = 128, interpret: bool = False):
+    """Whole-stream EvolveGCN: the B=1 case of the batched kernel."""
+    ea = None if edge_agg is None else edge_agg[None]
+    outs, wT = evolve_stream_batched_pallas(
+        neigh_idx[None], neigh_coef[None], node_feat[None], node_mask[None],
+        live[None], w0[None], b_gcn, gru_wx, gru_wh, gru_b, ea,
+        tn=tn, interpret=interpret)
+    return outs[0], wT[0]

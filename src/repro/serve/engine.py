@@ -31,8 +31,10 @@ grid dimension of the stream kernel, so B streams cost one kernel launch
 and one weight load while every stream's state store still crosses HBM
 exactly twice per chunk. Per-stream outputs are returned in per-stream
 order (rounds are sequential and each stream's snapshots are consumed in
-order). Models without a batched stream kernel (EvolveGCN) fall back to
-round-robin per-snapshot stepping.
+order). All three DGNN families take this batched launch: GCRN and
+stacked models keep their node-state store resident, EvolveGCN its
+evolving weight matrices (the in-kernel evolution is live-gated, so the
+no-op tail snapshots padding a chunk never advance the weights).
 """
 from __future__ import annotations
 
@@ -118,7 +120,8 @@ class SnapshotServer:
     # ------------------------------------------------------ device loop ----
 
     def _use_stream(self) -> bool:
-        return self.mode == "v3" and hasattr(self.model, "step_stream")
+        # every family has a stream engine (weights-resident for EvolveGCN)
+        return self.mode == "v3"
 
     def _pow2_target(self, real: int, cap: Optional[int] = None) -> int:
         """Next power of two >= ``real`` (optionally capped): the padded
@@ -153,7 +156,14 @@ class SnapshotServer:
 
     def run(self, params, state, snaps: Iterable[COOSnapshot]) -> tuple:
         """Returns (final_state, outputs list, ServeStats)."""
-        q: queue.Queue = queue.Queue(maxsize=self.queue_depth)
+        # the v3 device loop consumes ``stream_chunk`` snapshots per kernel
+        # launch; a queue_depth-sized queue would stall the producer at 2
+        # staged snapshots while a whole chunk runs, killing the §IV-D
+        # host/device overlap — size for a full chunk ahead, like run_multi.
+        # Per-snapshot modes keep the caller's queue_depth memory bound.
+        depth = (max(self.queue_depth, self.stream_chunk)
+                 if self._use_stream() else self.queue_depth)
+        q: queue.Queue = queue.Queue(maxsize=depth)
         pre_ms: list = []
 
         def producer():
@@ -205,8 +215,9 @@ class SnapshotServer:
     # ------------------------------------------- multi-tenant device loop ----
 
     def _use_stream_batched(self) -> bool:
-        return (self.mode == "v3"
-                and hasattr(self.model, "step_stream_batched"))
+        # every family has a batched stream kernel; only the engine MODE
+        # decides (non-v3 modes keep the per-snapshot device loop).
+        return self.mode == "v3"
 
     def _chunk_bucket(self, dims: list) -> tuple:
         """Bucket covering a whole chunk of (n, e, k) dims (one static shape
@@ -343,13 +354,13 @@ class SnapshotServer:
                         chunk.append(item[0])
                         dims.append(item[1])
                         if not batched and chunk:
-                            break  # per-snapshot fallback needs no chunking
+                            break  # non-v3 per-snapshot loop: no chunking
                     if chunk:
                         chunks[sid] = (chunk, dims)
                 if not chunks:
                     continue
                 if not batched:
-                    # fallback (e.g. EvolveGCN): round-robin per-step path
+                    # non-v3 engine modes: round-robin per-snapshot stepping
                     for sid, (chunk, dims) in sorted(chunks.items()):
                         for ls, d in zip(chunk, dims):
                             ps = (ls if isinstance(ls, PaddedSnapshot)

@@ -39,8 +39,9 @@ from repro.graph import (
     unpad_snapshot,
 )
 
-# Which engines apply per DGNN family (v3 on EvolveGCN is the documented
-# fallback to the v1 overlapped schedule — still output-identical).
+# Which engines apply per DGNN family. Every family's v3 is a real
+# time-fused stream kernel now: node-state-resident for GCRN/stacked,
+# weights-resident (in-kernel matrix-GRU evolution) for EvolveGCN.
 MODES = {
     "evolvegcn": ["baseline", "o1", "v1", "v3"],
     "gcrn-m2": ["baseline", "o1", "v2", "v3"],
@@ -117,14 +118,17 @@ def make_case(name: str, seed: int = 0, T: int = 5, B: int = 3) -> StreamCase:
                       n_global=n_pool, stacked=stacked)
 
 
-def run_all_modes(model, params, sT, modes) -> dict:
-    """Run one stream through every listed engine from a fresh state."""
-    outs = {}
+def run_all_modes(model, params, sT, modes) -> tuple[dict, dict]:
+    """Run one stream through every listed engine from a fresh state.
+
+    Returns ({mode: outputs}, {mode: final recurrent state})."""
+    outs, states = {}, {}
     for mode in modes:
         st = model.init_state(params, mode=mode)
-        _, o = run_stream(model, params, st, sT, mode=mode)
+        fs, o = run_stream(model, params, st, sT, mode=mode)
         outs[mode] = np.asarray(o)
-    return outs
+        states[mode] = fs
+    return outs, states
 
 
 def assert_modes_match(outs: dict, atol: float, label: str = ""):
@@ -137,27 +141,81 @@ def assert_modes_match(outs: dict, atol: float, label: str = ""):
                                    err_msg=f"{label} mode={mode}")
 
 
+def assert_final_states_match(case: StreamCase, states: dict, atol: float,
+                              label: str = ""):
+    """Final recurrent states agree across engines — catching bugs the
+    outputs alone cannot (e.g. a wrong extra evolution at the stream
+    kernel's drain only corrupts the NEXT chunk).
+
+    GCRN/stacked: every mode ends with the same node-state store.
+    EvolveGCN: primed engines (v1, v3) carry identical evolved weights,
+    unprimed (baseline, o1) too, and ONE more matrix-GRU evolution of the
+    unprimed final equals the primed final — pinning the exact
+    one-evolution priming offset. A double (or missing) in-kernel
+    evolution in the weights-resident v3 kernel fails here.
+    """
+    if case.name != "evolvegcn":
+        base = states["baseline"]
+        for mode, st in states.items():
+            jax.tree.map(lambda a, b: np.testing.assert_allclose(
+                np.asarray(b), np.asarray(a), atol=atol,
+                err_msg=f"{label} state mode={mode}"), base, st)
+        return
+    from repro.core import rnn as R
+
+    groups = {"primed": [m for m in states if m in ("v1", "v3")],
+              "unprimed": [m for m in states if m in ("baseline", "o1")]}
+    for gname, group in groups.items():
+        for mode in group[1:]:
+            for i, (a, b) in enumerate(zip(states[group[0]]["weights"],
+                                           states[mode]["weights"])):
+                np.testing.assert_allclose(
+                    np.asarray(b), np.asarray(a), atol=atol,
+                    err_msg=f"{label} {gname} weights[{i}] "
+                            f"{mode} != {group[0]}")
+    if groups["primed"] and groups["unprimed"]:
+        once_more = [
+            R.matrix_gru(g, w, fused=True)
+            for g, w in zip(case.params["gru"],
+                            states[groups["unprimed"][0]]["weights"])]
+        for i, (a, b) in enumerate(zip(once_more,
+                                       states[groups["primed"][0]]["weights"])):
+            np.testing.assert_allclose(
+                np.asarray(b), np.asarray(a), atol=atol,
+                err_msg=f"{label} weights[{i}] primed != GRU(unprimed) — "
+                        "priming/evolution count drifted")
+
+
 def assert_engines_equivalent(case: StreamCase, atol: float = 3e-4):
     """The full differential contract for one case:
 
-    1. per stream: baseline ≡ every engine the family supports (incl. v3);
+    1. per stream: baseline ≡ every engine the family supports (incl. v3),
+       on outputs AND final recurrent states (weights for EvolveGCN);
     2. batched v3 over all B streams in ONE launch ≡ per-stream baseline,
-       row-sliced (no cross-stream state leakage).
+       row-sliced (no cross-stream state leakage), outputs and states.
     """
-    per_stream = []
+    per_stream, per_stream_state = [], []
     for b, sT in enumerate(case.stacked):
-        outs = run_all_modes(case.model, case.params, sT, MODES[case.name])
+        outs, states = run_all_modes(case.model, case.params, sT,
+                                     MODES[case.name])
         assert_modes_match(outs, atol, label=f"{case.name} stream={b}")
+        assert_final_states_match(case, states, atol,
+                                  label=f"{case.name} stream={b}")
         per_stream.append(outs["baseline"])
+        per_stream_state.append(states["v3"])
     B = len(case.stacked)
     sTB = jax.tree.map(lambda *xs: jnp.stack(xs, axis=1), *case.stacked)
-    states = init_states_batched(case.model, case.params, B, mode="v3")
-    _, oB = run_batched(case.model, case.params, states, sTB, mode="v3")
+    states0 = init_states_batched(case.model, case.params, B, mode="v3")
+    stateB, oB = run_batched(case.model, case.params, states0, sTB, mode="v3")
     oB = np.asarray(oB)
     for b in range(B):
         np.testing.assert_allclose(
             oB[:, b], per_stream[b], atol=atol,
             err_msg=f"{case.name} batched-v3 row {b} != solo baseline")
+        jax.tree.map(lambda a, s, b=b: np.testing.assert_allclose(
+            np.asarray(a)[b], np.asarray(s), atol=atol,
+            err_msg=f"{case.name} batched-v3 state row {b} != solo v3"),
+            stateB, per_stream_state[b])
 
 
 def random_ell_stream(seed: int, T: int, n: int, k: int, e: int, din: int,

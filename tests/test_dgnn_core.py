@@ -39,7 +39,7 @@ def test_dataflow_modes_identical(stream, name):
     cfg = DGNN_CONFIGS[name]
     model = build_model(cfg, n_global=tg.n_global_nodes)
     params = model.init(jax.random.PRNGKey(0))
-    outs = harness.run_all_modes(model, params, sT, harness.MODES[name])
+    outs, _ = harness.run_all_modes(model, params, sT, harness.MODES[name])
     harness.assert_modes_match(outs, atol=2e-5, label=name)
 
 

@@ -65,3 +65,27 @@ def test_choose_bucket_invariants_plain():
     dims = [(int(rng.integers(1, 640)), int(rng.integers(1, 4096)),
              int(rng.integers(1, 96))) for _ in range(6)]
     harness.check_bucket_monotone(dims, DEFAULT_BUCKETS)
+
+
+def test_evolvegcn_modes_identical_with_empty_snapshot():
+    """A genuinely EMPTY (all-padding) snapshot inside a stream is a
+    no-op in every engine: zero outputs at that step and frozen evolving
+    weights — so baseline/o1/v1/v3 stay identical even though only the
+    stream kernel sees an explicit live flag (the per-step engines gate
+    the matrix-GRU on n_nodes > 0 to match)."""
+    import jax
+
+    from repro.graph import empty_like_padded
+
+    case = harness.make_case("evolvegcn", seed=5, T=4, B=1)
+    sT = case.stacked[0]
+    empty = empty_like_padded(jax.tree.map(lambda a: a[0], sT))
+    with_hole = jax.tree.map(
+        lambda a, e: np.concatenate([a[:2], np.asarray(e)[None], a[2:]],
+                                    axis=0), sT, empty)
+    outs, states = harness.run_all_modes(case.model, case.params, with_hole,
+                                         harness.MODES["evolvegcn"])
+    harness.assert_modes_match(outs, atol=3e-4, label="evolvegcn empty-step")
+    harness.assert_final_states_match(case, states, atol=3e-4,
+                                      label="evolvegcn empty-step")
+    assert np.abs(outs["baseline"][2]).max() == 0.0  # the hole is a no-op

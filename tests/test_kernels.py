@@ -304,3 +304,111 @@ def test_flash_flops_accounting_causal_saves_half():
     caus = flops_bytes(1, 8, 8, 4096, 128, causal=True)
     assert caus["flops"] < 0.6 * full["flops"]
     assert caus["flops"] > 0.45 * full["flops"]
+
+
+def _evolve_inputs(seed, T, n, k, dims, edge=False, noop=()):
+    """Random EvolveGCN stream-kernel inputs: ragged n per step, per-layer
+    weights/matrix-GRU params, optional per-layer edge aggregates, and
+    no-op (all-padding, live=0) steps at the given indices."""
+    rng = np.random.default_rng(seed)
+    idxs, coefs, xs, masks, lives = [], [], [], [], []
+    din = dims[0][0]
+    for t in range(T):
+        live = 0 if t in noop else 1
+        nr = int(rng.integers(max(n // 3, 1), n + 1)) if live else 0
+        idx = rng.integers(0, max(nr, 1), (n, k)).astype(np.int32)
+        coef = (rng.uniform(size=(n, k)) *
+                (rng.uniform(size=(n, k)) > 0.4)).astype(np.float32)
+        coef[nr:] = 0.0
+        x = rng.normal(size=(n, din)).astype(np.float32)
+        x[nr:] = 0.0
+        mask = np.zeros(n, np.float32)
+        mask[:nr] = 1.0
+        idxs.append(idx); coefs.append(coef); xs.append(x)
+        masks.append(mask); lives.append(live)
+    stream = (np.stack(idxs), np.stack(coefs), np.stack(xs),
+              np.stack(masks), np.asarray(lives, np.int32))
+    ks = jax.random.split(jax.random.PRNGKey(seed + 1), 5)
+    ws = [_rand(jax.random.fold_in(ks[0], i), d) * 0.3
+          for i, d in enumerate(dims)]
+    bg = [_rand(jax.random.fold_in(ks[1], i), (d[1],)) * 0.1
+          for i, d in enumerate(dims)]
+    gwx = [_rand(jax.random.fold_in(ks[2], i), (d[0], 3 * d[0])) * 0.2
+           for i, d in enumerate(dims)]
+    gwh = [_rand(jax.random.fold_in(ks[3], i), (d[0], 3 * d[0])) * 0.2
+           for i, d in enumerate(dims)]
+    gb = [_rand(jax.random.fold_in(ks[4], i), (3 * d[0],)) * 0.1
+          for i, d in enumerate(dims)]
+    ea = None
+    if edge:
+        ea = [_rand(jax.random.fold_in(ks[0], 100 + i), (T, n, d[0])) * 0.1
+              for i, d in enumerate(dims)]
+    return stream, ws, bg, gwx, gwh, gb, ea
+
+
+@pytest.mark.parametrize("T,n,k", [(4, 128, 8), (5, 200, 12)])
+@pytest.mark.parametrize("edge", [False, True])
+def test_evolve_stream_kernel(T, n, k, edge):
+    """Weights-resident V3 stream kernel == per-step scan oracle
+    (EvolveGCN): per-step outputs AND final evolved weights, incl. a
+    ragged (non-tile-multiple) node count."""
+    dims = [(24, 40), (40, 16)]
+    stream, ws, bg, gwx, gwh, gb, ea = _evolve_inputs(31, T, n, k, dims,
+                                                      edge=edge)
+    got = ops.evolve_stream_steps(*stream, ws, bg, gwx, gwh, gb, ea, tn=128)
+    want = ref.evolve_stream_ref(*stream, ws, bg, gwx, gwh, gb, ea)
+    assert got[0].shape == (T, n, dims[-1][1])
+    np.testing.assert_allclose(got[0], want[0], atol=2e-4, err_msg="outs")
+    for i, (g, w) in enumerate(zip(got[1], want[1])):
+        np.testing.assert_allclose(g, w, atol=2e-4, err_msg=f"weights[{i}]")
+
+
+def test_evolve_stream_kernel_noop_steps_freeze_weights():
+    """live=0 (all-padding) steps produce zero outputs and must NOT
+    advance the in-kernel matrix-GRU — the serve-chunk tail-padding
+    contract. Final weights equal those of the live prefix alone."""
+    T, n, k = 6, 128, 8
+    dims = [(24, 40), (40, 16)]
+    stream, ws, bg, gwx, gwh, gb, _ = _evolve_inputs(
+        37, T, n, k, dims, noop=(4, 5))  # live prefix of 4, no-op tail of 2
+    outs, wT = ops.evolve_stream_steps(*stream, ws, bg, gwx, gwh, gb, tn=128)
+    assert np.abs(np.asarray(outs)[4:]).max() == 0.0
+    prefix = tuple(a[:4] for a in stream)
+    _, wT_prefix = ops.evolve_stream_steps(*prefix, ws, bg, gwx, gwh, gb,
+                                           tn=128)
+    for i, (g, w) in enumerate(zip(wT, wT_prefix)):
+        np.testing.assert_allclose(g, w, atol=1e-6,
+                                   err_msg=f"weights[{i}] moved on no-op")
+
+
+@pytest.mark.parametrize("edge", [False, True])
+def test_evolve_stream_kernel_batched(edge):
+    """Batched weights-resident V3: B streams (distinct weights, shared
+    GRU params) in one launch == vmapped oracle == per-stream unbatched
+    launches row-sliced."""
+    B, T, n, k = 3, 4, 128, 8
+    dims = [(24, 40), (40, 16)]
+    per = [_evolve_inputs(41 + 7 * b, T, n, k, dims, edge=edge)
+           for b in range(B)]
+    S = tuple(np.stack([p[0][i] for p in per]) for i in range(5))
+    _, ws0, bg, gwx, gwh, gb, ea0 = per[0]
+    wsB = [jnp.stack([jnp.asarray(p[1][i]) * (1.0 + 0.05 * b)
+                      for b, p in enumerate(per)])
+           for i in range(len(dims))]
+    eaB = None
+    if edge:
+        eaB = [jnp.stack([p[6][i] for p in per]) for i in range(len(dims))]
+    got = ops.evolve_stream_steps_batched(*S, wsB, bg, gwx, gwh, gb, eaB,
+                                          tn=128)
+    want = ref.evolve_stream_batched_ref(*[jnp.asarray(s) for s in S], wsB,
+                                         bg, gwx, gwh, gb, eaB)
+    np.testing.assert_allclose(got[0], want[0], atol=2e-4, err_msg="outs")
+    for i, (g, w) in enumerate(zip(got[1], want[1])):
+        np.testing.assert_allclose(g, w, atol=2e-4, err_msg=f"weights[{i}]")
+    for b in range(B):
+        solo = ops.evolve_stream_steps(
+            *[s[b] for s in S], [w[b] for w in wsB], bg, gwx, gwh, gb,
+            None if eaB is None else [e[b] for e in eaB], tn=128)
+        np.testing.assert_allclose(np.asarray(got[0])[b], solo[0], atol=2e-4)
+        for g, s_ in zip(got[1], solo[1]):
+            np.testing.assert_allclose(np.asarray(g)[b], s_, atol=2e-4)

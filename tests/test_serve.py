@@ -87,24 +87,51 @@ def test_snapshot_server_spans_two_buckets():
                                    err_msg=f"t={t} bucket={b}")
 
 
-def test_snapshot_server_v3_evolvegcn_fallback_matches_offline():
-    """EvolveGCN has no step_stream, so the server's v3 engine takes the
-    per-step path; its step() must treat v3 as the v1 schedule, NOT evolve
-    the primed weights a second time (regression)."""
+def _forbid_per_step(srv):
+    """Make the per-snapshot jitted step unusable: any fallback off the
+    stream path fails loudly instead of silently degrading."""
+    def boom(*a, **k):
+        raise AssertionError("per-snapshot fallback taken — v3 must route "
+                             "through the stream kernel")
+    srv._step = boom
+
+
+def test_snapshot_server_v3_evolvegcn_takes_stream_path():
+    """EvolveGCN mode="v3" runs the weights-resident stream kernel in the
+    server — NO per-snapshot fallback (regression: PR 2 fell back to v1
+    stepping) — and the chunk's no-op tail snapshots must leave the
+    evolving-weight state untouched (the final state equals the offline
+    v1 scan over the LIVE snapshots only)."""
     cfg = DGNN_CONFIGS["evolvegcn"]
     tg, ft = generate_temporal_graph(UCI)
-    snaps = slice_snapshots(tg, 1.0)[:5]
-    srv = SnapshotServer(cfg, ft, n_global=tg.n_global_nodes, mode="v3")
+    # 7 snaps, stream_chunk=4 -> chunks of T=4 and T=3; the second pads to
+    # the next power of two with ONE no-op tail snapshot (pow2(3) == 4),
+    # so the single-tenant tail path is genuinely exercised.
+    snaps = slice_snapshots(tg, 1.0)[:7]
+    srv = SnapshotServer(cfg, ft, n_global=tg.n_global_nodes, mode="v3",
+                         stream_chunk=4)
+    _forbid_per_step(srv)
     params, state = srv.init(jax.random.PRNGKey(0))
-    _, outs, _ = srv.run(params, state, snaps)
+    final_state, outs, _ = srv.run(params, state, snaps)
+    assert len(outs) == 7
     model = build_model(cfg)
     pads = [pad_snapshot(renumber_and_normalize(s), ft, srv.n_pad, srv.e_pad,
                          srv.k_max) for s in snaps]
     st = model.init_state(params, mode="baseline")
     _, offline = run_stream(model, params, st, stack_time(pads),
                             mode="baseline")
-    for t in range(5):
+    for t in range(7):
         np.testing.assert_allclose(outs[t], np.asarray(offline)[t], atol=1e-5)
+    # evolving-weight state: equal to the v1 scan over the 7 live
+    # snapshots — if the no-op tail step had evolved the weights, or the
+    # kernel double-evolved at its first step, this diverges.
+    st1 = model.init_state(params, mode="v1")
+    off_state, _ = run_stream(model, params, st1, stack_time(pads),
+                              mode="v1")
+    for i, (got, want) in enumerate(zip(final_state["weights"],
+                                        off_state["weights"])):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-5, err_msg=f"weights[{i}]")
 
 
 def test_snapshot_server_no_fit_bucket_raises():
@@ -203,24 +230,41 @@ def test_run_multi_producer_exception_propagates():
         srv.run_multi(params, states, streams)
 
 
-def test_run_multi_evolvegcn_falls_back_to_per_step():
-    """EvolveGCN has no batched stream kernel; run_multi must take the
-    round-robin per-snapshot path and still match each client's offline
-    baseline (interleaved multi-client ordering preserved)."""
+def test_run_multi_evolvegcn_takes_batched_stream_path():
+    """EvolveGCN joins the multi-tenant batched V3 launch: run_multi must
+    NOT take the per-snapshot round-robin path (regression: PR 2 fell
+    back for the weights-evolved family). Uneven stream lengths force
+    no-op tail snapshots AND a no-op padding stream in the batch — each
+    client's outputs and final evolving weights must still equal its own
+    offline run."""
     cfg = DGNN_CONFIGS["evolvegcn"]
     tg, ft = generate_temporal_graph(UCI)
     all_snaps = slice_snapshots(tg, 1.0)
-    streams = {"x": all_snaps[:4], "y": all_snaps[1:5]}
-    srv = SnapshotServer(cfg, ft, n_global=tg.n_global_nodes, mode="v3")
+    streams = {"x": all_snaps[:4], "y": all_snaps[1:6], "z": all_snaps[3:6]}
+    srv = SnapshotServer(cfg, ft, n_global=tg.n_global_nodes, mode="v3",
+                         stream_chunk=4)
+    _forbid_per_step(srv)
     params, _ = srv.init(jax.random.PRNGKey(0))
     states = {sid: srv.model.init_state(params, mode="v3") for sid in streams}
     states, outs, _ = srv.run_multi(params, states, streams)
+    model = build_model(cfg)
     for sid, snaps in streams.items():
         _, off = _offline_outputs(cfg, tg, ft, params, snaps)
         assert len(outs[sid]) == len(snaps)
         for t in range(len(snaps)):
             np.testing.assert_allclose(outs[sid][t], np.asarray(off)[t],
                                        atol=1e-5, err_msg=f"{sid} t={t}")
+        pads = [pad_snapshot(renumber_and_normalize(s), ft, srv.n_pad,
+                             srv.e_pad, srv.k_max) for s in snaps]
+        st1 = model.init_state(params, mode="v1")
+        off_state, _ = run_stream(model, params, st1, stack_time(pads),
+                                  mode="v1")
+        for i, (got, want) in enumerate(zip(states[sid]["weights"],
+                                            off_state["weights"])):
+            np.testing.assert_allclose(
+                np.asarray(got), np.asarray(want), atol=1e-5,
+                err_msg=f"{sid} weights[{i}] disturbed by co-tenants or "
+                        "no-op padding")
 
 
 def test_lm_generate_greedy_deterministic():
