@@ -86,6 +86,7 @@ def run_batched_sweep(name: str = "gcrn-m2", t_steps: int = 6,
     import numpy as np
 
     from benchmarks.common import load_stream
+    from benchmarks.kernel_bench import live_padded_counts
     from repro.configs.dgnn import DGNN_CONFIGS
     from repro.core import (build_model, init_states_batched, run_batched,
                             run_stream)
@@ -127,9 +128,14 @@ def run_batched_sweep(name: str = "gcrn-m2", t_steps: int = 6,
             t_seq = float(np.median(ts)) * 1e3
             t_bat = float(np.median(tb)) * 1e3
             total = B * t_steps
+            # padded-vs-live slots of the batched launch: this offline
+            # sweep is all-live; serve-side chunk tails, no-op batch rows
+            # and promoted buckets surface here as snaps_padded > 0.
+            live, padded = live_padded_counts(sTB.node_mask)
             rows.append((f"fig6/batched_v3/{name}/B{B}", t_bat * 1e3,
                          f"throughput={total / (t_bat / 1e3):.0f}_snap/s,"
                          f"dispatches=1_vs_{B},"
+                         f"snaps_live={live},snaps_padded={padded},"
                          f"speedup_vs_{B}x_sequential={t_seq / t_bat:.2f}x"))
     finally:
         ops.set_force_ref(False)

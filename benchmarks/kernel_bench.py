@@ -22,6 +22,33 @@ def vmem_bytes_spmm(n=640, k=64, d=128, tn=128) -> int:
     return x_resident + idx_tile + coef_tile + out_tile
 
 
+def live_padded_counts(node_mask) -> tuple[int, int]:
+    """Padded-vs-live snapshot slots of a (batched) stream launch.
+
+    A snapshot slot (b, t) is LIVE when any node is masked in; everything
+    else is padding (no-op T tails, no-op batch rows, promoted-bucket
+    inflation). Batched rows report both so padding overhead is visible
+    instead of hiding in throughput.
+    """
+    m = np.asarray(node_mask)
+    live = int((m.sum(axis=-1) > 0).sum())
+    total = int(np.prod(m.shape[:-1]))
+    return live, total - live
+
+
+def vmem_state_block_bytes(n_global: int, hidden: int,
+                           td: int | None = None) -> int:
+    """Bytes of ONE (n_global, td) state window under D-axis blocking.
+
+    td=None is the fully resident layout ((n_global, hidden) per buffer).
+    The window is the PAGING UNIT an HBM-resident store would DMA per d
+    block (the ROADMAP follow-up) — NOT today's allocation: the interpret
+    build still stacks all windows in one VMEM scratch, so current VMEM
+    use does not shrink with td.
+    """
+    return n_global * (hidden if td is None else td) * 4
+
+
 def recurrent_state_hbm_bytes(T: int, n_global: int, hidden: int,
                               n_states: int = 2, *, time_fused: bool) -> int:
     """HBM bytes moved for the recurrent state stores over one stream.
@@ -116,21 +143,36 @@ def run_stream_vs_per_step(t_steps: int = 8, hidden: int = 128
         (hs, cs), outs = jax.lax.scan(body, (h_store, c_store), xs)
         return outs, hs, cs
 
-    def v3_stream(h_store, c_store):
-        return ops.dgnn_stream_steps(
-            sT.neigh_idx, sT.neigh_coef, sT.neigh_eidx, sT.node_feat,
-            sT.renumber, sT.node_mask, h_store, c_store, wx, wh, b)
+    def v3_stream(h_store, c_store, td=None):
+        return ops.stream_steps(
+            "gcrn", sT.neigh_idx, sT.neigh_coef, sT.neigh_eidx, sT.node_feat,
+            sT.renumber, sT.node_mask, h_store, c_store, wx, wh, b, td=td)
 
     rows = []
     bytes_v2 = recurrent_state_hbm_bytes(t_steps, G, hidden, time_fused=False)
     bytes_v3 = recurrent_state_hbm_bytes(t_steps, G, hidden, time_fused=True)
+    live, padded = live_padded_counts(sT.node_mask)
     t_v2 = time_step_fn(jax.jit(v2_scan), h0, c0, iters=5)
     rows.append((f"kernel/gcrn_per_step_v2_T{t_steps}", t_v2 * 1e3,
                  f"state_hbm_bytes={bytes_v2} (h+c in/out every step)"))
     t_v3 = time_step_fn(jax.jit(v3_stream), h0, c0, iters=5)
     rows.append((f"kernel/gcrn_time_fused_v3_T{t_steps}", t_v3 * 1e3,
                  f"state_hbm_bytes={bytes_v3},"
-                 f"state_hbm_reduction={bytes_v2 // bytes_v3}x"))
+                 f"state_hbm_reduction={bytes_v2 // bytes_v3}x,"
+                 f"snaps_live={live},snaps_padded={padded}"))
+    # D-blocked layout: same stream, state addressed through (G, td)
+    # column windows — the VMEM-oversized-store configuration. Identical
+    # outputs (the engine's round-trip contract). The window size is the
+    # PAGING UNIT of the planned HBM-resident store, not a VMEM saving
+    # today (the interpret build stacks all windows in one allocation).
+    td = hidden // 2
+    t_v3b = time_step_fn(jax.jit(lambda hh, cc: v3_stream(hh, cc, td=td)),
+                         h0, c0, iters=5)
+    rows.append((f"kernel/gcrn_v3_dblocked_td{td}_T{t_steps}", t_v3b * 1e3,
+                 f"state_hbm_bytes={bytes_v3},"
+                 f"dblock_paging_window_bytes={vmem_state_block_bytes(G, hidden, td)},"
+                 f"resident_state_bytes={vmem_state_block_bytes(G, hidden)},"
+                 f"snaps_live={live},snaps_padded={padded}"))
     return rows
 
 
@@ -183,7 +225,7 @@ def run_evolve_stream_vs_per_step(t_steps: int = 8, n: int = 640,
         return ref.evolve_stream_ref(*stream, weights, bg, gwx, gwh, gb)
 
     def v3_stream(weights):
-        return ops.evolve_stream_steps(*stream, weights, bg, gwx, gwh, gb)
+        return ops.stream_steps("evolve", *stream, weights, bg, gwx, gwh, gb)
 
     bytes_v1 = evolving_weights_hbm_bytes(t_steps, dims, time_fused=False)
     bytes_v3 = evolving_weights_hbm_bytes(t_steps, dims, time_fused=True)
@@ -242,8 +284,11 @@ def _time_batched_vs_sequential(one, bat, singles, iters: int):
 
 
 def _dispatch_rows(family: str, B: int, t_steps: int, t_seq: float,
-                   t_bat: float, path: str) -> list[tuple[str, float, str]]:
+                   t_bat: float, path: str, node_mask=None
+                   ) -> list[tuple[str, float, str]]:
     total_snaps = B * t_steps
+    live, padded = (live_padded_counts(node_mask) if node_mask is not None
+                    else (total_snaps, 0))
     return [
         (f"kernel/{family}_v3_sequential_B{B}_T{t_steps}", t_seq * 1e3,
          f"dispatches={B},path={path},"
@@ -251,6 +296,7 @@ def _dispatch_rows(family: str, B: int, t_steps: int, t_seq: float,
         (f"kernel/{family}_v3_batched_B{B}_T{t_steps}", t_bat * 1e3,
          f"dispatches=1,path={path},"
          f"throughput={total_snaps / (t_bat / 1e3):.0f}_snap/s,"
+         f"snaps_live={live},snaps_padded={padded},"
          f"speedup_vs_sequential={t_seq / t_bat:.2f}x"),
     ]
 
@@ -280,14 +326,15 @@ def run_evolve_batched_streams(B: int = 8, t_steps: int = 4, n: int = 64,
     wsB = [jnp.asarray(rngs.normal(size=(B,) + d) * 0.1, jnp.float32)
            for d in dims]
 
-    one = jax.jit(lambda s, w: ops.evolve_stream_steps(
-        *s, w, bg, gwx, gwh, gb))
-    bat = jax.jit(lambda w: ops.evolve_stream_steps_batched(
-        *batch, w, bg, gwx, gwh, gb))
+    one = jax.jit(lambda s, w: ops.stream_steps(
+        "evolve", *s, w, bg, gwx, gwh, gb))
+    bat = jax.jit(lambda w: ops.stream_steps_batched(
+        "evolve", *batch, w, bg, gwx, gwh, gb))
     t_seq, t_bat, path = _time_batched_vs_sequential(
         one, lambda: bat(wsB),
         [(single[i], [w[i] for w in wsB]) for i in range(B)], iters)
-    return _dispatch_rows("evolve", B, t_steps, t_seq, t_bat, path)
+    return _dispatch_rows("evolve", B, t_steps, t_seq, t_bat, path,
+                          node_mask=batch[3])
 
 
 def run_batched_streams(B: int = 8, t_steps: int = 4, n: int = 64,
@@ -334,14 +381,15 @@ def run_batched_streams(B: int = 8, t_steps: int = 4, n: int = 64,
     c0B = jnp.asarray(rngs.normal(size=(B, n_global, hidden)) * 0.1,
                       jnp.float32)
 
-    one = jax.jit(lambda s, hh, cc: ops.dgnn_stream_steps(
-        *s, hh, cc, wx, wh, b))
-    bat = jax.jit(lambda hB, cB: ops.dgnn_stream_steps_batched(
-        *batch, hB, cB, wx, wh, b))
+    one = jax.jit(lambda s, hh, cc: ops.stream_steps(
+        "gcrn", *s, hh, cc, wx, wh, b))
+    bat = jax.jit(lambda hB, cB: ops.stream_steps_batched(
+        "gcrn", *batch, hB, cB, wx, wh, b))
     t_seq, t_bat, path = _time_batched_vs_sequential(
         one, lambda: bat(h0B, c0B),
         [(single[i], h0B[i], c0B[i]) for i in range(B)], iters)
-    return _dispatch_rows("gcrn", B, t_steps, t_seq, t_bat, path)
+    return _dispatch_rows("gcrn", B, t_steps, t_seq, t_bat, path,
+                          node_mask=batch[5])
 
 
 if __name__ == "__main__":

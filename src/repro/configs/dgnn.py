@@ -25,6 +25,10 @@ class DGNNConfig:
     max_nodes: int = 640   # >= Table III max nodes (578)
     max_edges: int = 2048  # >= Table III max edges (1686)
     n_streams: int = 1     # batched independent dynamic-graph streams
+    # V3 stream-engine D-axis block size: column width of the recurrent
+    # state windows when the (n_global, hidden) store exceeds VMEM (see
+    # docs/stream_engine.md). None = one block, fully resident.
+    stream_td: int | None = None
 
 
 EVOLVEGCN = DGNNConfig(

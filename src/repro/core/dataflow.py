@@ -14,16 +14,20 @@ stream, reproducing the paper's ablation levels (Fig. 6):
   v2 (o2)      Pipeline-O2 for stacked/integrated DGNNs: intra-step fusion
                (node-queue analogue) via the fused Pallas kernel.
   v3           Time-fused stream: the whole T-step stream runs inside ONE
-               Pallas kernel (kernels/stream_fused.py) with the recurrent
-               state living in VMEM scratch between snapshots — the
-               paper's BRAM-resident intermediate results. Every model
-               exposes it as ``step_stream``: GCRN/stacked keep the
-               (n_global, H) node-state store resident (h/c cross HBM
+               launch of the generic stream-engine kernel
+               (kernels/stream_fused.py) with the recurrent state living
+               in VMEM scratch between snapshots — the paper's
+               BRAM-resident intermediate results. Every model exposes it
+               as ``step_stream`` and dispatches by its ``stream_family``
+               through the engine's cell-spec REGISTRY: GCRN/stacked keep
+               the (n_global, H) node-state store resident (h/c cross HBM
                once per stream instead of once per step), and EvolveGCN
                keeps its per-layer evolving weight matrices resident with
                the matrix-GRU evolution running in-kernel between
                snapshots (W_l crosses HBM twice per stream instead of
-               twice per step).
+               twice per step). State stores larger than VMEM stream in
+               (n_global, td) column tiles via the engine's D grid axis
+               (cfg.stream_td; see docs/stream_engine.md).
 
 Ablation summary (what each level removes from the critical path):
 

@@ -45,6 +45,9 @@ def layer_dims(cfg: DGNNConfig) -> list[tuple[int, int]]:
 
 
 class EvolveGCN:
+    # cell spec this model dispatches to in the stream-engine registry
+    stream_family = "evolve"
+
     def __init__(self, cfg: DGNNConfig, impl: str = "xla"):
         assert cfg.dgnn_type == "weights_evolved"
         self.cfg = cfg
@@ -129,22 +132,22 @@ class EvolveGCN:
     def _run_stream_kernel(self, params: dict, state: dict,
                            snaps: PaddedSnapshot, batched: bool
                            ) -> tuple[dict, jax.Array]:
-        """Shared plumbing for the (batched) weights-resident kernel:
+        """Shared plumbing for the (batched) stream-engine dispatch:
         live flags (n_nodes > 0 — no-op padding snapshots must not evolve
         the weights), per-layer param lists, edge aggregates."""
         from repro.kernels import ops as kops
 
-        fn = (kops.evolve_stream_steps_batched if batched
-              else kops.evolve_stream_steps)
+        fn = kops.stream_steps_batched if batched else kops.stream_steps
         live = (snaps.n_nodes > 0).astype(jnp.int32)
         outs, wT = fn(
+            self.stream_family,
             snaps.neigh_idx, snaps.neigh_coef, snaps.node_feat,
             snaps.node_mask, live, list(state["weights"]),
             [p["b"] for p in params["gcn"]],
             [g["wx"] for g in params["gru"]],
             [g["wh"] for g in params["gru"]],
             [g["b"] for g in params["gru"]],
-            self._edge_aggs(params, snaps),
+            self._edge_aggs(params, snaps), td=self.cfg.stream_td,
         )
         return {"weights": list(wT)}, outs
 

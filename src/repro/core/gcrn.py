@@ -38,6 +38,10 @@ from repro.graph.padding import PaddedSnapshot
 
 
 class GCRN:
+    # cell spec this model dispatches to in the stream-engine registry
+    # (kernels/stream_fused.REGISTRY, via kernels/ops.stream_steps)
+    stream_family = "gcrn"
+
     def __init__(self, cfg: DGNNConfig, impl: str = "xla", n_global: int = 4096):
         assert cfg.dgnn_type == "integrated"
         self.cfg = cfg
@@ -115,41 +119,38 @@ class GCRN:
         }
         return new_state, out * m
 
-    def step_stream(self, params: dict, state: dict, snaps_T: PaddedSnapshot
-                    ) -> tuple[dict, jax.Array]:
-        """V3: run a whole (T, ...) snapshot stream through the time-fused
-        kernel; h/c stay in VMEM across steps (gather/scatter included)."""
+    def _stream(self, params: dict, state: dict, snaps, batched: bool):
+        """Shared plumbing for the (batched) stream-engine dispatch: the
+        engine is selected by ``stream_family`` from the registry; the
+        D-axis block size comes from cfg.stream_td (None = fully
+        resident)."""
         from repro.kernels import ops as kops
 
+        fn = kops.stream_steps_batched if batched else kops.stream_steps
         w_edge = params.get("w_edge")
-        edge_msg = snaps_T.edge_feat @ w_edge if w_edge is not None else None
-        outs_h, h_T, c_T = kops.dgnn_stream_steps(
-            snaps_T.neigh_idx, snaps_T.neigh_coef, snaps_T.neigh_eidx,
-            snaps_T.node_feat, snaps_T.renumber, snaps_T.node_mask,
+        edge_msg = snaps.edge_feat @ w_edge if w_edge is not None else None
+        outs_h, h_T, c_T = fn(
+            self.stream_family,
+            snaps.neigh_idx, snaps.neigh_coef, snaps.neigh_eidx,
+            snaps.node_feat, snaps.renumber, snaps.node_mask,
             state["h"], state["c"],
             params["lstm"]["wx"], params["lstm"]["wh"], params["lstm"]["b"],
-            edge_msg,
+            edge_msg, td=self.cfg.stream_td,
         )
         out = outs_h @ params["head"]["w"] + params["head"]["b"]
-        return {"h": h_T, "c": c_T}, out * snaps_T.node_mask[..., None]
+        return {"h": h_T, "c": c_T}, out * snaps.node_mask[..., None]
+
+    def step_stream(self, params: dict, state: dict, snaps_T: PaddedSnapshot
+                    ) -> tuple[dict, jax.Array]:
+        """V3: run a whole (T, ...) snapshot stream through the stream
+        engine; h/c stay in VMEM across steps (gather/scatter included)."""
+        return self._stream(params, state, snaps_T, batched=False)
 
     def step_stream_batched(self, params: dict, state: dict,
                             snaps_BT: PaddedSnapshot) -> tuple[dict, jax.Array]:
         """Batched V3: B independent snapshot streams — (B, T, ...) leaves,
         state leaves (B, n_global, H) — through ONE launch of the batched
-        time-fused kernel (weights shared, one VMEM-resident store per
+        stream engine (weights shared, one VMEM-resident store per
         stream). Row b of the result is bit-close to running stream b alone
         through ``step_stream``."""
-        from repro.kernels import ops as kops
-
-        w_edge = params.get("w_edge")
-        edge_msg = snaps_BT.edge_feat @ w_edge if w_edge is not None else None
-        outs_h, h_T, c_T = kops.dgnn_stream_steps_batched(
-            snaps_BT.neigh_idx, snaps_BT.neigh_coef, snaps_BT.neigh_eidx,
-            snaps_BT.node_feat, snaps_BT.renumber, snaps_BT.node_mask,
-            state["h"], state["c"],
-            params["lstm"]["wx"], params["lstm"]["wh"], params["lstm"]["b"],
-            edge_msg,
-        )
-        out = outs_h @ params["head"]["w"] + params["head"]["b"]
-        return {"h": h_T, "c": c_T}, out * snaps_BT.node_mask[..., None]
+        return self._stream(params, state, snaps_BT, batched=True)

@@ -30,6 +30,9 @@ from repro.graph.padding import PaddedSnapshot
 
 
 class StackedDGNN:
+    # cell spec this model dispatches to in the stream-engine registry
+    stream_family = "stacked"
+
     def __init__(self, cfg: DGNNConfig, impl: str = "xla", n_global: int = 4096):
         assert cfg.dgnn_type == "stacked"
         self.cfg = cfg
@@ -97,58 +100,47 @@ class StackedDGNN:
         new_state, h_new = self.rnn(params, state, snap, x, fused=fused)
         return new_state, h_new
 
-    def step_stream(self, params: dict, state: dict, snaps_T: PaddedSnapshot
-                    ) -> tuple[dict, jax.Array]:
-        """V3: whole (T, ...) stream through the time-fused kernel.
+    def _stream(self, params: dict, state: dict, snaps, batched: bool):
+        """Shared plumbing for the (batched) stream-engine dispatch.
 
-        GCN layers before the last have no temporal dependence, so they run
-        vmapped over T; the last layer + GRU + store gather/scatter execute
-        inside the stream kernel with h resident in VMEM."""
+        GCN layers before the last have no temporal dependence, so they
+        run vmapped outside the kernel (doubly vmapped when batched: time-
+        AND stream-independent); the last layer + GRU + store
+        gather/scatter execute inside the engine with h resident in
+        VMEM."""
         from repro.kernels import ops as kops
 
-        x = snaps_T.node_feat
+        fn = kops.stream_steps_batched if batched else kops.stream_steps
+        gcn_vmap = jax.vmap if not batched else (
+            lambda f: jax.vmap(jax.vmap(f)))
+        x = snaps.node_feat
         for p in params["gcn"][:-1]:
-            x = jax.vmap(
+            x = gcn_vmap(
                 lambda s, xx, p=p: G.gcn_layer(p, s, xx, impl=self.impl)
-            )(snaps_T, x)
+            )(snaps, x)
         p_last = params["gcn"][-1]
         w_edge = params["gcn"][0].get("w_edge")
-        edge_msg = (snaps_T.edge_feat @ w_edge
+        edge_msg = (snaps.edge_feat @ w_edge
                     if (w_edge is not None and len(params["gcn"]) == 1)
                     else None)
-        outs_h, h_T = kops.stacked_stream_steps(
-            snaps_T.neigh_idx, snaps_T.neigh_coef, snaps_T.neigh_eidx,
-            x, snaps_T.renumber, snaps_T.node_mask, state["h"],
+        outs_h, h_T = fn(
+            self.stream_family,
+            snaps.neigh_idx, snaps.neigh_coef, snaps.neigh_eidx,
+            x, snaps.renumber, snaps.node_mask, state["h"],
             p_last["w"], p_last["b"],
             params["gru"]["wx"], params["gru"]["wh"], params["gru"]["b"],
-            edge_msg,
+            edge_msg, td=self.cfg.stream_td,
         )
         return {"h": h_T}, outs_h
+
+    def step_stream(self, params: dict, state: dict, snaps_T: PaddedSnapshot
+                    ) -> tuple[dict, jax.Array]:
+        """V3: whole (T, ...) stream through the stream engine."""
+        return self._stream(params, state, snaps_T, batched=False)
 
     def step_stream_batched(self, params: dict, state: dict,
                             snaps_BT: PaddedSnapshot) -> tuple[dict, jax.Array]:
         """Batched V3: B independent streams — (B, T, ...) leaves, state
         leaves (B, n_global, H) — through one launch of the batched stream
-        kernel. Pre-last GCN layers are time- AND stream-independent, so
-        they run doubly vmapped; the last layer + GRU + store
-        gather/scatter execute inside the kernel per stream."""
-        from repro.kernels import ops as kops
-
-        x = snaps_BT.node_feat
-        for p in params["gcn"][:-1]:
-            x = jax.vmap(jax.vmap(
-                lambda s, xx, p=p: G.gcn_layer(p, s, xx, impl=self.impl)
-            ))(snaps_BT, x)
-        p_last = params["gcn"][-1]
-        w_edge = params["gcn"][0].get("w_edge")
-        edge_msg = (snaps_BT.edge_feat @ w_edge
-                    if (w_edge is not None and len(params["gcn"]) == 1)
-                    else None)
-        outs_h, h_T = kops.stacked_stream_steps_batched(
-            snaps_BT.neigh_idx, snaps_BT.neigh_coef, snaps_BT.neigh_eidx,
-            x, snaps_BT.renumber, snaps_BT.node_mask, state["h"],
-            p_last["w"], p_last["b"],
-            params["gru"]["wx"], params["gru"]["wh"], params["gru"]["b"],
-            edge_msg,
-        )
-        return {"h": h_T}, outs_h
+        engine."""
+        return self._stream(params, state, snaps_BT, batched=True)

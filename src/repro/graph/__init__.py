@@ -3,10 +3,12 @@ from repro.graph.csr import LocalSnapshot, max_in_degree, renumber_and_normalize
 from repro.graph.padding import (
     DEFAULT_BUCKETS,
     PaddedSnapshot,
+    bucket_cost,
     choose_bucket,
     choose_bucket_batch,
     empty_like_padded,
     pad_snapshot,
+    promote_bucket_groups,
     stack_streams,
     unpad_snapshot,
 )
@@ -17,5 +19,6 @@ __all__ = [
     "LocalSnapshot", "renumber_and_normalize", "to_ell", "max_in_degree",
     "PaddedSnapshot", "pad_snapshot", "stack_streams", "choose_bucket",
     "choose_bucket_batch", "unpad_snapshot", "empty_like_padded",
+    "bucket_cost", "promote_bucket_groups",
     "DEFAULT_BUCKETS", "generate_temporal_graph",
 ]

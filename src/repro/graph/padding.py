@@ -167,4 +167,50 @@ def choose_bucket_batch(dims: "list[tuple[int, int, int]]",
     return choose_bucket(n, e, k, buckets)
 
 
+def bucket_cost(bucket: tuple[int, int, int]) -> int:
+    """Padded per-snapshot compute proxy for a bucket: ELL aggregation
+    lanes (n_pad * k_max) plus the per-node transform rows (n_pad) — the
+    work a snapshot pays when padded into the bucket, whatever its true
+    size. Used by the promotion guard below."""
+    n_pad, _, k_max = bucket
+    return n_pad * (k_max + 1)
+
+
+def promote_bucket_groups(groups: dict, buckets: tuple,
+                          max_overhead: float) -> dict:
+    """Cross-bucket batching via bucket promotion (multi-tenant grouper).
+
+    ``groups`` maps bucket -> list of same-bucket stream chunks queued for
+    one batched V3 launch each. A smaller-bucket group may be PROMOTED
+    into the next-larger occupied bucket — its chunks re-pad to the bigger
+    shape and join that launch — which trades padding overhead for one
+    fewer device dispatch (the win batching exists for: small per-tenant
+    chunks underutilize the device anyway). The guard: promotion happens
+    only when bucket_cost(target) <= max_overhead * bucket_cost(own), so a
+    tiny chunk is never inflated into a huge bucket just to save a launch.
+
+    Returns a new groups dict; members keep their (sid, chunk, bucket)
+    layout with the bucket re-tagged to the promotion target. Promotion is
+    transitive up the chain (a promoted group can merge again) as long as
+    every hop honours the guard against the member's ORIGINAL bucket.
+    """
+    order = {b: i for i, b in enumerate(buckets)}
+    merged: dict = {b: list(members) for b, members in groups.items()}
+    # ascending visit order: merges only move members into LATER buckets,
+    # so every visited key is still present
+    for b in sorted(merged, key=order.get):
+        bigger = [b2 for b2 in merged if b2 != b and order[b2] > order[b]]
+        if not bigger:
+            continue
+        target = min(bigger, key=order.get)
+        # guard against each member's own bucket (promotion may chain)
+        if any(bucket_cost(target) > max_overhead * bucket_cost(own)
+               for _, _, own in merged[b]):
+            continue
+        merged[target] = merged[target] + merged[b]
+        del merged[b]
+    return {b: [(sid, chunk, b) for sid, chunk, _ in members]
+            for b, members in merged.items()}
+
+
 DEFAULT_BUCKETS = ((128, 512, 32), (320, 1024, 48), (640, 4096, 96))

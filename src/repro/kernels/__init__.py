@@ -3,10 +3,13 @@
 csr_spmm.py      ELL SpMM (message passing)         + oracle in ref.py
 fused_rnn.py     fused GRU / LSTM cells (O1)        + oracle in ref.py
 dgnn_fused.py    V2 fused GNN+RNN step (node queue) + oracle in ref.py
-stream_fused.py  V3 time-fused stream (VMEM-resident recurrent state)
-                 + stream oracles in ref.py
+stream_fused.py  V3 stream engine: ONE generic time-fused kernel + the
+                 per-family cell-spec REGISTRY (VMEM-resident recurrent
+                 state, D-axis blocking for oversized stores; contract in
+                 docs/stream_engine.md) + stream oracles in ref.py
 ops.py           jit'd public wrappers (interpret on non-TPU backends,
-                 auto-padding for ragged node counts)
+                 auto-padding for ragged node counts); V3 dispatches
+                 through stream_steps[_batched](family, ...)
 """
 from repro.kernels import ops, ref
 

@@ -41,18 +41,13 @@ def set_force_ref(flag: bool) -> None:
     _FORCE_REF = flag
 
 
+# single shared copies of the round-up / constant-fill padding helpers
+# (stream_fused owns them; ops re-exports under its historical names)
+_pad_to = _stream._pad_dim
+
+
 def _pad_rows(n: int, tn: int) -> int:
-    return ((n + tn - 1) // tn) * tn
-
-
-def _pad_to(a, n2: int, axis: int, fill=0):
-    """Pad ``a`` to ``n2`` rows along ``axis`` with a constant fill."""
-    n = a.shape[axis]
-    if n == n2:
-        return a
-    widths = [(0, 0)] * a.ndim
-    widths[axis] = (0, n2 - n)
-    return jnp.pad(a, widths, constant_values=fill)
+    return _stream._round_up(n, tn)
 
 
 def ell_spmm(neigh_idx, neigh_coef, neigh_eidx, x, edge_msg=None, *,
@@ -110,6 +105,11 @@ def stacked_fused_step(neigh_idx, neigh_coef, neigh_eidx, x, h, w_gcn, b_gcn,
 
 
 # ------------------------------------------------------------ V3 stream ----
+# ONE pair of public entry points — stream_steps / stream_steps_batched —
+# dispatching through the stream-engine registry (stream_fused.REGISTRY)
+# by family name instead of family-named wrappers. The force-ref gate sits
+# at this single entry, so no family branch can silently run the Pallas
+# path under force-ref (the regression tests/test_registry.py pins).
 
 def _pad_stream(neigh_idx, neigh_coef, neigh_eidx, node_feat, renumber,
                 node_mask, tn: int):
@@ -143,93 +143,46 @@ def _stream_index_tables(renumber, neigh_idx, n_global: int):
     return neigh_gidx.astype(jnp.int32), row_gidx
 
 
-def dgnn_stream_steps(neigh_idx, neigh_coef, neigh_eidx, node_feat, renumber,
-                      node_mask, h0, c0, wx, wh, b, edge_msg=None, *,
-                      tn: int = 128, force_ref: bool = False):
-    """Time-fused GCRN stream (V3): T snapshots through one kernel launch.
-
-    The h/c global stores cross HBM exactly once per stream instead of once
-    per step. Returns (per-step h (T, n, H), final h store, final c store).
-    """
-    if force_ref or _FORCE_REF:
-        return _ref.gcrn_stream_ref(neigh_idx, neigh_coef, neigh_eidx,
-                                    node_feat, renumber, node_mask, h0, c0,
-                                    wx, wh, b, edge_msg)
-    n, idx, coef, eidx, x, ren, mask = _pad_stream(
-        neigh_idx, neigh_coef, neigh_eidx, node_feat, renumber, node_mask, tn)
-    gidx, rowg = _stream_index_tables(ren, idx, h0.shape[0])
-    outs, hT, cT = _stream.gcrn_stream_pallas(
-        idx, gidx, coef, eidx, x, rowg, mask, h0, c0, wx, wh, b, edge_msg,
-        tn=tn, interpret=_interpret())
-    return outs[:, :n], hT, cT
-
-
-def stacked_stream_steps(neigh_idx, neigh_coef, neigh_eidx, node_feat,
-                         renumber, node_mask, h0, w_gcn, b_gcn, wx, wh, b,
-                         edge_msg=None, *, tn: int = 128,
-                         force_ref: bool = False):
-    """Time-fused stacked stream (V3): last GCN layer + GRU for T snapshots
-    in one kernel launch, h store VMEM-resident throughout.
-
-    Returns (per-step h (T, n, H), final h store).
-    """
-    if force_ref or _FORCE_REF:
-        return _ref.stacked_stream_ref(neigh_idx, neigh_coef, neigh_eidx,
-                                       node_feat, renumber, node_mask, h0,
-                                       w_gcn, b_gcn, wx, wh, b, edge_msg)
-    n, idx, coef, eidx, x, ren, mask = _pad_stream(
-        neigh_idx, neigh_coef, neigh_eidx, node_feat, renumber, node_mask, tn)
-    _, rowg = _stream_index_tables(ren, idx, h0.shape[0])
-    outs, hT = _stream.stacked_stream_pallas(
-        idx, coef, eidx, x, rowg, mask, h0, w_gcn, b_gcn, wx, wh, b, edge_msg,
-        tn=tn, interpret=_interpret())
-    return outs[:, :n], hT
-
-
-# -------------------------------------------------- V3 batched streams ----
-
-def dgnn_stream_steps_batched(neigh_idx, neigh_coef, neigh_eidx, node_feat,
-                              renumber, node_mask, h0, c0, wx, wh, b,
-                              edge_msg=None, *, tn: int = 128,
-                              force_ref: bool = False):
-    """B independent time-fused GCRN streams in ONE kernel launch.
-
-    Arrays carry a leading (B, T, ...) layout; h0/c0 are (B, n_global, H) —
-    one recurrent state store per stream, each crossing HBM exactly twice.
-    Returns (per-step h (B, T, n, H), final h (B, G, H), final c (B, G, H)).
-    """
-    if force_ref or _FORCE_REF:
-        return _ref.gcrn_stream_batched_ref(neigh_idx, neigh_coef, neigh_eidx,
-                                            node_feat, renumber, node_mask,
-                                            h0, c0, wx, wh, b, edge_msg)
+def _gcrn_launch(batched, neigh_idx, neigh_coef, neigh_eidx, node_feat,
+                 renumber, node_mask, h0, c0, wx, wh, b, edge_msg=None, *,
+                 tn: int, td):
+    """Pad/pack + engine launch for the integrated (GC-LSTM) family."""
+    if not batched:
+        em = None if edge_msg is None else edge_msg[None]
+        outs, hT, cT = _gcrn_launch(
+            True, neigh_idx[None], neigh_coef[None], neigh_eidx[None],
+            node_feat[None], renumber[None], node_mask[None], h0[None],
+            c0[None], wx, wh, b, em, tn=tn, td=td)
+        return outs[0], hT[0], cT[0]
     n, idx, coef, eidx, x, ren, mask = _pad_stream(
         neigh_idx, neigh_coef, neigh_eidx, node_feat, renumber, node_mask, tn)
     gidx, rowg = _stream_index_tables(ren, idx, h0.shape[1])
-    outs, hT, cT = _stream.gcrn_stream_batched_pallas(
-        idx, gidx, coef, eidx, x, rowg, mask, h0, c0, wx, wh, b, edge_msg,
-        tn=tn, interpret=_interpret())
-    return outs[:, :, :n], hT, cT
+    h = h0.shape[-1]
+    outs, hT, cT = _stream.stream_call(
+        "gcrn", idx, gidx, coef, eidx, x, rowg, mask, h0, c0, wx, wh, b,
+        edge_msg, tn=tn, td=td, interpret=_interpret())
+    return outs[:, :, :n, :h], hT[..., :h], cT[..., :h]
 
 
-def stacked_stream_steps_batched(neigh_idx, neigh_coef, neigh_eidx, node_feat,
-                                 renumber, node_mask, h0, w_gcn, b_gcn,
-                                 wx, wh, b, edge_msg=None, *, tn: int = 128,
-                                 force_ref: bool = False):
-    """B independent time-fused stacked streams in ONE kernel launch.
-
-    Returns (per-step h (B, T, n, H), final h store (B, G, H)).
-    """
-    if force_ref or _FORCE_REF:
-        return _ref.stacked_stream_batched_ref(
-            neigh_idx, neigh_coef, neigh_eidx, node_feat, renumber, node_mask,
-            h0, w_gcn, b_gcn, wx, wh, b, edge_msg)
+def _stacked_launch(batched, neigh_idx, neigh_coef, neigh_eidx, node_feat,
+                    renumber, node_mask, h0, w_gcn, b_gcn, wx, wh, b,
+                    edge_msg=None, *, tn: int, td):
+    """Pad/pack + engine launch for the stacked (GCN -> GRU) family."""
+    if not batched:
+        em = None if edge_msg is None else edge_msg[None]
+        outs, hT = _stacked_launch(
+            True, neigh_idx[None], neigh_coef[None], neigh_eidx[None],
+            node_feat[None], renumber[None], node_mask[None], h0[None],
+            w_gcn, b_gcn, wx, wh, b, em, tn=tn, td=td)
+        return outs[0], hT[0]
     n, idx, coef, eidx, x, ren, mask = _pad_stream(
         neigh_idx, neigh_coef, neigh_eidx, node_feat, renumber, node_mask, tn)
     _, rowg = _stream_index_tables(ren, idx, h0.shape[1])
-    outs, hT = _stream.stacked_stream_batched_pallas(
-        idx, coef, eidx, x, rowg, mask, h0, w_gcn, b_gcn, wx, wh, b, edge_msg,
-        tn=tn, interpret=_interpret())
-    return outs[:, :, :n], hT
+    h = h0.shape[-1]
+    outs, hT = _stream.stream_call(
+        "stacked", idx, coef, eidx, x, rowg, mask, h0, w_gcn, b_gcn,
+        wx, wh, b, edge_msg, tn=tn, td=td, interpret=_interpret())
+    return outs[:, :, :n, :h], hT[..., :h]
 
 
 # ---------------------------------------- V3 weights-resident stream ----
@@ -261,12 +214,16 @@ def _stack_padded(mats, dmax: int, batched: bool):
 
 def _evolve_pack(neigh_idx, neigh_coef, node_feat, node_mask, weights,
                  b_gcn, gru_wx, gru_wh, gru_b, edge_aggs, tn: int,
-                 batched: bool):
-    """Shared padding/packing for the weights-resident stream wrappers."""
+                 td, batched: bool):
+    """Shared padding/packing for the weights-resident stream family. All
+    layer widths are zero-padded into one common square ``dmax`` (rounded
+    up to a ``td`` multiple so the engine's d axis tiles it evenly)."""
     n = neigh_idx.shape[-2]
     n2 = _pad_rows(n, tn)
     dims = [(w.shape[-2], w.shape[-1]) for w in weights]
     dmax = max(max(d) for d in dims)
+    if td is not None:
+        dmax = ((dmax + td - 1) // td) * td
     idx = _pad_to(neigh_idx, n2, -2)
     coef = _pad_to(neigh_coef, n2, -2)
     x = _pad_to(_pad_to(node_feat, n2, -2), dmax, -1)
@@ -294,53 +251,93 @@ def _evolve_unpack(outs, wT, n: int, dims, out_dim: int, batched: bool):
     return outs, weights
 
 
-def evolve_stream_steps(neigh_idx, neigh_coef, node_feat, node_mask, live,
-                        weights, b_gcn, gru_wx, gru_wh, gru_b,
-                        edge_aggs=None, *, tn: int = 128,
-                        force_ref: bool = False):
-    """Time-fused EvolveGCN stream (V3): T snapshots through one launch
-    with the per-layer evolving weights VMEM-resident — each W_l crosses
-    HBM exactly twice per stream (primed load + evolved drain) instead of
-    twice per step.
+def _evolve_launch(batched, neigh_idx, neigh_coef, node_feat, node_mask,
+                   live, weights, b_gcn, gru_wx, gru_wh, gru_b,
+                   edge_aggs=None, *, tn: int, td):
+    """Pad/pack + engine launch for the weights-evolved family.
 
     ``weights``/``b_gcn``/``gru_*`` are per-layer lists (true, unpadded
-    shapes); ``edge_aggs`` is the per-layer pre-aggregated edge-message
-    term (T, n, din_l) or None; ``live`` (T,) int gates the in-kernel
-    matrix-GRU evolution so no-op tail snapshots leave the weights
-    untouched. Returns (per-step outputs (T, n, out_dim), final weights
-    tuple)."""
-    if force_ref or _FORCE_REF:
-        return _ref.evolve_stream_ref(neigh_idx, neigh_coef, node_feat,
-                                      node_mask, live, weights, b_gcn,
-                                      gru_wx, gru_wh, gru_b, edge_aggs)
+    shapes; batched adds a leading B axis to ``weights`` leaves);
+    ``edge_aggs`` is the per-layer pre-aggregated edge-message term or
+    None; ``live`` gates the in-kernel matrix-GRU evolution so no-op tail
+    snapshots leave the weights untouched."""
+    if not batched:
+        ea = None if edge_aggs is None else [a[None] for a in edge_aggs]
+        outs, wT = _evolve_launch(
+            True, neigh_idx[None], neigh_coef[None], node_feat[None],
+            node_mask[None], jnp.asarray(live)[None],
+            [w[None] for w in weights], b_gcn, gru_wx, gru_wh, gru_b, ea,
+            tn=tn, td=td)
+        return outs[0], tuple(w[0] for w in wT)
     n, dims, idx, coef, x, mask, w0, bg, eagg, gwx, gwh, gb = _evolve_pack(
         neigh_idx, neigh_coef, node_feat, node_mask, weights, b_gcn,
-        gru_wx, gru_wh, gru_b, edge_aggs, tn, batched=False)
-    outs, wT = _stream.evolve_stream_pallas(
-        idx, coef, x, mask, jnp.asarray(live, jnp.int32), w0, bg,
-        gwx, gwh, gb, eagg, tn=tn, interpret=_interpret())
-    return _evolve_unpack(outs, wT, n, dims, dims[-1][1], batched=False)
-
-
-def evolve_stream_steps_batched(neigh_idx, neigh_coef, node_feat, node_mask,
-                                live, weights, b_gcn, gru_wx, gru_wh, gru_b,
-                                edge_aggs=None, *, tn: int = 128,
-                                force_ref: bool = False):
-    """B independent time-fused EvolveGCN streams in ONE kernel launch.
-
-    Arrays carry a leading (B, T, ...) layout; ``weights`` leaves are
-    (B, din_l, dout_l) — one evolving-weight state per stream, each
-    crossing HBM exactly twice. GRU params and GCN biases are shared.
-    Returns (per-step outputs (B, T, n, out_dim), final weights tuple of
-    (B, din_l, dout_l))."""
-    if force_ref or _FORCE_REF:
-        return _ref.evolve_stream_batched_ref(
-            neigh_idx, neigh_coef, node_feat, node_mask, live, weights,
-            b_gcn, gru_wx, gru_wh, gru_b, edge_aggs)
-    n, dims, idx, coef, x, mask, w0, bg, eagg, gwx, gwh, gb = _evolve_pack(
-        neigh_idx, neigh_coef, node_feat, node_mask, weights, b_gcn,
-        gru_wx, gru_wh, gru_b, edge_aggs, tn, batched=True)
-    outs, wT = _stream.evolve_stream_batched_pallas(
-        idx, coef, x, mask, jnp.asarray(live, jnp.int32), w0, bg,
-        gwx, gwh, gb, eagg, tn=tn, interpret=_interpret())
+        gru_wx, gru_wh, gru_b, edge_aggs, tn, td, batched=True)
+    outs, wT = _stream.stream_call(
+        "evolve", idx, coef, x, mask, jnp.asarray(live, jnp.int32), w0, bg,
+        gwx, gwh, gb, eagg, tn=tn, td=td, interpret=_interpret())
     return _evolve_unpack(outs, wT, n, dims, dims[-1][1], batched=True)
+
+
+# ------------------------------------------------- unified stream entry ----
+# family name -> ((solo oracle, batched oracle), engine launcher). The
+# oracle column is the XLA production path; the launcher column pads,
+# packs, and dispatches through stream_fused.REGISTRY.
+
+_STREAM_DISPATCH = {
+    "gcrn": ((_ref.gcrn_stream_ref, _ref.gcrn_stream_batched_ref),
+             _gcrn_launch),
+    "stacked": ((_ref.stacked_stream_ref, _ref.stacked_stream_batched_ref),
+                _stacked_launch),
+    "evolve": ((_ref.evolve_stream_ref, _ref.evolve_stream_batched_ref),
+               _evolve_launch),
+}
+
+
+def stream_families() -> tuple:
+    """Families servable by the stream engine (== stream_fused.REGISTRY)."""
+    return tuple(sorted(_STREAM_DISPATCH))
+
+
+def _stream_dispatch(family: str, batched: bool, args, kwargs, *, tn, td,
+                     force_ref):
+    if family not in _STREAM_DISPATCH:
+        raise KeyError(f"unknown stream-engine family {family!r}; "
+                       f"registered: {stream_families()}")
+    oracles, launch = _STREAM_DISPATCH[family]
+    if force_ref or _FORCE_REF:
+        # single force-ref gate for EVERY family and batching mode: the
+        # engine launcher (and thus pallas_call) is unreachable from here.
+        return oracles[1 if batched else 0](*args, **kwargs)
+    return launch(batched, *args, **kwargs, tn=tn, td=td)
+
+
+def stream_steps(family: str, *args, tn: int = 128, td=None,
+                 force_ref: bool = False, **kwargs):
+    """Time-fused V3 stream (one stream): T snapshots through ONE launch of
+    the generic stream engine, dispatched by ``family``
+    (``stream_fused.REGISTRY``). The family's recurrent state (node-state
+    store, or EvolveGCN's evolving weights) crosses HBM exactly twice per
+    stream instead of twice per step. ``td`` blocks the state feature axis
+    for VMEM-oversized stores (None = fully resident); blocked and
+    unblocked layouts compute identical results.
+
+    Family argument lists (same order as the kernels/ref.py oracles):
+      gcrn     (idx, coef, eidx, x, renumber, mask, h0, c0, wx, wh, b,
+                edge_msg=None) -> (outs, hT, cT)
+      stacked  (idx, coef, eidx, x, renumber, mask, h0, w_gcn, b_gcn,
+                wx, wh, b, edge_msg=None) -> (outs, hT)
+      evolve   (idx, coef, x, mask, live, weights, b_gcn, gru_wx, gru_wh,
+                gru_b, edge_aggs=None) -> (outs, weights_T)
+    """
+    return _stream_dispatch(family, False, args, kwargs, tn=tn, td=td,
+                            force_ref=force_ref)
+
+
+def stream_steps_batched(family: str, *args, tn: int = 128, td=None,
+                         force_ref: bool = False, **kwargs):
+    """B independent time-fused streams in ONE engine launch (the batch is
+    a leading grid dimension; weights shared, one resident state per
+    stream). Same family argument lists as ``stream_steps`` with a leading
+    (B, ...) axis on stream arrays and per-stream state."""
+    return _stream_dispatch(family, True, args, kwargs, tn=tn, td=td,
+                            force_ref=force_ref)

@@ -66,8 +66,11 @@ def stacked_fused_step(neigh_idx, neigh_coef, neigh_eidx, x, h,
 # ---------------------------------------------------------------- V3 ----
 # Stream oracles: the per-step V2 math plus the renumber-table-guided
 # gather/scatter against the global node-state store, scanned over T.
-# Ground truth for the time-fused stream kernels (stream_fused.py), whose
-# only difference is that the store never leaves VMEM between steps.
+# Ground truth for the stream engine (stream_fused.REGISTRY), whose only
+# difference is that the state never leaves VMEM between steps. One
+# (solo, batched) oracle pair per registered family — ops.py's
+# _STREAM_DISPATCH pairs them with the engine launchers, and force-ref
+# mode routes here (the XLA production path) for every family at once.
 
 def _gather_rows(store, renumber, mask):
     safe = jnp.where(renumber >= 0, renumber, 0)

@@ -1,56 +1,68 @@
-"""DGNN-Booster V3 time-fused stream kernels: BRAM-resident recurrent state.
+"""DGNN-Booster V3 stream engine: ONE time-fused kernel, per-family cell specs.
 
-The V2 kernels (dgnn_fused.py) fuse MP+NT+RNN *within* one snapshot but are
-re-invoked per time step from a scan, so the recurrent node-state store
-(h, and c for GCRN) round-trips HBM T times per stream — exactly the DRAM
-traffic the paper's BRAM+FIFO design eliminates. Here the WHOLE snapshot
-stream runs inside a single ``pallas_call`` with grid ``(B, T, n_pad//tn)``:
+The paper's central claim is a *generic* accelerator framework: one hardware
+template whose dataflows cover the discrete-time DGNN families, not one
+bespoke design per model. This module is that template's TPU edition. A
+single kernel body — ``_stream_engine_kernel`` — owns the stream protocol:
 
-  * each step's ELL tiles (neigh_idx / neigh_coef / neigh_eidx / node_feat /
-    renumber rows / node_mask) stream along the T grid axis via their
-    BlockSpec index maps (the paper's snapshot DMA),
-  * the global node-state store lives in VMEM **scratch** and never leaves
-    the chip between snapshots — the TPU edition of the paper's BRAM-
-    resident embeddings; the renumber-table-guided DRAM fetch/writeback
-    becomes a VMEM-internal gather/scatter.
+  * grid layout ``(B, T, L, d_pad//td, n_pad//tn)`` (stream batch, time,
+    GNN layer, state-feature block, node tile), every axis "arbitrary"
+    (sequential on one core) so the recurrent state in VMEM scratch is
+    serially reused across streams by construction;
+  * stream-boundary **init** (each stream loads its own state at its first
+    program) and **drain** (each (l, d) window writes its final state block
+    at the stream's last program);
+  * **ping-pong scratch parity** for neighbour-aggregated states (read the
+    t-1 buffer, write the t buffer, swapped by t's parity — the V1
+    ping-pong carry pushed down into the kernel);
+  * **live-gating**: the between-snapshot weight-evolution hook only runs
+    on live snapshots, so serve no-op tail padding never advances the
+    recurrence;
+  * **residency policy**: which tensors stay VMEM-resident across the T
+    axis (node-state stores, evolving weights) vs stream per step.
 
-Because step t+1's aggregation reads h produced by step t, the T axis is
-sequential (``dimension_semantics`` marks every axis "arbitrary"). The GCRN
-variant aggregates over *neighbours'* h, so within a step every tile must
-see the t-1 store while tiles write the t store: a VMEM ping-pong pair
-(read h[t-1] from one buffer, write h[t] into the other, swapped by t's
-parity) — the V1 ping-pong carry of core/dataflow.py pushed down into the
-kernel. c (GCRN) and h (stacked GRU) are touched only at a node's own row,
-each row owned by exactly one tile per step (renumbering is injective), so
-a single buffer suffices for them.
+The three DGNN families are *declarative cell specs* registered in
+``REGISTRY`` — recurrent state tensors plus a per-step cell body (and, for
+the weights-evolved family, a between-snapshot evolution hook). Callers
+(kernels/ops.py, core/*.py, serve/engine.py) dispatch through the registry
+via ``stream_call(family, ...)``; no family-named kernel exists.
 
-Batch axis (B independent streams, the production throughput axis)
-------------------------------------------------------------------
-The batch of streams is a LEADING GRID DIMENSION of the same kernel, not a
-``jax.vmap`` over the unbatched ``pallas_call``. Both execute correctly in
-interpret mode, but the vmap batching rule prepends its axis to the grid
-(``grid=(axis_size, *grid)``) while forwarding ``compiler_params``
-unchanged — so the ``dimension_semantics`` tuple we declare would no longer
-describe the axes the ping-pong parity argument depends on, and the scratch
-lifecycle across the vmapped axis becomes an implementation detail of the
-batching rule rather than something the kernel states. With an explicit B
-axis we declare all three axes "arbitrary" (sequential on one core) and the
-state scratch is *serially reused per stream by construction*: at each
-stream's own ``(t==0, j==0)`` the scratch is re-initialized from that
-stream's h0/c0 block, and at its ``(T-1, J-1)`` it drains to that stream's
-hT/cT block, so no state ever aliases between streams and each stream
-restarts the ping-pong at even parity. One launch amortizes the weight
-loads across all B streams and keeps the recurrent state's HBM traffic at
-2 transfers *per stream*, independent of T. The unbatched entry points are
-the B=1 special case of the same kernel body.
+D-axis blocking (VMEM-oversized state stores)
+---------------------------------------------
+When the ``(n_global, hidden)`` state store exceeds VMEM, the hidden axis
+is blocked onto the ``d`` grid dimension (``td`` columns per block). Cell
+bodies address state exclusively through ``(n_global, td)`` column windows
+— the unit at which the store can page on hardware builds — and the gate
+weights are re-packed host-side into per-block gate tiles
+``(D, rows, n_gates*td)`` so each program's weight/gate working set is
+``td``-sized. The blocking is exact, NOT a block-diagonal approximation:
+the hidden-to-gate matmul still consumes the full-width t-1 state (with
+D > 1 the per-tile aggregation is computed once per (t, j) at ``d == 0``
+into a cache scratch and re-read by the other d blocks; single-block
+layouts compute it inline with no cache scratch), only the gate columns
+and state writes are blocked. EvolveGCN's matrix-GRU evolves each weight
+COLUMN independently (columns are the GRU batch), so its per-(l, d-block)
+evolution is exact as well, and the documented padded-rows-stay-zero
+invariant holds per block. ``td=None`` (one block) reproduces the fully
+resident layout bit-for-bit.
+
+Batch axis: a LEADING GRID DIMENSION, not ``jax.vmap`` — the vmap batching
+rule prepends its axis to the grid while forwarding ``compiler_params``
+unchanged, so the declared ``dimension_semantics`` would no longer cover
+the axes the ping-pong parity argument depends on. See
+docs/stream_engine.md for the full grid contract, the per-family scratch
+residency table, and the drain/live-gating semantics.
 
 Correctness contract: identical math to the per-step V2 path + the models'
 gather/scatter, verified against kernels/ref.py stream oracles and the
-differential harness (v3 ≡ baseline ≡ batched-v3 row-sliced).
+differential harness (v3 ≡ baseline ≡ batched-v3 row-sliced, blocked ≡
+unblocked).
 """
 from __future__ import annotations
 
 import functools
+from dataclasses import dataclass
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -75,244 +87,515 @@ def _agg_store(gidx, coef, store):
     return (g * coef[..., None]).sum(axis=1)
 
 
-def _stream_done(t_axis: int = 1, j_axis: int = 2):
-    """Last (t, j) program of the CURRENT stream — drain point for its state."""
-    t = pl.program_id(t_axis)
-    j = pl.program_id(j_axis)
-    return jnp.logical_and(t == pl.num_programs(t_axis) - 1,
-                           j == pl.num_programs(j_axis) - 1)
+def _round_up(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
 
 
-def _gcrn_stream_kernel(has_edge,
-                        idx_ref, gidx_ref, coef_ref, eidx_ref, x_ref,
-                        rowg_ref, mask_ref, h0_ref, c0_ref,
-                        wx_ref, wh_ref, b_ref, emsg_ref,
-                        out_ref, hT_ref, cT_ref,
-                        ha_ref, hb_ref, c_ref):
-    t, j = pl.program_id(1), pl.program_id(2)
-    n_global = h0_ref.shape[1]
-    even = (t % 2) == 0  # state after step t-1 lives in A on even t
+def _pad_dim(a, n2: int, axis: int, fill=0):
+    """Pad ``a`` to ``n2`` entries along ``axis`` with a constant fill
+    (shared with kernels/ops.py — the single copy of this helper)."""
+    n = a.shape[axis]
+    if n == n2:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, n2 - n)
+    return jnp.pad(a, widths, constant_values=fill)
 
-    # every stream re-initializes the scratch from its OWN h0/c0 block at
-    # its (t==0, j==0), so streams reuse the buffers serially and each one
-    # starts the ping-pong at even parity.
-    @pl.when(jnp.logical_and(t == 0, j == 0))
-    def _init():
-        ha_ref[...] = h0_ref[0]
-        c_ref[...] = c0_ref[0]
 
-    # copy-forward at the start of each step so rows this snapshot does not
-    # touch carry over; tiles then overwrite only their own rows.
-    @pl.when(jnp.logical_and(j == 0, even))
-    def _fwd_ab():
-        hb_ref[...] = ha_ref[...]
+def _pack_gate_blocks(w, n_gates: int, td: int):
+    """Re-pack a gate-concatenated weight ``(rows, n_gates*h)`` into
+    per-d-block gate tiles ``(D, rows, n_gates*td)``.
 
-    @pl.when(jnp.logical_and(j == 0, jnp.logical_not(even)))
-    def _fwd_ba():
-        ha_ref[...] = hb_ref[...]
+    Block d holds columns [d*td, (d+1)*td) of EVERY gate, concatenated in
+    gate order, so the kernel splits its gate tensor at ``td`` boundaries
+    — the per-block edition of the fused-gate layout. Gate columns are
+    zero-padded to D*td; padded gate columns produce zero pre-activations,
+    which is what keeps the padded state columns at zero (see the cell
+    bodies)."""
+    rows = w.shape[0]
+    gs = jnp.split(w, n_gates, axis=-1)
+    d_pad = _round_up(gs[0].shape[-1], td)
+    gs = [_pad_dim(g, d_pad, -1).reshape(rows, d_pad // td, td) for g in gs]
+    packed = jnp.concatenate(gs, axis=-1)        # (rows, D, n_gates*td)
+    return jnp.moveaxis(packed, 1, 0)            # (D, rows, n_gates*td)
+
+
+def _pack_gate_bias(b, n_gates: int, td: int):
+    """(n_gates*h,) -> (D, n_gates*td) per-block gate bias."""
+    return _pack_gate_blocks(b[None], n_gates, td)[:, 0]
+
+
+# ------------------------------------------------------------------------
+# Registry data model: a family is a declarative cell spec.
+
+@dataclass(frozen=True)
+class StateDef:
+    """One recurrent state tensor of a family.
+
+    kind:
+      "pingpong"  neighbour-aggregated node state: within a step every
+                  tile must see the t-1 store while tiles write the t
+                  store, so the engine keeps an A/B pair swapped by t's
+                  parity (scratch ``(n_global, d_pad)`` each).
+      "row"       own-row node state (each row read/written by exactly
+                  one tile per step): a single ``(n_global, d_pad)``
+                  buffer suffices.
+      "weights"   per-layer evolving weight matrices ``(L, d_pad, d_pad)``
+                  (EvolveGCN), drained per (l, d-block).
+    """
+
+    name: str
+    kind: str
+
+
+@dataclass(frozen=True)
+class CellSpec:
+    """A DGNN family expressed against the stream engine.
+
+    ``build(*arrays, tn, td)`` assembles the launch (inputs, block specs,
+    scratch, meta) and binds the family's ``cell`` (per-program body) and
+    optional ``evolve`` (between-snapshot hook, live-gated by the engine).
+    """
+
+    name: str
+    resident: str                 # what stays on-chip across T (for docs)
+    states: tuple[StateDef, ...]
+    build: Callable
+
+
+@dataclass(frozen=True)
+class _StateMeta:
+    kind: str
+    in_idx: int     # position of the state's initial value in the inputs
+    out_idx: int    # position of the drained final state in the outputs
+    scr_idx: int    # first scratch slot (pingpong uses scr_idx, scr_idx+1)
+
+
+@dataclass(frozen=True)
+class _Meta:
+    n_in: int
+    n_out: int
+    states: tuple[_StateMeta, ...]
+    live_idx: Optional[int]       # input index of the (B, T) live flag
+    td: int
+
+
+@dataclass
+class _Launch:
+    grid: tuple
+    inputs: tuple
+    in_specs: list
+    out_specs: list
+    out_shape: list
+    scratch: list
+    meta: _Meta
+    cell: Callable
+    evolve: Optional[Callable]
+
+
+class _Engine:
+    """Per-program view of the engine grid handed to cell/evolve hooks."""
+
+    def __init__(self, meta: _Meta):
+        self.meta = meta
+        self.td = meta.td
+        self.t = pl.program_id(1)
+        self.l = pl.program_id(2)
+        self.d = pl.program_id(3)
+        self.j = pl.program_id(4)
+        self.n_layers = pl.num_programs(2)
+        self.n_dblocks = pl.num_programs(3)
+        self.n_tiles = pl.num_programs(4)
+        # state after step t-1 lives in the A buffer on even t
+        self.even = (self.t % 2) == 0
+        self.blk = pl.ds(self.d * meta.td, meta.td)
+        # each stream loads its state at its own first program (full width:
+        # later d blocks read the full t-1 store through the caches)
+        self.stream_start = jnp.logical_and(
+            self.t == 0, jnp.logical_and(self.d == 0, self.j == 0))
+        self.first_dblock = self.d == 0
+        self.last_tile = self.j == self.n_tiles - 1
+        # last (t, j) program of the CURRENT stream — drain point for the
+        # (l, d) window's state block
+        self.stream_done = jnp.logical_and(
+            self.t == pl.num_programs(1) - 1, self.last_tile)
+
+    # ---------------------------------------------------- state views ----
+
+    def dslice(self, val, axis: int = -1):
+        """This program's td-column window of a full-width VALUE."""
+        return jax.lax.dynamic_slice_in_dim(val, self.d * self.td, self.td,
+                                            axis=axis)
+
+    def state_read(self, scr, i: int):
+        """Full-width t-1 view of state ``i`` (cache-fill at d == 0)."""
+        sm = self.meta.states[i]
+        if sm.kind == "pingpong":
+            return jnp.where(self.even, scr[sm.scr_idx][...],
+                             scr[sm.scr_idx + 1][...])
+        return scr[sm.scr_idx][...]
+
+    def state_window(self, scr, i: int):
+        """This (d) column window of state ``i`` (t-1 view for pingpong)."""
+        sm = self.meta.states[i]
+        if sm.kind == "pingpong":
+            return jnp.where(self.even, scr[sm.scr_idx][:, self.blk],
+                             scr[sm.scr_idx + 1][:, self.blk])
+        return scr[sm.scr_idx][:, self.blk]
+
+    def state_scatter(self, scr, i: int, rowg, val):
+        """Scatter this (d, tile) block of the new state; rowg == n_global
+        marks padding rows (the sink convention) and mode="drop" discards
+        them. Pingpong states write the step's parity-selected buffer."""
+        sm = self.meta.states[i]
+        blk = self.blk
+        if sm.kind == "pingpong":
+            a_ref, b_ref = scr[sm.scr_idx], scr[sm.scr_idx + 1]
+
+            @pl.when(self.even)
+            def _wr_b():
+                b_ref[:, blk] = b_ref[:, blk].at[rowg].set(val, mode="drop")
+
+            @pl.when(jnp.logical_not(self.even))
+            def _wr_a():
+                a_ref[:, blk] = a_ref[:, blk].at[rowg].set(val, mode="drop")
+        else:
+            s_ref = scr[sm.scr_idx]
+            s_ref[:, blk] = s_ref[:, blk].at[rowg].set(val, mode="drop")
+
+
+# ------------------------------------------------------------------------
+# THE stream-engine kernel body. The only Pallas kernel in this module:
+# every family runs through it; family code enters via cell/evolve hooks.
+
+def _stream_engine_kernel(cell, evolve, meta: _Meta, *refs):
+    ins = refs[:meta.n_in]
+    outs = refs[meta.n_in:meta.n_in + meta.n_out]
+    scr = refs[meta.n_in + meta.n_out:]
+    eng = _Engine(meta)
+
+    # --- stream-boundary init (engine-owned): every stream re-initializes
+    # the scratch from its OWN state block at its first program, so streams
+    # reuse the buffers serially and each restarts the ping-pong at even
+    # parity. Weight states init per layer (each l has its own first
+    # program on the (d==0, j==0) plane).
+    for sm in meta.states:
+        in_ref = ins[sm.in_idx]
+
+        @pl.when(eng.stream_start)
+        def _init(sm=sm, in_ref=in_ref):
+            if sm.kind == "pingpong":
+                scr[sm.scr_idx][...] = in_ref[0]
+            elif sm.kind == "row":
+                scr[sm.scr_idx][...] = in_ref[0]
+            else:  # weights: full (d_pad, d_pad) block of layer l
+                scr[sm.scr_idx][pl.ds(eng.l, 1)] = in_ref[0]
+
+    # --- ping-pong copy-forward (engine-owned): at the start of each step
+    # copy the read window into the write window so rows this snapshot
+    # does not touch carry over; tiles then overwrite only their own rows.
+    for sm in meta.states:
+        if sm.kind != "pingpong":
+            continue
+        a_ref, b_ref = scr[sm.scr_idx], scr[sm.scr_idx + 1]
+
+        @pl.when(jnp.logical_and(eng.j == 0, eng.even))
+        def _fwd_ab(a_ref=a_ref, b_ref=b_ref):
+            b_ref[:, eng.blk] = a_ref[:, eng.blk]
+
+        @pl.when(jnp.logical_and(eng.j == 0, jnp.logical_not(eng.even)))
+        def _fwd_ba(a_ref=a_ref, b_ref=b_ref):
+            a_ref[:, eng.blk] = b_ref[:, eng.blk]
+
+    # --- the family's per-(t, l, d, j) cell body
+    cell(eng, ins, outs, scr)
+
+    # --- between-snapshot evolution (weights-evolved families), gated by
+    # the live flag: no-op (all-padding) snapshots are not steps of the
+    # stream and must never advance the recurrence.
+    if evolve is not None:
+        live = ins[meta.live_idx][0, 0] > 0
+
+        @pl.when(jnp.logical_and(eng.last_tile, live))
+        def _evolve():
+            evolve(eng, ins, scr)
+
+    # --- drain (engine-owned): this stream's last program of each (l, d)
+    # window writes the final state block (AFTER the final live step's
+    # update/evolution) back to HBM.
+    for sm in meta.states:
+        out_ref = outs[sm.out_idx]
+
+        @pl.when(eng.stream_done)
+        def _drain(sm=sm, out_ref=out_ref):
+            if sm.kind == "pingpong":
+                a_ref, b_ref = scr[sm.scr_idx], scr[sm.scr_idx + 1]
+                out_ref[0] = jnp.where(eng.even, b_ref[:, eng.blk],
+                                       a_ref[:, eng.blk])
+            elif sm.kind == "row":
+                out_ref[0] = scr[sm.scr_idx][:, eng.blk]
+            else:
+                out_ref[0, 0] = scr[sm.scr_idx][pl.ds(eng.l, 1), :,
+                                                eng.blk][0]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("family", "tn", "td", "interpret"))
+def stream_call(family: str, *args, tn: int = 128, td: Optional[int] = None,
+                interpret: bool = False):
+    """Run a (B, T, ...) snapshot-stream batch through the stream engine.
+
+    The single registry dispatch point: ``family`` selects a cell spec
+    whose ``build`` assembles the launch; the engine kernel body is shared.
+    ``td`` blocks the state feature axis (None = one block, fully
+    resident). Callers go through kernels/ops.py, which owns padding,
+    oracle routing, and output slicing.
+    """
+    launch = REGISTRY[family].build(*args, tn=tn, td=td)
+    kernel = functools.partial(_stream_engine_kernel, launch.cell,
+                               launch.evolve, launch.meta)
+    return pl.pallas_call(
+        kernel,
+        grid=launch.grid,
+        in_specs=launch.in_specs,
+        out_specs=launch.out_specs,
+        out_shape=launch.out_shape,
+        scratch_shapes=launch.scratch,
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("arbitrary",) * len(launch.grid)),
+        interpret=interpret,
+    )(*launch.inputs)
+
+
+# ------------------------------------------------------------------------
+# GCRN (GC-LSTM): integrated family. Neighbour-aggregated h (ping-pong
+# pair) + own-row c. The hidden-to-gate matmul consumes the FULL-width t-1
+# store (aggregated once per (t, j) into the caches at d == 0); gate
+# columns and state writes are d-blocked.
+
+def _gcrn_cell(has_edge, cached, eng, ins, outs, scr):
+    (idx_ref, gidx_ref, coef_ref, eidx_ref, x_ref, rowg_ref, mask_ref,
+     _h0, _c0, wx_ref, wh_ref, b_ref, emsg_ref) = ins
+    out_ref = outs[0]
 
     idx, gidx = idx_ref[0, 0], gidx_ref[0, 0]
     coef, eidx = coef_ref[0, 0], eidx_ref[0, 0]
-    x = x_ref[0, 0]
     rowg = rowg_ref[0, 0]
     mask = mask_ref[0, 0][:, None]
+    tn = idx.shape[0]
+    rows = pl.ds(eng.j * tn, tn)
 
-    h_prev = jnp.where(even, ha_ref[...], hb_ref[...])  # untouched t-1 slot
-    if has_edge:
-        agg_x = _agg_local_edge(idx, coef, eidx, x, emsg_ref[0, 0])
-    else:
-        agg_x = _agg_local(idx, coef, x)
-    agg_h = _agg_store(gidx, coef, h_prev)
+    def _aggregate():
+        x = x_ref[0, 0]
+        agg_x = (_agg_local_edge(idx, coef, eidx, x, emsg_ref[0, 0])
+                 if has_edge else _agg_local(idx, coef, x))
+        return agg_x, _agg_store(gidx, coef, eng.state_read(scr, 0))
 
-    gates = agg_x @ wx_ref[...] + agg_h @ wh_ref[...] + b_ref[...][None, :]
-    hdim = h_prev.shape[1]
-    i = gates[:, :hdim]
-    f = gates[:, hdim:2 * hdim]
-    g = gates[:, 2 * hdim:3 * hdim]
-    o = gates[:, 3 * hdim:]
+    if cached:  # D > 1: aggregate once per (t, j); d > 0 re-reads
+        cax, cah = scr[3], scr[4]
 
+        @pl.when(eng.first_dblock)
+        def _fill_caches():
+            cax[rows], cah[rows] = _aggregate()
+
+        agg_x, agg_h = cax[rows], cah[rows]
+    else:       # single d block: inline, no scratch round-trip
+        agg_x, agg_h = _aggregate()
+
+    td = eng.td
+    gates = agg_x @ wx_ref[0] + agg_h @ wh_ref[0] + b_ref[0][None, :]
+    i = gates[:, :td]
+    f = gates[:, td:2 * td]
+    g = gates[:, 2 * td:3 * td]
+    o = gates[:, 3 * td:]
+
+    n_global = scr[2].shape[0]
     row_safe = jnp.where(rowg < n_global, rowg, 0)
-    c_old = jnp.take(c_ref[...], row_safe, axis=0) * mask
+    c_old = jnp.take(eng.state_window(scr, 1), row_safe, axis=0) * mask
     c_new = (jax.nn.sigmoid(f) * c_old + jax.nn.sigmoid(i) * jnp.tanh(g)) * mask
     h_new = (jax.nn.sigmoid(o) * jnp.tanh(c_new)) * mask
 
-    # scatter back into the write slot; rowg == n_global marks padding rows
-    # (the sink convention) and mode="drop" discards them.
-    @pl.when(even)
-    def _wr_b():
-        hb_ref[...] = hb_ref[...].at[rowg].set(h_new, mode="drop")
-
-    @pl.when(jnp.logical_not(even))
-    def _wr_a():
-        ha_ref[...] = ha_ref[...].at[rowg].set(h_new, mode="drop")
-
-    c_ref[...] = c_ref[...].at[rowg].set(c_new, mode="drop")
+    eng.state_scatter(scr, 0, rowg, h_new)
+    eng.state_scatter(scr, 1, rowg, c_new)
     out_ref[0, 0] = h_new
 
-    @pl.when(_stream_done())
-    def _drain():
-        hT_ref[0] = jnp.where(even, hb_ref[...], ha_ref[...])
-        cT_ref[0] = c_ref[...]
 
-
-@functools.partial(jax.jit, static_argnames=("tn", "interpret"))
-def gcrn_stream_batched_pallas(neigh_idx, neigh_gidx, neigh_coef, neigh_eidx,
-                               node_feat, row_gidx, node_mask, h0, c0,
-                               wx, wh, b, edge_msg=None, *, tn: int = 128,
-                               interpret: bool = False):
-    """B independent whole-stream GCRN (GC-LSTM) runs in one pallas_call.
-
-    Shapes: neigh_* (B, T, n, k); node_feat (B, T, n, din); row_gidx /
-    node_mask (B, T, n); h0/c0 (B, n_global, hdim) — one global state store
-    per stream, each entering and leaving the chip exactly once. Weights
-    are shared across streams and loaded once per launch.
-    """
+def _gcrn_build(neigh_idx, neigh_gidx, neigh_coef, neigh_eidx, node_feat,
+                row_gidx, node_mask, h0, c0, wx, wh, b, edge_msg=None, *,
+                tn: int, td: Optional[int]):
     B, T, n, k = neigh_idx.shape
-    din, hdim = node_feat.shape[3], h0.shape[2]
-    n_global = h0.shape[1]
+    din, h = node_feat.shape[3], h0.shape[2]
+    G = h0.shape[1]
     assert n % tn == 0
-    grid = (B, T, n // tn)
-    tile = lambda bi, t, j: (bi, t, j, 0)
-    step = lambda bi, t, j: (bi, t, 0, 0)
-    row = lambda bi, t, j: (bi, t, j)
-    state = lambda bi, t, j: (bi, 0, 0)
-    res2 = lambda bi, t, j: (0, 0)
-    res1 = lambda bi, t, j: (0,)
+    td = h if td is None else td
+    d_pad = _round_up(h, td)
+    D = d_pad // td
+    grid = (B, T, 1, D, n // tn)
+
+    h0p = _pad_dim(h0, d_pad, -1)
+    c0p = _pad_dim(c0, d_pad, -1)
+    wxp = _pack_gate_blocks(wx, 4, td)                    # (D, din, 4td)
+    whp = _pack_gate_blocks(_pad_dim(wh, d_pad, 0), 4, td)  # (D, d_pad, 4td)
+    bp = _pack_gate_bias(b, 4, td)                        # (D, 4td)
+
     has_edge = edge_msg is not None
     if not has_edge:
         edge_msg = jnp.zeros((B, T, 8, din), node_feat.dtype)
     e = edge_msg.shape[2]
-    return pl.pallas_call(
-        functools.partial(_gcrn_stream_kernel, has_edge),
+
+    tile = lambda bi, t, l, d, j: (bi, t, j, 0)
+    step = lambda bi, t, l, d, j: (bi, t, 0, 0)
+    row = lambda bi, t, l, d, j: (bi, t, j)
+    state_in = lambda bi, t, l, d, j: (bi, 0, 0)
+    state_out = lambda bi, t, l, d, j: (bi, 0, d)
+    out_tile = lambda bi, t, l, d, j: (bi, t, j, d)
+    dblk = lambda bi, t, l, d, j: (d, 0, 0)
+    dblk1 = lambda bi, t, l, d, j: (d, 0)
+
+    meta = _Meta(
+        n_in=13, n_out=3,
+        states=(_StateMeta("pingpong", in_idx=7, out_idx=1, scr_idx=0),
+                _StateMeta("row", in_idx=8, out_idx=2, scr_idx=2)),
+        live_idx=None, td=td)
+    return _Launch(
         grid=grid,
+        inputs=(neigh_idx, neigh_gidx, neigh_coef, neigh_eidx, node_feat,
+                row_gidx, node_mask, h0p, c0p, wxp, whp, bp, edge_msg),
         in_specs=[
-            pl.BlockSpec((1, 1, tn, k), tile),       # neigh_idx (local)
-            pl.BlockSpec((1, 1, tn, k), tile),       # neigh_gidx (global)
-            pl.BlockSpec((1, 1, tn, k), tile),       # neigh_coef
-            pl.BlockSpec((1, 1, tn, k), tile),       # neigh_eidx
-            pl.BlockSpec((1, 1, n, din), step),      # node_feat, per (b, t)
-            pl.BlockSpec((1, 1, tn), row),           # row_gidx
-            pl.BlockSpec((1, 1, tn), row),           # node_mask
-            pl.BlockSpec((1, n_global, hdim), state),  # h0, per stream
-            pl.BlockSpec((1, n_global, hdim), state),  # c0, per stream
-            pl.BlockSpec((din, 4 * hdim), res2),
-            pl.BlockSpec((hdim, 4 * hdim), res2),
-            pl.BlockSpec((4 * hdim,), res1),
-            pl.BlockSpec((1, 1, e, din), step),      # edge messages, per (b, t)
+            pl.BlockSpec((1, 1, tn, k), tile),        # neigh_idx (local)
+            pl.BlockSpec((1, 1, tn, k), tile),        # neigh_gidx (global)
+            pl.BlockSpec((1, 1, tn, k), tile),        # neigh_coef
+            pl.BlockSpec((1, 1, tn, k), tile),        # neigh_eidx
+            pl.BlockSpec((1, 1, n, din), step),       # node_feat, per (b, t)
+            pl.BlockSpec((1, 1, tn), row),            # row_gidx
+            pl.BlockSpec((1, 1, tn), row),            # node_mask
+            pl.BlockSpec((1, G, d_pad), state_in),    # h0, per stream
+            pl.BlockSpec((1, G, d_pad), state_in),    # c0, per stream
+            pl.BlockSpec((1, din, 4 * td), dblk),     # wx gate tile, per d
+            pl.BlockSpec((1, d_pad, 4 * td), dblk),   # wh gate tile, per d
+            pl.BlockSpec((1, 4 * td), dblk1),         # bias gate tile
+            pl.BlockSpec((1, 1, e, din), step),       # edge messages
         ],
         out_specs=[
-            pl.BlockSpec((1, 1, tn, hdim), tile),       # per-step h outputs
-            pl.BlockSpec((1, n_global, hdim), state),   # final h store
-            pl.BlockSpec((1, n_global, hdim), state),   # final c store
+            pl.BlockSpec((1, 1, tn, td), out_tile),   # per-step h outputs
+            pl.BlockSpec((1, G, td), state_out),      # final h, per (b, d)
+            pl.BlockSpec((1, G, td), state_out),      # final c, per (b, d)
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((B, T, n, hdim), node_feat.dtype),
-            jax.ShapeDtypeStruct((B, n_global, hdim), h0.dtype),
-            jax.ShapeDtypeStruct((B, n_global, hdim), c0.dtype),
+            jax.ShapeDtypeStruct((B, T, n, d_pad), node_feat.dtype),
+            jax.ShapeDtypeStruct((B, G, d_pad), h0.dtype),
+            jax.ShapeDtypeStruct((B, G, d_pad), c0.dtype),
         ],
-        scratch_shapes=[
-            pltpu.VMEM((n_global, hdim), h0.dtype),   # h ping
-            pltpu.VMEM((n_global, hdim), h0.dtype),   # h pong
-            pltpu.VMEM((n_global, hdim), c0.dtype),   # c (single buffer)
-        ],
-        compiler_params=pltpu.TPUCompilerParams(
-            dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
-        interpret=interpret,
-    )(neigh_idx, neigh_gidx, neigh_coef, neigh_eidx, node_feat,
-      row_gidx, node_mask, h0, c0, wx, wh, b, edge_msg)
+        scratch=[
+            pltpu.VMEM((G, d_pad), h0.dtype),         # h ping
+            pltpu.VMEM((G, d_pad), h0.dtype),         # h pong
+            pltpu.VMEM((G, d_pad), c0.dtype),         # c (own-row)
+        ] + ([
+            pltpu.VMEM((n, din), node_feat.dtype),    # agg_x cache
+            pltpu.VMEM((n, d_pad), h0.dtype),         # agg_h cache
+        ] if D > 1 else []),
+        meta=meta,
+        cell=functools.partial(_gcrn_cell, has_edge, D > 1),
+        evolve=None,
+    )
 
 
-def gcrn_stream_pallas(neigh_idx, neigh_gidx, neigh_coef, neigh_eidx,
-                       node_feat, row_gidx, node_mask, h0, c0, wx, wh, b,
-                       edge_msg=None, *, tn: int = 128,
-                       interpret: bool = False):
-    """Whole-stream GCRN (GC-LSTM): the B=1 case of the batched kernel.
+# ------------------------------------------------------------------------
+# Stacked DGNN (GCN -> GRU): own-row h only. The GRU's hidden-to-gate
+# matmul reads the FULL-width t-1 row, cached at d == 0 BEFORE this step's
+# first write (rows are tile-owned, so the cache of a tile's rows is never
+# clobbered by other tiles).
 
-    Shapes: neigh_* (T, n, k); node_feat (T, n, din); row_gidx/node_mask
-    (T, n); h0/c0 (n_global, hdim) — the global state store, entering and
-    leaving the chip exactly once per stream.
-    """
-    em = None if edge_msg is None else edge_msg[None]
-    outs, hT, cT = gcrn_stream_batched_pallas(
-        neigh_idx[None], neigh_gidx[None], neigh_coef[None], neigh_eidx[None],
-        node_feat[None], row_gidx[None], node_mask[None], h0[None], c0[None],
-        wx, wh, b, em, tn=tn, interpret=interpret)
-    return outs[0], hT[0], cT[0]
-
-
-def _stacked_stream_kernel(has_edge,
-                           idx_ref, coef_ref, eidx_ref, x_ref,
-                           rowg_ref, mask_ref, h0_ref,
-                           wg_ref, bg_ref, wx_ref, wh_ref, b_ref, emsg_ref,
-                           out_ref, hT_ref, hs_ref):
-    t, j = pl.program_id(1), pl.program_id(2)
-    n_global = h0_ref.shape[1]
-
-    # serial scratch reuse across streams: each stream re-loads its own h0.
-    @pl.when(jnp.logical_and(t == 0, j == 0))
-    def _init():
-        hs_ref[...] = h0_ref[0]
+def _stacked_cell(has_edge, cached, eng, ins, outs, scr):
+    (idx_ref, coef_ref, eidx_ref, x_ref, rowg_ref, mask_ref, _h0,
+     wg_ref, bg_ref, wx_ref, wh_ref, b_ref, emsg_ref) = ins
+    out_ref = outs[0]
+    h_scr = scr[0]
 
     idx, coef, eidx = idx_ref[0, 0], coef_ref[0, 0], eidx_ref[0, 0]
-    x = x_ref[0, 0]
     rowg = rowg_ref[0, 0]
     mask = mask_ref[0, 0][:, None]
-
-    if has_edge:
-        agg = _agg_local_edge(idx, coef, eidx, x, emsg_ref[0, 0])
-    else:
-        agg = _agg_local(idx, coef, x)
-    nt = agg @ wg_ref[...] + bg_ref[...][None, :]
-
-    # the GRU only reads a node's own h row, each row written by exactly one
-    # tile per step, so no ping-pong is needed here.
+    tn = idx.shape[0]
+    rows = pl.ds(eng.j * tn, tn)
+    n_global = h_scr.shape[0]
     row_safe = jnp.where(rowg < n_global, rowg, 0)
-    h_old = jnp.take(hs_ref[...], row_safe, axis=0) * mask
 
-    gx = nt @ wx_ref[...] + b_ref[...][None, :]
-    gh = h_old @ wh_ref[...]
-    hdim = h_old.shape[1]
-    rx, zx, nx = gx[:, :hdim], gx[:, hdim:2 * hdim], gx[:, 2 * hdim:]
-    rh, zh, nh = gh[:, :hdim], gh[:, hdim:2 * hdim], gh[:, 2 * hdim:]
+    def _transform():
+        x = x_ref[0, 0]
+        agg = (_agg_local_edge(idx, coef, eidx, x, emsg_ref[0, 0])
+               if has_edge else _agg_local(idx, coef, x))
+        nt = agg @ wg_ref[...] + bg_ref[...][None, :]
+        # t-1 own rows, gathered BEFORE this step's first write to them
+        return nt, jnp.take(h_scr[...], row_safe, axis=0) * mask
+
+    if cached:  # D > 1: once per (t, j); d > 0 re-reads
+        cnt, chold = scr[1], scr[2]
+
+        @pl.when(eng.first_dblock)
+        def _fill_caches():
+            cnt[rows], chold[rows] = _transform()
+
+        nt, h_old_full = cnt[rows], chold[rows]
+    else:       # single d block: read-then-write in one program
+        nt, h_old_full = _transform()
+
+    td = eng.td
+    gx = nt @ wx_ref[0] + b_ref[0][None, :]
+    gh = h_old_full @ wh_ref[0]
+    rx, zx, nx = gx[:, :td], gx[:, td:2 * td], gx[:, 2 * td:]
+    rh, zh, nh = gh[:, :td], gh[:, td:2 * td], gh[:, 2 * td:]
     r = jax.nn.sigmoid(rx + rh)
     z = jax.nn.sigmoid(zx + zh)
     nn = jnp.tanh(nx + r * nh)
+    h_old = eng.dslice(h_old_full)
     h_new = ((1.0 - z) * nn + z * h_old) * mask
 
-    hs_ref[...] = hs_ref[...].at[rowg].set(h_new, mode="drop")
+    eng.state_scatter(scr, 0, rowg, h_new)
     out_ref[0, 0] = h_new
 
-    @pl.when(_stream_done())
-    def _drain():
-        hT_ref[0] = hs_ref[...]
 
-
-@functools.partial(jax.jit, static_argnames=("tn", "interpret"))
-def stacked_stream_batched_pallas(neigh_idx, neigh_coef, neigh_eidx,
-                                  node_feat, row_gidx, node_mask, h0,
-                                  w_gcn, b_gcn, wx, wh, b, edge_msg=None, *,
-                                  tn: int = 128, interpret: bool = False):
-    """B independent stacked-DGNN streams (GCN last layer -> GRU) in one
-    pallas_call; one VMEM-resident h store per stream, reused serially."""
+def _stacked_build(neigh_idx, neigh_coef, neigh_eidx, node_feat, row_gidx,
+                   node_mask, h0, w_gcn, b_gcn, wx, wh, b, edge_msg=None, *,
+                   tn: int, td: Optional[int]):
     B, T, n, k = neigh_idx.shape
-    din, hdim = node_feat.shape[3], h0.shape[2]
+    din, h = node_feat.shape[3], h0.shape[2]
     dmid = w_gcn.shape[1]
-    n_global = h0.shape[1]
+    G = h0.shape[1]
     assert n % tn == 0
-    grid = (B, T, n // tn)
-    tile = lambda bi, t, j: (bi, t, j, 0)
-    step = lambda bi, t, j: (bi, t, 0, 0)
-    row = lambda bi, t, j: (bi, t, j)
-    state = lambda bi, t, j: (bi, 0, 0)
-    res2 = lambda bi, t, j: (0, 0)
-    res1 = lambda bi, t, j: (0,)
+    td = h if td is None else td
+    d_pad = _round_up(h, td)
+    D = d_pad // td
+    grid = (B, T, 1, D, n // tn)
+
+    h0p = _pad_dim(h0, d_pad, -1)
+    wxp = _pack_gate_blocks(wx, 3, td)                      # (D, dmid, 3td)
+    whp = _pack_gate_blocks(_pad_dim(wh, d_pad, 0), 3, td)  # (D, d_pad, 3td)
+    bp = _pack_gate_bias(b, 3, td)                          # (D, 3td)
+
     has_edge = edge_msg is not None
     if not has_edge:
         edge_msg = jnp.zeros((B, T, 8, din), node_feat.dtype)
     e = edge_msg.shape[2]
-    return pl.pallas_call(
-        functools.partial(_stacked_stream_kernel, has_edge),
+
+    tile = lambda bi, t, l, d, j: (bi, t, j, 0)
+    step = lambda bi, t, l, d, j: (bi, t, 0, 0)
+    row = lambda bi, t, l, d, j: (bi, t, j)
+    state_in = lambda bi, t, l, d, j: (bi, 0, 0)
+    state_out = lambda bi, t, l, d, j: (bi, 0, d)
+    out_tile = lambda bi, t, l, d, j: (bi, t, j, d)
+    res2 = lambda bi, t, l, d, j: (0, 0)
+    res1 = lambda bi, t, l, d, j: (0,)
+    dblk = lambda bi, t, l, d, j: (d, 0, 0)
+    dblk1 = lambda bi, t, l, d, j: (d, 0)
+
+    meta = _Meta(
+        n_in=13, n_out=2,
+        states=(_StateMeta("row", in_idx=6, out_idx=1, scr_idx=0),),
+        live_idx=None, td=td)
+    return _Launch(
         grid=grid,
+        inputs=(neigh_idx, neigh_coef, neigh_eidx, node_feat, row_gidx,
+                node_mask, h0p, w_gcn, b_gcn, wxp, whp, bp, edge_msg),
         in_specs=[
             pl.BlockSpec((1, 1, tn, k), tile),
             pl.BlockSpec((1, 1, tn, k), tile),
@@ -320,248 +603,220 @@ def stacked_stream_batched_pallas(neigh_idx, neigh_coef, neigh_eidx,
             pl.BlockSpec((1, 1, n, din), step),
             pl.BlockSpec((1, 1, tn), row),
             pl.BlockSpec((1, 1, tn), row),
-            pl.BlockSpec((1, n_global, hdim), state),
-            pl.BlockSpec((din, dmid), res2),
-            pl.BlockSpec((dmid,), res1),
-            pl.BlockSpec((dmid, 3 * hdim), res2),
-            pl.BlockSpec((hdim, 3 * hdim), res2),
-            pl.BlockSpec((3 * hdim,), res1),
+            pl.BlockSpec((1, G, d_pad), state_in),     # h0, per stream
+            pl.BlockSpec((din, dmid), res2),           # GCN weight (full)
+            pl.BlockSpec((dmid,), res1),               # GCN bias
+            pl.BlockSpec((1, dmid, 3 * td), dblk),     # wx gate tile, per d
+            pl.BlockSpec((1, d_pad, 3 * td), dblk),    # wh gate tile, per d
+            pl.BlockSpec((1, 3 * td), dblk1),          # bias gate tile
             pl.BlockSpec((1, 1, e, din), step),
         ],
         out_specs=[
-            pl.BlockSpec((1, 1, tn, hdim), tile),
-            pl.BlockSpec((1, n_global, hdim), state),
+            pl.BlockSpec((1, 1, tn, td), out_tile),
+            pl.BlockSpec((1, G, td), state_out),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((B, T, n, hdim), node_feat.dtype),
-            jax.ShapeDtypeStruct((B, n_global, hdim), h0.dtype),
+            jax.ShapeDtypeStruct((B, T, n, d_pad), node_feat.dtype),
+            jax.ShapeDtypeStruct((B, G, d_pad), h0.dtype),
         ],
-        scratch_shapes=[
-            pltpu.VMEM((n_global, hdim), h0.dtype),
-        ],
-        compiler_params=pltpu.TPUCompilerParams(
-            dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
-        interpret=interpret,
-    )(neigh_idx, neigh_coef, neigh_eidx, node_feat, row_gidx, node_mask,
-      h0, w_gcn, b_gcn, wx, wh, b, edge_msg)
+        scratch=[
+            pltpu.VMEM((G, d_pad), h0.dtype),          # h (own-row)
+        ] + ([
+            pltpu.VMEM((n, dmid), node_feat.dtype),    # node-transform cache
+            pltpu.VMEM((n, d_pad), h0.dtype),          # t-1 h-row cache
+        ] if D > 1 else []),
+        meta=meta,
+        cell=functools.partial(_stacked_cell, has_edge, D > 1),
+        evolve=None,
+    )
 
 
-def stacked_stream_pallas(neigh_idx, neigh_coef, neigh_eidx, node_feat,
-                          row_gidx, node_mask, h0, w_gcn, b_gcn, wx, wh, b,
-                          edge_msg=None, *, tn: int = 128,
-                          interpret: bool = False):
-    """Whole-stream stacked DGNN: the B=1 case of the batched kernel."""
-    em = None if edge_msg is None else edge_msg[None]
-    outs, hT = stacked_stream_batched_pallas(
-        neigh_idx[None], neigh_coef[None], neigh_eidx[None], node_feat[None],
-        row_gidx[None], node_mask[None], h0[None], w_gcn, b_gcn, wx, wh, b,
-        em, tn=tn, interpret=interpret)
-    return outs[0], hT[0]
+# ------------------------------------------------------------------------
+# EvolveGCN: weights-resident family. No node-resident recurrent state —
+# the recurrence is over the per-layer GCN weights W_l^t, evolved by a
+# matrix-GRU between snapshots (live-gated by the engine). The L grid axis
+# sequences the multi-layer GCN's cross-tile dependency over a ping-pong
+# activation scratch; the d axis blocks W's COLUMNS, which the matrix-GRU
+# evolves independently (columns are the GRU batch), so per-(l, d-block)
+# evolution is exact. Padding convention: all widths zero-padded into a
+# common square d_pad; GRU params padded PER GATE BLOCK
+# (ops._pad_matrix_gru_params); zero-padded weight ROWS stay zero under
+# evolution per block (their gate inputs are identically 0), keeping junk
+# activation columns out of valid output columns.
+
+def _evolve_cell(has_edge, cached, eng, ins, outs, scr):
+    (idx_ref, coef_ref, x_ref, mask_ref, _live, _w0, bg_ref, eagg_ref,
+     _wx, _wh, _bp) = ins
+    out_ref = outs[0]
+    w_scr, xa, xb = scr[0], scr[1], scr[2]
+    l, j = eng.l, eng.j
+    d_pad = xa.shape[1]
+
+    # layer-0 activations are this step's node features: (re)load the ping
+    # buffer at the first program of every step.
+    @pl.when(jnp.logical_and(l == 0, jnp.logical_and(eng.first_dblock,
+                                                     j == 0)))
+    def _init_x():
+        xa[...] = x_ref[0, 0]
+
+    leven = (l % 2) == 0  # even layers read A / write B, odd the reverse
+    idx, coef = idx_ref[0, 0], coef_ref[0, 0]
+    mask = mask_ref[0, 0][:, None]
+    tn, k = idx.shape
+    rows = pl.ds(j * tn, tn)
+
+    def _aggregate():
+        x_prev = jnp.where(leven, xa[...], xb[...])
+        g = jnp.take(x_prev, idx.reshape(-1),
+                     axis=0).reshape(tn, k, d_pad)
+        out = (g * coef[..., None]).sum(axis=1)
+        return out + eagg_ref[0, 0, 0] if has_edge else out
+
+    if cached:  # D > 1: aggregate once per (t, l, j); d > 0 re-reads
+        cagg = scr[3]
+
+        @pl.when(eng.first_dblock)
+        def _fill_cache():
+            cagg[rows] = _aggregate()
+
+        agg = cagg[rows]
+    else:       # single d block: inline, no scratch round-trip
+        agg = _aggregate()
+
+    w_blk = w_scr[pl.ds(l, 1), :, eng.blk][0]           # (d_pad, td)
+    h = agg @ w_blk + bg_ref[0][None, :]
+    h = jnp.where(l == eng.n_layers - 1, h, jnp.maximum(h, 0.0)) * mask
+
+    @pl.when(jnp.logical_not(leven))
+    def _wr_a():
+        xa[rows, eng.blk] = h
+
+    @pl.when(leven)
+    def _wr_b():
+        xb[rows, eng.blk] = h
+
+    # model output = last layer's (masked, linear) activations
+    @pl.when(l == eng.n_layers - 1)
+    def _out():
+        out_ref[0, 0] = h
 
 
-# ----------------------------------------------------------------------
-# EvolveGCN: weights-resident stream kernel.
-#
-# The weights-evolved family carries no node-resident recurrent state —
-# its recurrence is over the per-layer GCN weight matrices W_l^t, evolved
-# by a matrix-GRU between snapshots. The per-step schedule therefore
-# round-trips every W_l through HBM twice per snapshot (2T per stream),
-# the exact per-step weight-update bottleneck of arXiv:2210.03900. Here
-# the evolving weights live in VMEM scratch for the whole stream: grid
-# (B, T, L, n_pad//tn) with a layer axis L so the multi-layer GCN's
-# cross-tile dependency (layer l's aggregation reads layer l-1's output
-# for EVERY node) is sequenced by the grid rather than recomputed per
-# tile. Per-step activations ping-pong between two full-(n_pad) VMEM
-# buffers by layer parity; the matrix-GRU evolution runs in-kernel at
-# each live step's last tile program, so W_l crosses HBM exactly twice
-# per stream (initial load + final drain).
-#
-# Padding convention: every layer's weight matrix is zero-padded into a
-# common (dmax, dmax) square (dmax = max layer width) so the L weights
-# stack into one scratch buffer indexed by the layer grid axis. The GRU
-# gate matrices are padded PER GATE BLOCK (ops._pad_matrix_gru_params):
-# gx/gh are then split at dmax boundaries inside the kernel and the
-# valid region evolves exactly as the unpadded cell. Zero-padded weight
-# ROWS stay zero under evolution (their gate inputs are identically 0,
-# giving h_new = 0.5 * tanh(0) + 0.5 * 0 = 0), which is what keeps
-# junk activation columns from leaking into valid output columns.
-#
-# No-op tail snapshots (serve chunk padding) must leave the evolving
-# weights untouched — unlike the node-state kernels, where padding rows
-# simply scatter-drop, weight evolution is per-step, so each step
-# carries an explicit ``live`` flag (n_nodes > 0) gating the evolution.
-
-
-def _matrix_gru_padded(w, wxp, whp, bp):
-    """EvolveGCN-O weight evolution on a (dmax, dmax) zero-padded W.
-
-    Identical math to rnn.matrix_gru on the valid region: columns of W
-    are the GRU batch; gate blocks split at dmax (params padded per gate
-    block by ops._pad_matrix_gru_params).
-    """
-    d = w.shape[0]
-    wt = w.T  # (dout_pad, din_pad): batch of column vectors
-    gx = wt @ wxp + bp[None, :]
-    gh = wt @ whp
+def _evolve_evolve(eng, ins, scr):
+    """Matrix-GRU evolution of W_l's (d) column block for step t+1, after
+    the last tile of layer l consumed W_l^t. Identical math to
+    rnn.matrix_gru on the valid region: W's columns are the GRU batch, so
+    the block evolves independently; gate blocks split at d_pad (params
+    padded per gate block by ops._pad_matrix_gru_params)."""
+    wx_ref, wh_ref, bp_ref = ins[8], ins[9], ins[10]
+    w_scr = scr[0]
+    wt = w_scr[pl.ds(eng.l, 1), :, eng.blk][0].T       # (td, d_pad)
+    d = wt.shape[1]
+    gx = wt @ wx_ref[0] + bp_ref[0][None, :]
+    gh = wt @ wh_ref[0]
     rx, zx, nx = gx[:, :d], gx[:, d:2 * d], gx[:, 2 * d:]
     rh, zh, nh = gh[:, :d], gh[:, d:2 * d], gh[:, 2 * d:]
     r = jax.nn.sigmoid(rx + rh)
     z = jax.nn.sigmoid(zx + zh)
-    n = jnp.tanh(nx + r * nh)
-    return ((1.0 - z) * n + z * wt).T
+    nvec = jnp.tanh(nx + r * nh)
+    w_scr[pl.ds(eng.l, 1), :, eng.blk] = (((1.0 - z) * nvec + z * wt).T)[None]
 
 
-def _evolve_stream_kernel(has_edge,
-                          idx_ref, coef_ref, x_ref, mask_ref, live_ref,
-                          w0_ref, bg_ref, eagg_ref, wx_ref, wh_ref, bgr_ref,
-                          out_ref, wT_ref,
-                          w_ref, xa_ref, xb_ref):
-    t, l, j = pl.program_id(1), pl.program_id(2), pl.program_id(3)
-    n_layers = pl.num_programs(2)
-    n_tiles = pl.num_programs(3)
-    dmax = xa_ref.shape[1]
-
-    # weight residency: each stream loads its OWN primed W_l block once,
-    # at its (t==0, j==0) program of layer l — streams reuse the scratch
-    # serially, exactly like the node-state kernels above.
-    @pl.when(jnp.logical_and(t == 0, j == 0))
-    def _init_w():
-        w_ref[pl.ds(l, 1)] = w0_ref[0]
-
-    # layer-0 activations are this step's node features: (re)load the
-    # ping buffer at the first program of every step.
-    @pl.when(jnp.logical_and(l == 0, j == 0))
-    def _init_x():
-        xa_ref[...] = x_ref[0, 0]
-
-    even = (l % 2) == 0  # even layers read A / write B, odd the reverse
-    idx, coef = idx_ref[0, 0], coef_ref[0, 0]
-    mask = mask_ref[0, 0][:, None]
-    w = w_ref[pl.ds(l, 1)][0]
-
-    x_prev = jnp.where(even, xa_ref[...], xb_ref[...])
-    tn, k = idx.shape
-    g = jnp.take(x_prev, idx.reshape(-1), axis=0).reshape(tn, k, dmax)
-    agg = (g * coef[..., None]).sum(axis=1)
-    if has_edge:
-        agg = agg + eagg_ref[0, 0, 0]
-    h = agg @ w + bg_ref[0][None, :]
-    h = jnp.where(l == n_layers - 1, h, jnp.maximum(h, 0.0)) * mask
-
-    @pl.when(jnp.logical_not(even))
-    def _wr_a():
-        xa_ref[pl.ds(j * tn, tn)] = h
-
-    @pl.when(even)
-    def _wr_b():
-        xb_ref[pl.ds(j * tn, tn)] = h
-
-    # model output = last layer's (masked, linear) activations
-    @pl.when(l == n_layers - 1)
-    def _out():
-        out_ref[0, 0] = h
-
-    # weight evolution BETWEEN snapshots: after the last tile of layer l
-    # consumed W_l^t, evolve it in place for step t+1. No-op (all-padding)
-    # snapshots are not steps of the stream — their ``live`` flag gates
-    # the evolution off, so serve-side tail padding never advances W.
-    @pl.when(jnp.logical_and(j == n_tiles - 1, live_ref[0, 0] > 0))
-    def _evolve():
-        w_ref[pl.ds(l, 1)] = _matrix_gru_padded(
-            w, wx_ref[0], wh_ref[0], bgr_ref[0])[None]
-
-    # drain: this stream's last program of layer l writes the evolved
-    # weight (state AFTER the final live step) back to HBM.
-    @pl.when(_stream_done(t_axis=1, j_axis=3))
-    def _drain():
-        wT_ref[0, 0] = w_ref[pl.ds(l, 1)][0]
-
-
-@functools.partial(jax.jit, static_argnames=("tn", "interpret"))
-def evolve_stream_batched_pallas(neigh_idx, neigh_coef, node_feat, node_mask,
-                                 live, w0, b_gcn, gru_wx, gru_wh, gru_b,
-                                 edge_agg=None, *, tn: int = 128,
-                                 interpret: bool = False):
-    """B independent whole-stream EvolveGCN runs in one pallas_call.
-
-    Shapes (all widths zero-padded to the common dmax by kernels/ops.py):
-      neigh_idx/neigh_coef (B, T, n, k); node_feat (B, T, n, dmax);
-      node_mask (B, T, n); live (B, T) int32 — 1 where the snapshot is
-      real, 0 on no-op tail padding; w0 (B, L, dmax, dmax) — each
-      stream's primed evolving weights, entering and leaving the chip
-      exactly once per stream; b_gcn (L, dmax); gru_wx/gru_wh
-      (L, dmax, 3*dmax) and gru_b (L, 3*dmax), padded per gate block;
-      edge_agg (B, T, L, n, dmax) — per-layer pre-aggregated
-      edge-message term sum_k coef * (edge_feat @ w_edge_l)[eidx], or
-      None for edge-free configs (a tiny pinned dummy block is streamed
-      instead of a full zero tensor, mirroring the sibling kernels'
-      static has_edge specialization).
-
-    Returns (per-step outputs (B, T, n, dmax), final weights
-    (B, L, dmax, dmax)).
-    """
+def _evolve_build(neigh_idx, neigh_coef, node_feat, node_mask, live,
+                  w0, b_gcn, gru_wx, gru_wh, gru_b, edge_agg=None, *,
+                  tn: int, td: Optional[int]):
+    """Inputs pre-padded to the common square d_pad (a td multiple) by
+    kernels/ops.py: node_feat (B, T, n, d_pad); w0 (B, L, d_pad, d_pad) —
+    each stream's primed evolving weights, entering and leaving the chip
+    exactly once per stream; gru params padded per gate block; live (B, T)
+    int32 — 1 where the snapshot is real, 0 on no-op tail padding."""
     B, T, n, k = neigh_idx.shape
-    L, dmax = w0.shape[1], w0.shape[2]
+    L, d_pad = w0.shape[1], w0.shape[2]
     assert n % tn == 0
-    grid = (B, T, L, n // tn)
-    tile = lambda bi, t, l, j: (bi, t, j, 0)
-    step = lambda bi, t, l, j: (bi, t, 0, 0)
-    row = lambda bi, t, l, j: (bi, t, j)
-    flag = lambda bi, t, l, j: (bi, t)
-    layer4 = lambda bi, t, l, j: (bi, l, 0, 0)
-    layer_res3 = lambda bi, t, l, j: (l, 0, 0)
-    layer_res2 = lambda bi, t, l, j: (l, 0)
+    td = d_pad if td is None else td
+    assert d_pad % td == 0
+    D = d_pad // td
+    grid = (B, T, L, D, n // tn)
+
+    tile = lambda bi, t, l, d, j: (bi, t, j, 0)
+    step = lambda bi, t, l, d, j: (bi, t, 0, 0)
+    row = lambda bi, t, l, d, j: (bi, t, j)
+    flag = lambda bi, t, l, d, j: (bi, t)
+    w_in = lambda bi, t, l, d, j: (bi, l, 0, 0)
+    w_out = lambda bi, t, l, d, j: (bi, l, 0, d)
+    out_tile = lambda bi, t, l, d, j: (bi, t, j, d)
+    layer_res3 = lambda bi, t, l, d, j: (l, 0, 0)
+    layer_blk = lambda bi, t, l, d, j: (l, d)
+
     has_edge = edge_agg is not None
     if has_edge:
-        eagg_map = lambda bi, t, l, j: (bi, t, l, j, 0)
+        eagg_map = lambda bi, t, l, d, j: (bi, t, l, j, 0)
     else:
-        # one pinned (revisited) dummy block instead of (B,T,L,n,dmax)
+        # one pinned (revisited) dummy block instead of (B,T,L,n,d_pad)
         # of streamed zeros; the kernel never reads it.
-        edge_agg = jnp.zeros((1, 1, 1, tn, dmax), node_feat.dtype)
-        eagg_map = lambda bi, t, l, j: (0, 0, 0, 0, 0)
-    return pl.pallas_call(
-        functools.partial(_evolve_stream_kernel, has_edge),
+        edge_agg = jnp.zeros((1, 1, 1, tn, d_pad), node_feat.dtype)
+        eagg_map = lambda bi, t, l, d, j: (0, 0, 0, 0, 0)
+
+    meta = _Meta(
+        n_in=11, n_out=2,
+        states=(_StateMeta("weights", in_idx=5, out_idx=1, scr_idx=0),),
+        live_idx=4, td=td)
+    return _Launch(
         grid=grid,
+        inputs=(neigh_idx, neigh_coef, node_feat, node_mask, live,
+                w0, b_gcn, edge_agg, gru_wx, gru_wh, gru_b),
         in_specs=[
-            pl.BlockSpec((1, 1, tn, k), tile),          # neigh_idx (local)
-            pl.BlockSpec((1, 1, tn, k), tile),          # neigh_coef
-            pl.BlockSpec((1, 1, n, dmax), step),        # node_feat, per (b, t)
-            pl.BlockSpec((1, 1, tn), row),              # node_mask
-            pl.BlockSpec((1, 1), flag),                 # live flag, per (b, t)
-            pl.BlockSpec((1, 1, dmax, dmax), layer4),   # W0, per (stream, l)
-            pl.BlockSpec((1, dmax), layer_res2),        # GCN bias, per l
-            pl.BlockSpec((1, 1, 1, tn, dmax), eagg_map),  # edge agg, per (b,t,l)
-            pl.BlockSpec((1, dmax, 3 * dmax), layer_res3),  # GRU wx, per l
-            pl.BlockSpec((1, dmax, 3 * dmax), layer_res3),  # GRU wh, per l
-            pl.BlockSpec((1, 3 * dmax), layer_res2),        # GRU b, per l
+            pl.BlockSpec((1, 1, tn, k), tile),            # neigh_idx (local)
+            pl.BlockSpec((1, 1, tn, k), tile),            # neigh_coef
+            pl.BlockSpec((1, 1, n, d_pad), step),         # node_feat
+            pl.BlockSpec((1, 1, tn), row),                # node_mask
+            pl.BlockSpec((1, 1), flag),                   # live flag
+            pl.BlockSpec((1, 1, d_pad, d_pad), w_in),     # W0, per (b, l)
+            pl.BlockSpec((1, td), layer_blk),             # GCN bias tile
+            pl.BlockSpec((1, 1, 1, tn, d_pad), eagg_map),  # edge agg
+            pl.BlockSpec((1, d_pad, 3 * d_pad), layer_res3),  # GRU wx
+            pl.BlockSpec((1, d_pad, 3 * d_pad), layer_res3),  # GRU wh
+            pl.BlockSpec((1, 3 * d_pad), lambda bi, t, l, d, j: (l, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((1, 1, tn, dmax), tile),       # per-step outputs
-            pl.BlockSpec((1, 1, dmax, dmax), layer4),   # final weights
+            pl.BlockSpec((1, 1, tn, td), out_tile),       # per-step outputs
+            pl.BlockSpec((1, 1, d_pad, td), w_out),       # final weights
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((B, T, n, dmax), node_feat.dtype),
-            jax.ShapeDtypeStruct((B, L, dmax, dmax), w0.dtype),
+            jax.ShapeDtypeStruct((B, T, n, d_pad), node_feat.dtype),
+            jax.ShapeDtypeStruct((B, L, d_pad, d_pad), w0.dtype),
         ],
-        scratch_shapes=[
-            pltpu.VMEM((L, dmax, dmax), w0.dtype),   # resident evolving W_l
-            pltpu.VMEM((n, dmax), node_feat.dtype),  # activation ping
-            pltpu.VMEM((n, dmax), node_feat.dtype),  # activation pong
-        ],
-        compiler_params=pltpu.TPUCompilerParams(
-            dimension_semantics=("arbitrary",) * 4),
-        interpret=interpret,
-    )(neigh_idx, neigh_coef, node_feat, node_mask, live,
-      w0, b_gcn, edge_agg, gru_wx, gru_wh, gru_b)
+        scratch=[
+            pltpu.VMEM((L, d_pad, d_pad), w0.dtype),   # resident evolving W
+            pltpu.VMEM((n, d_pad), node_feat.dtype),   # activation ping
+            pltpu.VMEM((n, d_pad), node_feat.dtype),   # activation pong
+        ] + ([
+            pltpu.VMEM((n, d_pad), node_feat.dtype),   # aggregation cache
+        ] if D > 1 else []),
+        meta=meta,
+        cell=functools.partial(_evolve_cell, has_edge, D > 1),
+        evolve=_evolve_evolve,
+    )
 
 
-def evolve_stream_pallas(neigh_idx, neigh_coef, node_feat, node_mask, live,
-                         w0, b_gcn, gru_wx, gru_wh, gru_b, edge_agg=None, *,
-                         tn: int = 128, interpret: bool = False):
-    """Whole-stream EvolveGCN: the B=1 case of the batched kernel."""
-    ea = None if edge_agg is None else edge_agg[None]
-    outs, wT = evolve_stream_batched_pallas(
-        neigh_idx[None], neigh_coef[None], node_feat[None], node_mask[None],
-        live[None], w0[None], b_gcn, gru_wx, gru_wh, gru_b, ea,
-        tn=tn, interpret=interpret)
-    return outs[0], wT[0]
+# ------------------------------------------------------------------------
+# The registry: every DGNN family the stream engine serves. Adding a
+# family = registering a cell spec here (CI runs the registry tests for
+# every entry, so an untested spec fails the build).
+
+REGISTRY: dict[str, CellSpec] = {
+    "gcrn": CellSpec(
+        name="gcrn",
+        resident="node-state store: h (ping-pong pair) + c (own-row)",
+        states=(StateDef("h", "pingpong"), StateDef("c", "row")),
+        build=_gcrn_build),
+    "stacked": CellSpec(
+        name="stacked",
+        resident="node-state store: h (own-row)",
+        states=(StateDef("h", "row"),),
+        build=_stacked_build),
+    "evolve": CellSpec(
+        name="evolve",
+        resident="per-layer evolving weights W_l (matrix-GRU in-kernel)",
+        states=(StateDef("weights", "weights"),),
+        build=_evolve_build),
+}

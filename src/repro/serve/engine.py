@@ -31,10 +31,21 @@ grid dimension of the stream kernel, so B streams cost one kernel launch
 and one weight load while every stream's state store still crosses HBM
 exactly twice per chunk. Per-stream outputs are returned in per-stream
 order (rounds are sequential and each stream's snapshots are consumed in
-order). All three DGNN families take this batched launch: GCRN and
-stacked models keep their node-state store resident, EvolveGCN its
-evolving weight matrices (the in-kernel evolution is live-gated, so the
-no-op tail snapshots padding a chunk never advance the weights).
+order). All three DGNN families take this batched launch through the SAME
+stream-engine kernel (kernels/stream_fused.REGISTRY — the model's
+``stream_family`` selects its cell spec): GCRN and stacked models keep
+their node-state store resident, EvolveGCN its evolving weight matrices
+(the in-kernel evolution is live-gated, so the no-op tail snapshots
+padding a chunk never advance the weights).
+
+Cross-bucket batching (``promote_buckets``): with bucketed padding, a
+round's smaller-bucket chunks may be PROMOTED into the next-larger
+occupied bucket — re-padded to the bigger shape so they join that
+bucket's in-flight batched launch — trading padding overhead (guarded by
+a max padded-compute ratio, graph/padding.promote_bucket_groups) for one
+fewer device dispatch per round. ServeStats reports live vs padded
+snapshot slots and launch counts per run so the overhead stays visible
+instead of hiding in throughput.
 """
 from __future__ import annotations
 
@@ -58,6 +69,7 @@ from repro.graph.padding import (
     choose_bucket_batch,
     empty_like_padded,
     pad_snapshot,
+    promote_bucket_groups,
     stack_streams,
 )
 
@@ -67,6 +79,14 @@ class ServeStats:
     per_snapshot_ms: list
     preprocess_ms: list
     total_ms: float
+    # no-op-tail waste signal: how many snapshot slots of the batched V3
+    # launches were real vs padding (T tails + no-op batch rows), so
+    # promoted-bucket and D-blocked rows expose their padding overhead
+    # instead of hiding it in throughput.
+    live_snapshots: int = 0
+    padded_snapshots: int = 0
+    promoted_chunks: int = 0  # chunks promoted to a larger bucket
+    launches: int = 0         # stream-kernel launches (v3 paths)
 
     @property
     def mean_latency_ms(self) -> float:
@@ -81,7 +101,8 @@ class SnapshotServer:
                  n_pad: int = 640, e_pad: int = 4096, k_max: int = 64,
                  queue_depth: int = 2,
                  buckets: Optional[tuple] = None,
-                 stream_chunk: int = 8):
+                 stream_chunk: int = 8,
+                 promote_buckets: Optional[float] = None):
         self.cfg = cfg
         self.mode = mode or cfg.dataflow
         self.model = build_model(cfg, n_global=n_global)
@@ -90,6 +111,11 @@ class SnapshotServer:
         self.buckets = buckets  # ((n_pad, e_pad, k_max), ...) smallest-first
         self.stream_chunk = stream_chunk
         self.queue_depth = queue_depth  # 2 == ping-pong buffers
+        # cross-bucket batching: max padded-compute overhead ratio a chunk
+        # may pay to get promoted into a larger occupied bucket and join
+        # that bucket's batched launch (None = promotion off). See
+        # graph/padding.promote_bucket_groups.
+        self.promote_buckets = promote_buckets
         self._step = jax.jit(
             lambda p, s, snap: self.model.step(p, s, snap, mode=self.mode))
         self._stream_step = jax.jit(
@@ -120,8 +146,19 @@ class SnapshotServer:
     # ------------------------------------------------------ device loop ----
 
     def _use_stream(self) -> bool:
-        # every family has a stream engine (weights-resident for EvolveGCN)
-        return self.mode == "v3"
+        # mode v3 requires the model's family to be registered with the
+        # stream engine (all three are). Raising here keeps an
+        # unregistered family LOUD instead of silently degrading to the
+        # per-snapshot loop — the silent-fallback class PR 3 deleted.
+        from repro.kernels.stream_fused import REGISTRY
+
+        if self.mode != "v3":
+            return False
+        if self.model.stream_family not in REGISTRY:
+            raise KeyError(
+                f"mode='v3' but family {self.model.stream_family!r} has no "
+                f"stream-engine cell spec; registered: {sorted(REGISTRY)}")
+        return True
 
     def _pow2_target(self, real: int, cap: Optional[int] = None) -> int:
         """Next power of two >= ``real`` (optionally capped): the padded
@@ -131,7 +168,8 @@ class SnapshotServer:
             target *= 2
         return min(target, cap) if cap is not None else target
 
-    def _run_chunk(self, params, state, chunk: list, outs: list, lat: list):
+    def _run_chunk(self, params, state, chunk: list, outs: list, lat: list,
+                   ctr: dict):
         """Feed one same-bucket chunk to the time-fused stream kernel.
 
         Short flushes (tail of the stream, or a bucket change on a
@@ -144,6 +182,9 @@ class SnapshotServer:
         target = self._pow2_target(real, cap=self.stream_chunk)
         while len(chunk) < target:  # no-op tail padding
             chunk.append(empty_like_padded(chunk[0]))
+        ctr["live"] += real
+        ctr["padded"] += target - real
+        ctr["launches"] += 1
         t0 = time.perf_counter()
         state, out_T = self._stream_step(params, state, stack_time(chunk))
         jax.block_until_ready(out_T)
@@ -181,6 +222,7 @@ class SnapshotServer:
         t_start = time.perf_counter()
         th.start()
         outs, lat = [], []
+        ctr = {"live": 0, "padded": 0, "promoted": 0, "launches": 0}
         use_stream = self._use_stream()
         chunk: list = []
         while True:
@@ -200,24 +242,29 @@ class SnapshotServer:
             # v3: gather same-bucket runs into fixed-T chunks
             bucket = (ps.n_pad, ps.e_pad, ps.k_max)
             if chunk and (chunk[0].n_pad, chunk[0].e_pad, chunk[0].k_max) != bucket:
-                state = self._run_chunk(params, state, chunk, outs, lat)
+                state = self._run_chunk(params, state, chunk, outs, lat, ctr)
                 chunk = []
             chunk.append(ps)
             if len(chunk) == self.stream_chunk:
-                state = self._run_chunk(params, state, chunk, outs, lat)
+                state = self._run_chunk(params, state, chunk, outs, lat, ctr)
                 chunk = []
         if chunk:
-            state = self._run_chunk(params, state, chunk, outs, lat)
+            state = self._run_chunk(params, state, chunk, outs, lat, ctr)
         th.join()
         total = (time.perf_counter() - t_start) * 1e3
-        return state, outs, ServeStats(lat, pre_ms, total)
+        return state, outs, ServeStats(lat, pre_ms, total,
+                                       live_snapshots=ctr["live"],
+                                       padded_snapshots=ctr["padded"],
+                                       promoted_chunks=ctr["promoted"],
+                                       launches=ctr["launches"])
 
     # ------------------------------------------- multi-tenant device loop ----
 
     def _use_stream_batched(self) -> bool:
-        # every family has a batched stream kernel; only the engine MODE
-        # decides (non-v3 modes keep the per-snapshot device loop).
-        return self.mode == "v3"
+        # every registered family batches through the same engine kernel;
+        # only the engine MODE decides (non-v3 modes keep the per-snapshot
+        # device loop).
+        return self._use_stream()
 
     def _chunk_bucket(self, dims: list) -> tuple:
         """Bucket covering a whole chunk of (n, e, k) dims (one static shape
@@ -228,7 +275,7 @@ class SnapshotServer:
         return (self.n_pad, self.e_pad, self.k_max)
 
     def _run_group_batched(self, params, states: dict, group: list,
-                           outs: dict, lat: list):
+                           outs: dict, lat: list, ctr: dict):
         """One batched V3 launch over same-bucket chunks of several streams.
 
         ``group`` is [(sid, [LocalSnapshot, ...], bucket), ...]. Each
@@ -260,6 +307,9 @@ class SnapshotServer:
         noop_stream = stack_time([empty_like_padded(
             jax.tree.map(lambda a: a[0], per_stream[0]))] * target)
         per_stream.extend([noop_stream] * (b_target - b_real))
+        ctr["live"] += sum(real_lens)
+        ctr["padded"] += b_target * target - sum(real_lens)
+        ctr["launches"] += 1
         batch_BT = stack_streams(per_stream)
         zero_state = jax.tree.map(jnp.zeros_like, states[group[0][0]])
         states_B = jax.tree.map(
@@ -334,6 +384,7 @@ class SnapshotServer:
             th.start()
         outs: dict = {sid: [] for sid in sids}
         lat: list = []
+        ctr = {"live": 0, "padded": 0, "promoted": 0, "launches": 0}
         active = set(sids)
         batched = self._use_stream_batched()
         try:
@@ -378,12 +429,26 @@ class SnapshotServer:
                 for sid, (chunk, dims) in sorted(chunks.items()):
                     bucket = self._chunk_bucket(dims)
                     groups.setdefault(bucket, []).append((sid, chunk, bucket))
+                if self.promote_buckets is not None and self.buckets is not None:
+                    # cross-bucket batching: promote smaller-bucket chunks
+                    # into the next-larger in-flight bucket (guarded by the
+                    # padded-compute overhead ratio) so they join its
+                    # launch instead of paying their own dispatch.
+                    before = {b: len(m) for b, m in groups.items()}
+                    groups = promote_bucket_groups(groups, self.buckets,
+                                                   self.promote_buckets)
+                    ctr["promoted"] += sum(
+                        len(m) - before.get(b, 0) for b, m in groups.items())
                 for bucket in sorted(groups):
                     self._run_group_batched(params, states, groups[bucket],
-                                            outs, lat)
+                                            outs, lat, ctr)
         finally:
             stop.set()
             for th in threads:
                 th.join(timeout=5.0)
         total = (time.perf_counter() - t_start) * 1e3
-        return states, outs, ServeStats(lat, pre_ms, total)
+        return states, outs, ServeStats(lat, pre_ms, total,
+                                        live_snapshots=ctr["live"],
+                                        padded_snapshots=ctr["padded"],
+                                        promoted_chunks=ctr["promoted"],
+                                        launches=ctr["launches"])

@@ -49,12 +49,14 @@ MODES = {
 }
 
 
-def small_config(name: str) -> DGNNConfig:
+def small_config(name: str, stream_td: int | None = None) -> DGNNConfig:
     """Shrunk copy of a real family config so interpret-mode kernels and
-    the XLA engines stay fast on CPU."""
+    the XLA engines stay fast on CPU. ``stream_td`` blocks the stream
+    engine's state feature axis (hidden=32, so stream_td=16 forces
+    d//td == 2 for every family — the D-blocked differential cases)."""
     return dataclasses.replace(
         DGNN_CONFIGS[name], in_dim=16, hidden=32, out_dim=8, edge_dim=4,
-        n_gnn_layers=2, max_nodes=160, max_edges=1024)
+        n_gnn_layers=2, max_nodes=160, max_edges=1024, stream_td=stream_td)
 
 
 def random_coo_stream(rng: np.random.Generator, T: int, n_pool: int,
@@ -95,10 +97,12 @@ class StreamCase:
     stacked: list          # per stream: PaddedSnapshot pytree with (T, ...) axes
 
 
-def make_case(name: str, seed: int = 0, T: int = 5, B: int = 3) -> StreamCase:
+def make_case(name: str, seed: int = 0, T: int = 5, B: int = 3,
+              stream_td: int | None = None) -> StreamCase:
     """Build a family's case: B independent random streams, odd T, ragged n,
-    shared (same-bucket) padded shapes so the streams can batch."""
-    cfg = small_config(name)
+    shared (same-bucket) padded shapes so the streams can batch.
+    ``stream_td`` runs the v3 engine with a D-blocked state layout."""
+    cfg = small_config(name, stream_td=stream_td)
     rng = np.random.default_rng(seed)
     n_pool = 96
     feat_table = rng.normal(size=(n_pool, cfg.in_dim)).astype(np.float32)
@@ -257,6 +261,112 @@ def random_ell_stream_batch(seed: int, B: int, T: int, n: int, k: int,
     streams = [random_ell_stream(seed + 1000 * b, T, n, k, e, din, n_global)
                for b in range(B)]
     return tuple(np.stack([s[i] for s in streams]) for i in range(6))
+
+
+def random_evolve_inputs(seed, T, n, k, dims, edge=False, noop=()):
+    """Random EvolveGCN stream-kernel inputs: ragged n per step, per-layer
+    weights/matrix-GRU params, optional per-layer edge aggregates, and
+    no-op (all-padding, live=0) steps at the given indices."""
+    rng = np.random.default_rng(seed)
+    rand = lambda key, shape: jax.random.normal(key, shape, jnp.float32)
+    idxs, coefs, xs, masks, lives = [], [], [], [], []
+    din = dims[0][0]
+    for t in range(T):
+        live = 0 if t in noop else 1
+        nr = int(rng.integers(max(n // 3, 1), n + 1)) if live else 0
+        idx = rng.integers(0, max(nr, 1), (n, k)).astype(np.int32)
+        coef = (rng.uniform(size=(n, k)) *
+                (rng.uniform(size=(n, k)) > 0.4)).astype(np.float32)
+        coef[nr:] = 0.0
+        x = rng.normal(size=(n, din)).astype(np.float32)
+        x[nr:] = 0.0
+        mask = np.zeros(n, np.float32)
+        mask[:nr] = 1.0
+        idxs.append(idx); coefs.append(coef); xs.append(x)
+        masks.append(mask); lives.append(live)
+    stream = (np.stack(idxs), np.stack(coefs), np.stack(xs),
+              np.stack(masks), np.asarray(lives, np.int32))
+    ks = jax.random.split(jax.random.PRNGKey(seed + 1), 5)
+    ws = [rand(jax.random.fold_in(ks[0], i), d) * 0.3
+          for i, d in enumerate(dims)]
+    bg = [rand(jax.random.fold_in(ks[1], i), (d[1],)) * 0.1
+          for i, d in enumerate(dims)]
+    gwx = [rand(jax.random.fold_in(ks[2], i), (d[0], 3 * d[0])) * 0.2
+           for i, d in enumerate(dims)]
+    gwh = [rand(jax.random.fold_in(ks[3], i), (d[0], 3 * d[0])) * 0.2
+           for i, d in enumerate(dims)]
+    gb = [rand(jax.random.fold_in(ks[4], i), (3 * d[0],)) * 0.1
+          for i, d in enumerate(dims)]
+    ea = None
+    if edge:
+        ea = [rand(jax.random.fold_in(ks[0], 100 + i), (T, n, d[0])) * 0.1
+              for i, d in enumerate(dims)]
+    return stream, ws, bg, gwx, gwh, gb, ea
+
+
+def stream_kernel_case(family: str, seed: int = 0, T: int = 3, B=None,
+                       n: int = 64, k: int = 4):
+    """Kernel-level differential case for one registered stream-engine
+    family: (args, oracle, d) such that
+    ``ops.stream_steps[_batched](family, *args, tn=32, td=...)`` must
+    equal ``oracle(*args)`` for ANY block size td, and ``d`` is the state
+    feature width (pick td <= d // 2 to force a D-blocked layout).
+
+    EVERY kernels/stream_fused.REGISTRY entry needs a builder here — the
+    registry tests (tests/test_registry.py, mirrored as a CI matrix lane)
+    parametrize over the registry, so registering a new family cell spec
+    without adding its differential case fails CI by construction.
+    """
+    from repro.kernels import ref as _ref
+
+    rand = lambda key, shape, s: np.asarray(
+        jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)) * s
+    if family == "gcrn":
+        din, h, G, e = 12, 24, 2 * n + 9, 4 * n
+        S = (random_ell_stream(seed, T, n, k, e, din, G) if B is None
+             else random_ell_stream_batch(seed, B, T, n, k, e, din, G))
+        lead = () if B is None else (B,)
+        args = (*S, rand(seed + 1, lead + (G, h), 0.5),
+                rand(seed + 2, lead + (G, h), 0.5),
+                rand(seed + 3, (din, 4 * h), 0.2),
+                rand(seed + 4, (h, 4 * h), 0.2),
+                rand(seed + 5, (4 * h,), 0.1))
+        oracle = (_ref.gcrn_stream_ref if B is None
+                  else _ref.gcrn_stream_batched_ref)
+        return args, oracle, h
+    if family == "stacked":
+        din, dmid, h, G, e = 12, 16, 24, 2 * n + 9, 4 * n
+        S = (random_ell_stream(seed, T, n, k, e, din, G) if B is None
+             else random_ell_stream_batch(seed, B, T, n, k, e, din, G))
+        lead = () if B is None else (B,)
+        args = (*S, rand(seed + 1, lead + (G, h), 0.5),
+                rand(seed + 2, (din, dmid), 0.2),
+                rand(seed + 3, (dmid,), 0.1),
+                rand(seed + 4, (dmid, 3 * h), 0.2),
+                rand(seed + 5, (h, 3 * h), 0.2),
+                rand(seed + 6, (3 * h,), 0.1))
+        oracle = (_ref.stacked_stream_ref if B is None
+                  else _ref.stacked_stream_batched_ref)
+        return args, oracle, h
+    if family == "evolve":
+        dims = [(12, 16), (16, 8)]
+        if B is None:
+            stream, ws, bg, gwx, gwh, gb, _ = random_evolve_inputs(
+                seed, T, n, k, dims)
+            return ((*stream, ws, bg, gwx, gwh, gb),
+                    _ref.evolve_stream_ref, max(max(d) for d in dims))
+        per = [random_evolve_inputs(seed + 97 * b, T, n, k, dims)
+               for b in range(B)]
+        S = tuple(np.stack([p[0][i] for p in per]) for i in range(5))
+        _, _, bg, gwx, gwh, gb, _ = per[0]
+        wsB = [np.stack([np.asarray(p[1][i]) for p in per])
+               for i in range(len(dims))]
+        return ((*S, wsB, bg, gwx, gwh, gb),
+                _ref.evolve_stream_batched_ref, max(max(d) for d in dims))
+    raise KeyError(
+        f"no kernel-level differential case for stream family {family!r}: "
+        "a cell spec was registered in kernels/stream_fused.REGISTRY "
+        "without test coverage — add a builder here")
 
 
 # ------------------------------------------------ padding invariants ----

@@ -18,6 +18,17 @@ def test_engines_equivalent_random_streams(stream_case):
     harness.assert_engines_equivalent(stream_case)
 
 
+@pytest.mark.parametrize("family", sorted(harness.DGNN_CONFIGS))
+def test_engines_equivalent_dblocked(family):
+    """D-blocked stream engine ≡ XLA baseline, end to end: hidden=32 with
+    stream_td=16 forces d//td == 2 for every family, and the full
+    differential contract (all engines, batched + solo, outputs AND final
+    recurrent states) must still hold with the state stores streamed in
+    column tiles."""
+    case = harness.make_case(family, seed=13, T=4, B=2, stream_td=16)
+    harness.assert_engines_equivalent(case)
+
+
 def test_batched_v3_streams_are_independent(stream_case):
     """Permuting the batch rows permutes the outputs identically — no
     cross-stream leakage through the serially reused VMEM state scratch."""

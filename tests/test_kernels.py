@@ -155,8 +155,10 @@ from harness import random_ell_stream, random_ell_stream_batch
 
 @pytest.mark.parametrize("T,n,k,din,h", [(4, 128, 8, 32, 64), (6, 256, 16, 64, 128)])
 @pytest.mark.parametrize("edge", [False, True])
-def test_gcrn_stream_kernel(T, n, k, din, h, edge):
-    """Time-fused V3 stream kernel == per-step scan oracle (GCRN)."""
+@pytest.mark.parametrize("td", [None, 32])
+def test_gcrn_stream_kernel(T, n, k, din, h, edge, td):
+    """Stream-engine V3 == per-step scan oracle (GCRN), fully resident
+    (td=None) and D-blocked (d//td >= 2) alike."""
     e, G = 4 * n, 2 * n + 17
     idx, coef, eidx, x, ren, mask = random_ell_stream(11, T, n, k, e, din, G)
     ks = jax.random.split(jax.random.PRNGKey(12), 6)
@@ -166,8 +168,8 @@ def test_gcrn_stream_kernel(T, n, k, din, h, edge):
     h0 = _rand(ks[3], (G, h)) * 0.5
     c0 = _rand(ks[4], (G, h)) * 0.5
     em = _rand(ks[5], (T, e, din)) if edge else None
-    got = ops.dgnn_stream_steps(idx, coef, eidx, x, ren, mask, h0, c0,
-                                wx, wh, bb, em, tn=128)
+    got = ops.stream_steps("gcrn", idx, coef, eidx, x, ren, mask, h0, c0,
+                           wx, wh, bb, em, tn=128, td=td)
     want = ref.gcrn_stream_ref(idx, coef, eidx, x, ren, mask, h0, c0,
                                wx, wh, bb, em)
     for g, w, nm in zip(got, want, ("outs", "h_final", "c_final")):
@@ -176,8 +178,10 @@ def test_gcrn_stream_kernel(T, n, k, din, h, edge):
 
 @pytest.mark.parametrize("T,n,k,din,dmid,h", [(5, 128, 8, 32, 48, 64)])
 @pytest.mark.parametrize("edge", [False, True])
-def test_stacked_stream_kernel(T, n, k, din, dmid, h, edge):
-    """Time-fused V3 stream kernel == per-step scan oracle (stacked)."""
+@pytest.mark.parametrize("td", [None, 16])
+def test_stacked_stream_kernel(T, n, k, din, dmid, h, edge, td):
+    """Stream-engine V3 == per-step scan oracle (stacked), resident and
+    D-blocked."""
     e, G = 4 * n, 2 * n + 5
     idx, coef, eidx, x, ren, mask = random_ell_stream(13, T, n, k, e, din, G)
     ks = jax.random.split(jax.random.PRNGKey(14), 7)
@@ -188,8 +192,8 @@ def test_stacked_stream_kernel(T, n, k, din, dmid, h, edge):
     bb = _rand(ks[4], (3 * h,)) * 0.1
     h0 = _rand(ks[5], (G, h)) * 0.5
     em = _rand(ks[6], (T, e, din)) if edge else None
-    got = ops.stacked_stream_steps(idx, coef, eidx, x, ren, mask, h0,
-                                   wg, bg, wx, wh, bb, em, tn=128)
+    got = ops.stream_steps("stacked", idx, coef, eidx, x, ren, mask, h0,
+                           wg, bg, wx, wh, bb, em, tn=128, td=td)
     want = ref.stacked_stream_ref(idx, coef, eidx, x, ren, mask, h0,
                                   wg, bg, wx, wh, bb, em)
     for g, w, nm in zip(got, want, ("outs", "h_final")):
@@ -207,7 +211,7 @@ def test_stream_kernel_ragged_n():
     bb = _rand(ks[2], (4 * h,)) * 0.1
     h0 = _rand(ks[3], (G, h)) * 0.5
     c0 = _rand(ks[4], (G, h)) * 0.5
-    got = ops.dgnn_stream_steps(idx, coef, eidx, x, ren, mask, h0, c0,
+    got = ops.stream_steps("gcrn", idx, coef, eidx, x, ren, mask, h0, c0,
                                 wx, wh, bb, tn=128)
     want = ref.gcrn_stream_ref(idx, coef, eidx, x, ren, mask, h0, c0,
                                wx, wh, bb)
@@ -230,13 +234,13 @@ def test_gcrn_stream_kernel_batched(B, T, n, k, din, h, edge):
     h0 = _rand(ks[3], (B, G, h)) * 0.5
     c0 = _rand(ks[4], (B, G, h)) * 0.5
     em = _rand(ks[5], (B, T, e, din)) if edge else None
-    got = ops.dgnn_stream_steps_batched(*S, h0, c0, wx, wh, bb, em, tn=128)
+    got = ops.stream_steps_batched("gcrn", *S, h0, c0, wx, wh, bb, em, tn=128)
     want = ref.gcrn_stream_batched_ref(*[jnp.asarray(s) for s in S], h0, c0,
                                        wx, wh, bb, em)
     for g, w, nm in zip(got, want, ("outs", "h_final", "c_final")):
         np.testing.assert_allclose(g, w, atol=2e-4, err_msg=nm)
     for b in range(B):
-        solo = ops.dgnn_stream_steps(*[s[b] for s in S], h0[b], c0[b],
+        solo = ops.stream_steps("gcrn", *[s[b] for s in S], h0[b], c0[b],
                                      wx, wh, bb,
                                      None if em is None else em[b], tn=128)
         for g, s_ in zip(got, solo):
@@ -255,7 +259,7 @@ def test_stacked_stream_kernel_batched():
     wh = _rand(ks[3], (h, 3 * h)) * 0.2
     bb = _rand(ks[4], (3 * h,)) * 0.1
     h0 = _rand(ks[5], (B, G, h)) * 0.5
-    got = ops.stacked_stream_steps_batched(*S, h0, wg, bg, wx, wh, bb, tn=128)
+    got = ops.stream_steps_batched("stacked", *S, h0, wg, bg, wx, wh, bb, tn=128)
     want = ref.stacked_stream_batched_ref(*[jnp.asarray(s) for s in S], h0,
                                           wg, bg, wx, wh, bb)
     for g, w, nm in zip(got, want, ("outs", "h_final")):
@@ -306,56 +310,22 @@ def test_flash_flops_accounting_causal_saves_half():
     assert caus["flops"] > 0.45 * full["flops"]
 
 
-def _evolve_inputs(seed, T, n, k, dims, edge=False, noop=()):
-    """Random EvolveGCN stream-kernel inputs: ragged n per step, per-layer
-    weights/matrix-GRU params, optional per-layer edge aggregates, and
-    no-op (all-padding, live=0) steps at the given indices."""
-    rng = np.random.default_rng(seed)
-    idxs, coefs, xs, masks, lives = [], [], [], [], []
-    din = dims[0][0]
-    for t in range(T):
-        live = 0 if t in noop else 1
-        nr = int(rng.integers(max(n // 3, 1), n + 1)) if live else 0
-        idx = rng.integers(0, max(nr, 1), (n, k)).astype(np.int32)
-        coef = (rng.uniform(size=(n, k)) *
-                (rng.uniform(size=(n, k)) > 0.4)).astype(np.float32)
-        coef[nr:] = 0.0
-        x = rng.normal(size=(n, din)).astype(np.float32)
-        x[nr:] = 0.0
-        mask = np.zeros(n, np.float32)
-        mask[:nr] = 1.0
-        idxs.append(idx); coefs.append(coef); xs.append(x)
-        masks.append(mask); lives.append(live)
-    stream = (np.stack(idxs), np.stack(coefs), np.stack(xs),
-              np.stack(masks), np.asarray(lives, np.int32))
-    ks = jax.random.split(jax.random.PRNGKey(seed + 1), 5)
-    ws = [_rand(jax.random.fold_in(ks[0], i), d) * 0.3
-          for i, d in enumerate(dims)]
-    bg = [_rand(jax.random.fold_in(ks[1], i), (d[1],)) * 0.1
-          for i, d in enumerate(dims)]
-    gwx = [_rand(jax.random.fold_in(ks[2], i), (d[0], 3 * d[0])) * 0.2
-           for i, d in enumerate(dims)]
-    gwh = [_rand(jax.random.fold_in(ks[3], i), (d[0], 3 * d[0])) * 0.2
-           for i, d in enumerate(dims)]
-    gb = [_rand(jax.random.fold_in(ks[4], i), (3 * d[0],)) * 0.1
-          for i, d in enumerate(dims)]
-    ea = None
-    if edge:
-        ea = [_rand(jax.random.fold_in(ks[0], 100 + i), (T, n, d[0])) * 0.1
-              for i, d in enumerate(dims)]
-    return stream, ws, bg, gwx, gwh, gb, ea
+from harness import random_evolve_inputs as _evolve_inputs
 
 
 @pytest.mark.parametrize("T,n,k", [(4, 128, 8), (5, 200, 12)])
 @pytest.mark.parametrize("edge", [False, True])
-def test_evolve_stream_kernel(T, n, k, edge):
-    """Weights-resident V3 stream kernel == per-step scan oracle
-    (EvolveGCN): per-step outputs AND final evolved weights, incl. a
-    ragged (non-tile-multiple) node count."""
+@pytest.mark.parametrize("td", [None, 16])
+def test_evolve_stream_kernel(T, n, k, edge, td):
+    """Weights-resident V3 through the stream engine == per-step scan
+    oracle (EvolveGCN): per-step outputs AND final evolved weights, incl.
+    a ragged (non-tile-multiple) node count and a D-blocked evolving-W
+    layout (dmax//td >= 2)."""
     dims = [(24, 40), (40, 16)]
     stream, ws, bg, gwx, gwh, gb, ea = _evolve_inputs(31, T, n, k, dims,
                                                       edge=edge)
-    got = ops.evolve_stream_steps(*stream, ws, bg, gwx, gwh, gb, ea, tn=128)
+    got = ops.stream_steps("evolve", *stream, ws, bg, gwx, gwh, gb, ea,
+                           tn=128, td=td)
     want = ref.evolve_stream_ref(*stream, ws, bg, gwx, gwh, gb, ea)
     assert got[0].shape == (T, n, dims[-1][1])
     np.testing.assert_allclose(got[0], want[0], atol=2e-4, err_msg="outs")
@@ -371,10 +341,10 @@ def test_evolve_stream_kernel_noop_steps_freeze_weights():
     dims = [(24, 40), (40, 16)]
     stream, ws, bg, gwx, gwh, gb, _ = _evolve_inputs(
         37, T, n, k, dims, noop=(4, 5))  # live prefix of 4, no-op tail of 2
-    outs, wT = ops.evolve_stream_steps(*stream, ws, bg, gwx, gwh, gb, tn=128)
+    outs, wT = ops.stream_steps("evolve", *stream, ws, bg, gwx, gwh, gb, tn=128)
     assert np.abs(np.asarray(outs)[4:]).max() == 0.0
     prefix = tuple(a[:4] for a in stream)
-    _, wT_prefix = ops.evolve_stream_steps(*prefix, ws, bg, gwx, gwh, gb,
+    _, wT_prefix = ops.stream_steps("evolve", *prefix, ws, bg, gwx, gwh, gb,
                                            tn=128)
     for i, (g, w) in enumerate(zip(wT, wT_prefix)):
         np.testing.assert_allclose(g, w, atol=1e-6,
@@ -398,7 +368,7 @@ def test_evolve_stream_kernel_batched(edge):
     eaB = None
     if edge:
         eaB = [jnp.stack([p[6][i] for p in per]) for i in range(len(dims))]
-    got = ops.evolve_stream_steps_batched(*S, wsB, bg, gwx, gwh, gb, eaB,
+    got = ops.stream_steps_batched("evolve", *S, wsB, bg, gwx, gwh, gb, eaB,
                                           tn=128)
     want = ref.evolve_stream_batched_ref(*[jnp.asarray(s) for s in S], wsB,
                                          bg, gwx, gwh, gb, eaB)
@@ -406,7 +376,7 @@ def test_evolve_stream_kernel_batched(edge):
     for i, (g, w) in enumerate(zip(got[1], want[1])):
         np.testing.assert_allclose(g, w, atol=2e-4, err_msg=f"weights[{i}]")
     for b in range(B):
-        solo = ops.evolve_stream_steps(
+        solo = ops.stream_steps("evolve", 
             *[s[b] for s in S], [w[b] for w in wsB], bg, gwx, gwh, gb,
             None if eaB is None else [e[b] for e in eaB], tn=128)
         np.testing.assert_allclose(np.asarray(got[0])[b], solo[0], atol=2e-4)

@@ -1,0 +1,146 @@
+"""Stream-engine registry contract (kernels/stream_fused.REGISTRY).
+
+Three guarantees pinned here (the CI fast lane runs this file once per
+registered family in a matrix, see .github/workflows/ci.yml):
+
+  1. every registered family's cell spec computes the XLA oracle exactly,
+     solo AND batched, fully resident AND D-blocked (d//td >= 2) — a
+     family registered without a harness case builder fails;
+  2. exactly ONE Pallas kernel body exists in stream_fused.py and no
+     family-named ``*_stream*kernel`` / ``*_stream*pallas`` definition
+     survives anywhere outside the registry module;
+  3. ``ops.set_force_ref`` covers the unified entry points: force-ref mode
+     NEVER enters ``pallas_call`` for any family or batching mode (the
+     forgotten-family-branch regression).
+"""
+import pathlib
+import re
+
+import numpy as np
+import pytest
+
+import harness
+from repro.kernels import ops, stream_fused
+
+FAMILIES = sorted(stream_fused.REGISTRY)
+
+
+def _run_case(family, batched, td):
+    B = 2 if batched else None
+    args, oracle, d = harness.stream_kernel_case(family, seed=3, B=B)
+    if td is not None:
+        assert d // td >= 2, "case must force a multi-block D layout"
+    fn = ops.stream_steps_batched if batched else ops.stream_steps
+    got = fn(family, *args, tn=32, td=td)
+    want = oracle(*args)
+    got_outs, want_outs = np.asarray(got[0]), np.asarray(want[0])
+    assert np.isfinite(want_outs).all() and np.abs(want_outs).max() > 0
+    np.testing.assert_allclose(got_outs, want_outs, atol=2e-4,
+                               err_msg=f"{family} outs")
+    for i, (g, w) in enumerate(zip(got[1:], want[1:])):
+        # final recurrent states (possibly a tuple of per-layer weights)
+        gs = g if isinstance(g, (tuple, list)) else (g,)
+        ws = w if isinstance(w, (tuple, list)) else (w,)
+        for gg, ww in zip(gs, ws):
+            np.testing.assert_allclose(np.asarray(gg), np.asarray(ww),
+                                       atol=2e-4,
+                                       err_msg=f"{family} state[{i}]")
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+@pytest.mark.parametrize("td", [None, 8])
+def test_registry_family_solo_matches_oracle(family, td):
+    """Solo stream through the engine == XLA oracle, resident (td=None)
+    and D-blocked (td=8, d//td >= 2) alike — outputs and final states."""
+    _run_case(family, batched=False, td=td)
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+@pytest.mark.parametrize("td", [None, 8])
+def test_registry_family_batched_matches_oracle(family, td):
+    """Batched streams through ONE engine launch == vmapped XLA oracle."""
+    _run_case(family, batched=True, td=td)
+
+
+def test_registry_covers_all_models():
+    """Every core model family dispatches to a registered cell spec, and
+    the ops dispatch table mirrors the registry exactly."""
+    from repro.configs.dgnn import DGNN_CONFIGS
+    from repro.core import build_model
+
+    assert ops.stream_families() == tuple(FAMILIES)
+    for cfg in DGNN_CONFIGS.values():
+        model = build_model(cfg)
+        assert model.stream_family in stream_fused.REGISTRY, cfg.name
+
+
+# ------------------------------------------------ structural checks ----
+
+def _src_files():
+    root = pathlib.Path(stream_fused.__file__).resolve().parents[2]
+    return sorted(root.rglob("*.py"))
+
+
+def test_exactly_one_stream_kernel_body():
+    """The generic engine is the ONLY Pallas kernel (and the only
+    pallas_call site) in stream_fused.py — family code is cell specs."""
+    src = pathlib.Path(stream_fused.__file__).read_text()
+    kernels = re.findall(r"^def (\w*_kernel)\(", src, re.M)
+    assert kernels == ["_stream_engine_kernel"], kernels
+    assert src.count("pl.pallas_call(") == 1
+
+
+def test_no_family_named_stream_kernels_outside_registry():
+    """No family-named stream kernel/launcher definition survives outside
+    the registry module (oracles in ref.py are ``*_stream*_ref`` — the XLA
+    production path — and stay)."""
+    pat = re.compile(
+        r"^def\s+_?\w*(gcrn|stacked|evolve|dgnn)\w*_stream\w*\(", re.M)
+    offenders = []
+    for f in _src_files():
+        if f.name == "stream_fused.py":
+            continue
+        for m in pat.finditer(f.read_text()):
+            if not m.group(0).rstrip("(").endswith(("_ref", "_refs")):
+                offenders.append(f"{f.name}: {m.group(0)}")
+    assert not offenders, offenders
+
+
+# ------------------------------------------------ force-ref routing ----
+
+def _boom(*a, **k):
+    raise AssertionError("pallas_call entered under force-ref")
+
+
+def test_force_ref_never_enters_pallas_call(monkeypatch):
+    """The single force-ref gate in ops covers EVERY family and batching
+    mode: with set_force_ref(True), pallas_call is unreachable (the
+    pre-refactor bug was a per-family branch that forgot the check and
+    silently benchmarked the Pallas interpreter as the XLA path)."""
+    monkeypatch.setattr(stream_fused.pl, "pallas_call", _boom)
+    # cached engine executables would bypass the patched pallas_call and
+    # blind the probe — force a fresh trace
+    stream_fused.stream_call.clear_cache()
+    # the probe is live: without force-ref the engine path must trip it
+    args, _, _ = harness.stream_kernel_case(FAMILIES[0], seed=5)
+    with pytest.raises(Exception, match="pallas_call entered"):
+        ops.stream_steps(FAMILIES[0], *args, tn=32)
+    ops.set_force_ref(True)
+    try:
+        for family in FAMILIES:
+            for batched in (False, True):
+                B = 2 if batched else None
+                args, oracle, _ = harness.stream_kernel_case(family, seed=5,
+                                                             B=B)
+                fn = ops.stream_steps_batched if batched else ops.stream_steps
+                got = fn(family, *args, tn=32)
+                np.testing.assert_allclose(np.asarray(got[0]),
+                                           np.asarray(oracle(*args)[0]),
+                                           atol=1e-5)
+    finally:
+        ops.set_force_ref(False)
+
+
+def test_unknown_family_raises():
+    with pytest.raises(KeyError, match="unknown stream-engine family"):
+        ops.stream_steps("gat", None)

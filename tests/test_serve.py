@@ -213,6 +213,104 @@ def test_run_multi_bucketed_same_bucket_streams_share_launch():
                                        err_msg=f"{sid} t={t}")
 
 
+def _split_snaps_by_bucket(snaps, buckets):
+    """Partition snapshots by the bucket choose_bucket assigns them."""
+    from repro.graph import choose_bucket, max_in_degree
+
+    by_bucket = {b: [] for b in buckets}
+    for s in snaps:
+        ls = renumber_and_normalize(s)
+        b = choose_bucket(ls.n_nodes, ls.src.shape[0], max_in_degree(ls),
+                          buckets)
+        by_bucket[b].append(s)
+    return by_bucket
+
+
+def test_promote_bucket_groups_guard_and_chain():
+    """Unit contract of the grouper helper: groups merge up the chain only
+    while the padded-compute guard holds against each member's ORIGINAL
+    bucket, and members are re-tagged to the target bucket."""
+    from repro.graph import bucket_cost, promote_bucket_groups
+
+    buckets = ((64, 256, 8), (128, 512, 16), (640, 4096, 64))
+    small, mid, big = buckets
+    groups = {small: [("a", ["s"], small)], mid: [("b", ["m"], mid)]}
+    # generous guard: small promotes into mid (one launch)
+    merged = promote_bucket_groups(groups, buckets,
+                                   bucket_cost(mid) / bucket_cost(small))
+    assert set(merged) == {mid}
+    assert {sid for sid, _, _ in merged[mid]} == {"a", "b"}
+    assert all(b == mid for _, _, b in merged[mid])
+    # tight guard: no promotion
+    assert set(promote_bucket_groups(groups, buckets, 1.0)) == {small, mid}
+    # chain guard: with a guard that just covers mid -> big, a lone mid
+    # group promotes into big ...
+    groups3 = {mid: [("b", ["m"], mid)], big: [("c", ["g"], big)]}
+    ratio_mid_big = bucket_cost(big) / bucket_cost(mid)
+    merged3 = promote_bucket_groups(groups3, buckets, ratio_mid_big)
+    assert set(merged3) == {big}
+    # ... but after absorbing a small-bucket member, the second hop is
+    # guarded against that member's ORIGINAL bucket and stays put
+    groups4 = {small: [("a", ["s"], small)], mid: [("b", ["m"], mid)],
+               big: [("c", ["g"], big)]}
+    merged4 = promote_bucket_groups(groups4, buckets, ratio_mid_big)
+    assert {s for s, _, _ in merged4[mid]} == {"a", "b"}
+    assert {s for s, _, _ in merged4[big]} == {"c"}
+
+
+def test_run_multi_bucket_promotion_joins_inflight_batch():
+    """Cross-bucket batching: two clients whose chunks land in DIFFERENT
+    buckets. Without promotion each round pays two batched launches; with
+    ``promote_buckets`` the smaller chunk is promoted into the larger
+    bucket's in-flight launch (one launch, promoted_chunks > 0, padding
+    overhead visible in ServeStats) and every client's outputs stay
+    offline-identical on its real-node rows. A tight guard (1.0) keeps
+    promotion off."""
+    tg, ft = generate_temporal_graph(UCI)
+    buckets = ((256, 1024, 48), (640, 4096, 64))
+    by_bucket = _split_snaps_by_bucket(slice_snapshots(tg, 1.0), buckets)
+    small, big = (by_bucket[b] for b in buckets)
+    assert len(small) >= 4 and len(big) >= 4, "dataset must span buckets"
+    streams = {"s": small[:4], "b": big[:4]}
+
+    def run(promote):
+        srv = SnapshotServer(GCRN_M2, ft, n_global=tg.n_global_nodes,
+                             mode="v3", stream_chunk=4, buckets=buckets,
+                             promote_buckets=promote)
+        params, _ = srv.init(jax.random.PRNGKey(0))
+        states = {sid: srv.model.init_state(params, mode="v3")
+                  for sid in streams}
+        _, outs, stats = srv.run_multi(params, states, streams)
+        return outs, stats
+
+    outs_off, stats_off = run(None)
+    assert stats_off.launches == 2 and stats_off.promoted_chunks == 0
+    outs_tight, stats_tight = run(1.0)       # guard blocks promotion
+    assert stats_tight.launches == 2 and stats_tight.promoted_chunks == 0
+    outs_on, stats_on = run(100.0)           # generous guard: one launch
+    assert stats_on.launches == 1
+    assert stats_on.promoted_chunks == 1
+    # the promoted chunk's padding overhead is reported, not hidden
+    assert stats_on.live_snapshots == 8
+    assert stats_on.padded_snapshots >= stats_off.padded_snapshots
+    # outputs stay offline-identical on real-node rows, promoted or not
+    model = build_model(GCRN_M2, n_global=tg.n_global_nodes)
+    srv0 = SnapshotServer(GCRN_M2, ft, n_global=tg.n_global_nodes)
+    params, _ = srv0.init(jax.random.PRNGKey(0))
+    for outs in (outs_on, outs_tight, outs_off):
+        for sid, snaps in streams.items():
+            pads = [pad_snapshot(renumber_and_normalize(s), ft, 640, 4096,
+                                 64) for s in snaps]
+            st = model.init_state(params, mode="baseline")
+            _, off = run_stream(model, params, st, stack_time(pads),
+                                mode="baseline")
+            for t, s in enumerate(snaps):
+                nr = renumber_and_normalize(s).n_nodes
+                np.testing.assert_allclose(outs[sid][t][:nr],
+                                           np.asarray(off)[t][:nr],
+                                           atol=1e-5, err_msg=f"{sid} t={t}")
+
+
 def test_run_multi_producer_exception_propagates():
     """A no-fit snapshot in ONE tenant's stream must raise out of
     run_multi (not hang the round loop) and leave the producer threads
