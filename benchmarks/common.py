@@ -1,6 +1,8 @@
 """Shared benchmark utilities."""
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 
 import jax
@@ -16,6 +18,13 @@ from repro.graph import (
 )
 
 N_PAD, E_PAD, K_MAX = 640, 4096, 64
+
+# machine-readable stream-benchmark ledger at the repo root: one record
+# per row name, merged across kernel_bench / fig6_ablation runs so the
+# perf trajectory (throughput, live/padded ratio, plan fields) is
+# trackable across PRs.
+BENCH_STREAMS_PATH = pathlib.Path(__file__).resolve().parents[1] / \
+    "BENCH_streams.json"
 
 
 def load_stream(ds: DatasetConfig, limit: int | None = None):
@@ -43,17 +52,65 @@ def time_step_fn(fn, *args, warmup: int = 2, iters: int = 10) -> float:
     return float(np.median(ts))
 
 
-def per_snapshot_ms(cfg_name: str, ds: DatasetConfig, mode: str,
+def per_snapshot_ms(cfg_name: str, ds: DatasetConfig, level: str,
                     t_steps: int = 16, iters: int = 5) -> float:
-    """Mean per-snapshot latency of a full stream scan (ms)."""
+    """Mean per-snapshot latency of a full stream scan (ms) at one
+    dataflow level (executed through a typed StreamPlan)."""
+    from repro import api
+    from repro.core import run_plan
+
     cfg = DGNN_CONFIGS[cfg_name]
+    plan = api.plan(cfg, level=level)
     tg, ft, snaps, sT = load_stream(ds, limit=t_steps)
     model = build_model(cfg, n_global=tg.n_global_nodes)
     params = model.init(jax.random.PRNGKey(0))
-    state0 = model.init_state(params, mode=mode)
+    state0 = model.init_state(params, mode=level)
 
-    from repro.core import run_stream
-
-    run = jax.jit(lambda p, s, x: run_stream(model, p, s, x, mode=mode)[1])
+    run = jax.jit(lambda p, s, x: run_plan(model, p, s, x, plan)[1])
     ms = time_step_fn(run, params, state0, sT, warmup=1, iters=iters)
     return ms / t_steps
+
+
+# ----------------------------------------------- BENCH_streams.json ----
+
+def parse_notes(notes: str) -> dict:
+    """Best-effort parse of a row's 'k=v,k=v' derived-notes string into
+    typed fields (floats where possible; '1.37x'/'4611_snap/s' style
+    suffixes stripped)."""
+    out = {}
+    for part in str(notes).split(","):
+        if "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        v = v.strip()
+        for suffix in ("_snap/s", "x"):
+            if v.endswith(suffix):
+                v = v[: -len(suffix)]
+        try:
+            out[k.strip()] = float(v)
+        except ValueError:
+            out[k.strip()] = v
+    return out
+
+
+def write_stream_bench(rows, plans: dict | None = None,
+                       path: pathlib.Path | None = None) -> dict:
+    """Merge benchmark rows into the BENCH_streams.json ledger.
+
+    ``rows`` are the (name, us_per_call, notes) triples the suites print;
+    ``plans`` maps row name -> StreamPlan.as_dict() for rows executed
+    through the plan API. Existing records for other names are preserved
+    (kernel_bench and fig6 both write here), so the file accumulates the
+    full stream-perf picture per commit."""
+    path = BENCH_STREAMS_PATH if path is None else pathlib.Path(path)
+    ledger = {}
+    if path.exists():
+        ledger = {r["name"]: r for r in json.loads(path.read_text())["rows"]}
+    for name, us, notes in rows:
+        rec = {"name": name, "us_per_call": float(us), **parse_notes(notes)}
+        if plans and name in plans:
+            rec["plan"] = plans[name]
+        ledger[name] = rec
+    payload = {"rows": [ledger[k] for k in sorted(ledger)]}
+    path.write_text(json.dumps(payload, indent=1, sort_keys=True) + "\n")
+    return payload

@@ -86,10 +86,11 @@ def run_batched_sweep(name: str = "gcrn-m2", t_steps: int = 6,
     import numpy as np
 
     from benchmarks.common import load_stream
-    from benchmarks.kernel_bench import live_padded_counts
+    from benchmarks.kernel_bench import PLANS, live_padded_counts
+    from repro import api
     from repro.configs.dgnn import DGNN_CONFIGS
-    from repro.core import (build_model, init_states_batched, run_batched,
-                            run_stream)
+    from repro.core import (build_model, init_states_batched, run_plan,
+                            run_plan_batched)
     from repro.kernels import ops
 
     cfg = DGNN_CONFIGS[name]
@@ -100,22 +101,25 @@ def run_batched_sweep(name: str = "gcrn-m2", t_steps: int = 6,
     on_cpu = jax.default_backend() != "tpu"
     ops.set_force_ref(on_cpu)
     try:
+        p1 = api.plan(cfg, level="v3")
         seq = jax.jit(
-            lambda p, s, x: run_stream(model, p, s, x, mode="v3")[1])
-        bat = jax.jit(
-            lambda p, s, x: run_batched(model, p, s, x, mode="v3")[1])
+            lambda p, s, x: run_plan(model, p, s, x, p1)[1])
         for B in streams:
+            pB = api.plan(cfg, level="v3", batch=B)
+            bat = jax.jit(
+                lambda p, s, x, pB=pB: run_plan_batched(model, p, s, x,
+                                                        pB)[1])
             perturbed = [
                 jax.tree.map(lambda a: a, sT) for _ in range(B)]
             for i, sp in enumerate(perturbed):
                 sp.node_feat = sT.node_feat * (1.0 + 0.01 * i)
-            sTB = jax.tree.map(
-                lambda *xs: np.stack(xs, axis=1), *perturbed)
-            states = init_states_batched(model, params, B, mode="v3")
-            st1 = model.init_state(params, mode="v3")
+            sBT = jax.tree.map(
+                lambda *xs: np.stack(xs, axis=0), *perturbed)
+            states = init_states_batched(model, params, B, mode=pB.level)
+            st1 = model.init_state(params, mode=p1.level)
             for sp in perturbed:  # warmup/compile both programs
                 jax.block_until_ready(seq(params, st1, sp))
-            jax.block_until_ready(bat(params, states, sTB))
+            jax.block_until_ready(bat(params, states, sBT))
             ts, tb = [], []
             for _ in range(iters):
                 t0 = _time.perf_counter()
@@ -123,16 +127,18 @@ def run_batched_sweep(name: str = "gcrn-m2", t_steps: int = 6,
                 jax.block_until_ready(outs)
                 ts.append(_time.perf_counter() - t0)
                 t0 = _time.perf_counter()
-                jax.block_until_ready(bat(params, states, sTB))
+                jax.block_until_ready(bat(params, states, sBT))
                 tb.append(_time.perf_counter() - t0)
             t_seq = float(np.median(ts)) * 1e3
             t_bat = float(np.median(tb)) * 1e3
             total = B * t_steps
             # padded-vs-live slots of the batched launch: this offline
-            # sweep is all-live; serve-side chunk tails, no-op batch rows
-            # and promoted buckets surface here as snaps_padded > 0.
-            live, padded = live_padded_counts(sTB.node_mask)
-            rows.append((f"fig6/batched_v3/{name}/B{B}", t_bat * 1e3,
+            # sweep is all-live; serve-side chunk tails, dead ragged-T
+            # slots and promoted buckets surface here as snaps_padded > 0.
+            live, padded = live_padded_counts(sBT.node_mask)
+            name_B = f"fig6/batched_v3/{name}/B{B}"
+            PLANS[name_B] = pB.as_dict()
+            rows.append((name_B, t_bat * 1e3,
                          f"throughput={total / (t_bat / 1e3):.0f}_snap/s,"
                          f"dispatches=1_vs_{B},"
                          f"snaps_live={live},snaps_padded={padded},"
@@ -143,5 +149,10 @@ def run_batched_sweep(name: str = "gcrn-m2", t_steps: int = 6,
 
 
 if __name__ == "__main__":
-    for r in run():
+    from benchmarks.common import write_stream_bench
+    from benchmarks.kernel_bench import PLANS
+
+    rows = run()
+    for r in rows:
         print(",".join(map(str, r)))
+    write_stream_bench(rows, PLANS)

@@ -1,5 +1,10 @@
 """Kernel microbenchmarks: XLA reference path timings on CPU + the Pallas
 kernels' VMEM working-set accounting (the TPU-relevant structural number).
+
+Stream rows execute through typed StreamPlans (repro.api.run_arrays) and
+record their plan fields in BENCH_streams.json (``python -m
+benchmarks.kernel_bench`` merges the ledger) so the perf trajectory is
+machine-trackable across PRs.
 """
 from __future__ import annotations
 
@@ -7,10 +12,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.kernels import ref
 
-from benchmarks.common import load_stream, time_step_fn
+from benchmarks.common import load_stream, time_step_fn, write_stream_bench
 from repro.configs.dgnn import BC_ALPHA
+
+# row name -> StreamPlan.as_dict() for rows executed through the plan API
+# (written into BENCH_streams.json alongside the measurements)
+PLANS: dict = {}
+
+
+def _planned(name: str, plan: api.StreamPlan) -> str:
+    PLANS[name] = plan.as_dict()
+    return name
 
 
 def vmem_bytes_spmm(n=640, k=64, d=128, tn=128) -> int:
@@ -114,6 +129,8 @@ def run_stream_vs_per_step(t_steps: int = 8, hidden: int = 128
     """
     from repro.kernels import ops
 
+    plan_res = api.plan(family="gcrn", level="v3")
+    plan_blk = api.plan(family="gcrn", level="v3", td=hidden // 2)
     tg, ft, snaps, sT = load_stream(BC_ALPHA, limit=t_steps)
     G = tg.n_global_nodes
     rngs = np.random.default_rng(3)
@@ -143,10 +160,10 @@ def run_stream_vs_per_step(t_steps: int = 8, hidden: int = 128
         (hs, cs), outs = jax.lax.scan(body, (h_store, c_store), xs)
         return outs, hs, cs
 
-    def v3_stream(h_store, c_store, td=None):
-        return ops.stream_steps(
-            "gcrn", sT.neigh_idx, sT.neigh_coef, sT.neigh_eidx, sT.node_feat,
-            sT.renumber, sT.node_mask, h_store, c_store, wx, wh, b, td=td)
+    def v3_stream(h_store, c_store, plan=plan_res):
+        return api.run_arrays(
+            plan, sT.neigh_idx, sT.neigh_coef, sT.neigh_eidx, sT.node_feat,
+            sT.renumber, sT.node_mask, h_store, c_store, wx, wh, b)
 
     rows = []
     bytes_v2 = recurrent_state_hbm_bytes(t_steps, G, hidden, time_fused=False)
@@ -156,7 +173,8 @@ def run_stream_vs_per_step(t_steps: int = 8, hidden: int = 128
     rows.append((f"kernel/gcrn_per_step_v2_T{t_steps}", t_v2 * 1e3,
                  f"state_hbm_bytes={bytes_v2} (h+c in/out every step)"))
     t_v3 = time_step_fn(jax.jit(v3_stream), h0, c0, iters=5)
-    rows.append((f"kernel/gcrn_time_fused_v3_T{t_steps}", t_v3 * 1e3,
+    rows.append((_planned(f"kernel/gcrn_time_fused_v3_T{t_steps}", plan_res),
+                 t_v3 * 1e3,
                  f"state_hbm_bytes={bytes_v3},"
                  f"state_hbm_reduction={bytes_v2 // bytes_v3}x,"
                  f"snaps_live={live},snaps_padded={padded}"))
@@ -166,9 +184,11 @@ def run_stream_vs_per_step(t_steps: int = 8, hidden: int = 128
     # PAGING UNIT of the planned HBM-resident store, not a VMEM saving
     # today (the interpret build stacks all windows in one allocation).
     td = hidden // 2
-    t_v3b = time_step_fn(jax.jit(lambda hh, cc: v3_stream(hh, cc, td=td)),
+    t_v3b = time_step_fn(jax.jit(lambda hh, cc: v3_stream(hh, cc,
+                                                          plan=plan_blk)),
                          h0, c0, iters=5)
-    rows.append((f"kernel/gcrn_v3_dblocked_td{td}_T{t_steps}", t_v3b * 1e3,
+    rows.append((_planned(f"kernel/gcrn_v3_dblocked_td{td}_T{t_steps}",
+                          plan_blk), t_v3b * 1e3,
                  f"state_hbm_bytes={bytes_v3},"
                  f"dblock_paging_window_bytes={vmem_state_block_bytes(G, hidden, td)},"
                  f"resident_state_bytes={vmem_state_block_bytes(G, hidden)},"
@@ -217,6 +237,7 @@ def run_evolve_stream_vs_per_step(t_steps: int = 8, n: int = 640,
     from repro.kernels import ops
 
     dims = [(din, hidden), (hidden, out)]
+    plan_v3 = api.plan(family="evolve", level="v3")
     rngs = np.random.default_rng(5)
     stream = _random_evolve_stream(rngs, t_steps, n, k, din)
     ws, bg, gwx, gwh, gb = _evolve_params(rngs, dims)
@@ -225,7 +246,7 @@ def run_evolve_stream_vs_per_step(t_steps: int = 8, n: int = 640,
         return ref.evolve_stream_ref(*stream, weights, bg, gwx, gwh, gb)
 
     def v3_stream(weights):
-        return ops.stream_steps("evolve", *stream, weights, bg, gwx, gwh, gb)
+        return api.run_arrays(plan_v3, *stream, weights, bg, gwx, gwh, gb)
 
     bytes_v1 = evolving_weights_hbm_bytes(t_steps, dims, time_fused=False)
     bytes_v3 = evolving_weights_hbm_bytes(t_steps, dims, time_fused=True)
@@ -241,8 +262,8 @@ def run_evolve_stream_vs_per_step(t_steps: int = 8, n: int = 640,
                      f"path=xla_ref,weights_hbm_bytes={bytes_v1} "
                      "(all W_l in/out every step)"))
         t_v3 = time_step_fn(jax.jit(v3_stream), ws, iters=5)
-        rows.append((f"kernel/evolve_weights_resident_v3_T{t_steps}",
-                     t_v3 * 1e3,
+        rows.append((_planned(f"kernel/evolve_weights_resident_v3_T{t_steps}",
+                              plan_v3), t_v3 * 1e3,
                      f"path={'xla_ref' if on_cpu else 'pallas'},"
                      f"weights_hbm_bytes={bytes_v3},"
                      f"weights_hbm_reduction={bytes_v1 // bytes_v3}x"))
@@ -284,16 +305,19 @@ def _time_batched_vs_sequential(one, bat, singles, iters: int):
 
 
 def _dispatch_rows(family: str, B: int, t_steps: int, t_seq: float,
-                   t_bat: float, path: str, node_mask=None
+                   t_bat: float, path: str, node_mask=None, plan=None
                    ) -> list[tuple[str, float, str]]:
     total_snaps = B * t_steps
     live, padded = (live_padded_counts(node_mask) if node_mask is not None
                     else (total_snaps, 0))
+    batched_name = f"kernel/{family}_v3_batched_B{B}_T{t_steps}"
+    if plan is not None:
+        batched_name = _planned(batched_name, plan)
     return [
         (f"kernel/{family}_v3_sequential_B{B}_T{t_steps}", t_seq * 1e3,
          f"dispatches={B},path={path},"
          f"throughput={total_snaps / (t_seq / 1e3):.0f}_snap/s"),
-        (f"kernel/{family}_v3_batched_B{B}_T{t_steps}", t_bat * 1e3,
+        (batched_name, t_bat * 1e3,
          f"dispatches=1,path={path},"
          f"throughput={total_snaps / (t_bat / 1e3):.0f}_snap/s,"
          f"snaps_live={live},snaps_padded={padded},"
@@ -313,8 +337,6 @@ def run_evolve_batched_streams(B: int = 8, t_steps: int = 4, n: int = 64,
     loaded once per launch. The structural numbers (dispatches B -> 1,
     weight-state transfers 2/stream) carry to TPU.
     """
-    from repro.kernels import ops
-
     dims = [(din, hidden), (hidden, out)]
     rngs = np.random.default_rng(6)
     streams = [_random_evolve_stream(rngs, t_steps, n, k, din)
@@ -326,15 +348,15 @@ def run_evolve_batched_streams(B: int = 8, t_steps: int = 4, n: int = 64,
     wsB = [jnp.asarray(rngs.normal(size=(B,) + d) * 0.1, jnp.float32)
            for d in dims]
 
-    one = jax.jit(lambda s, w: ops.stream_steps(
-        "evolve", *s, w, bg, gwx, gwh, gb))
-    bat = jax.jit(lambda w: ops.stream_steps_batched(
-        "evolve", *batch, w, bg, gwx, gwh, gb))
+    p1 = api.plan(family="evolve", level="v3")
+    pB = api.plan(family="evolve", level="v3", batch=B)
+    one = jax.jit(lambda s, w: api.run_arrays(p1, *s, w, bg, gwx, gwh, gb))
+    bat = jax.jit(lambda w: api.run_arrays(pB, *batch, w, bg, gwx, gwh, gb))
     t_seq, t_bat, path = _time_batched_vs_sequential(
         one, lambda: bat(wsB),
         [(single[i], [w[i] for w in wsB]) for i in range(B)], iters)
     return _dispatch_rows("evolve", B, t_steps, t_seq, t_bat, path,
-                          node_mask=batch[3])
+                          node_mask=batch[3], plan=pB)
 
 
 def run_batched_streams(B: int = 8, t_steps: int = 4, n: int = 64,
@@ -354,8 +376,6 @@ def run_batched_streams(B: int = 8, t_steps: int = 4, n: int = 64,
     numbers (dispatches B -> 1, recurrent-state HBM transfers 2/stream
     either way) carry over to the TPU build.
     """
-    from repro.kernels import ops
-
     rngs = np.random.default_rng(4)
 
     def one_stream():
@@ -381,17 +401,20 @@ def run_batched_streams(B: int = 8, t_steps: int = 4, n: int = 64,
     c0B = jnp.asarray(rngs.normal(size=(B, n_global, hidden)) * 0.1,
                       jnp.float32)
 
-    one = jax.jit(lambda s, hh, cc: ops.stream_steps(
-        "gcrn", *s, hh, cc, wx, wh, b))
-    bat = jax.jit(lambda hB, cB: ops.stream_steps_batched(
-        "gcrn", *batch, hB, cB, wx, wh, b))
+    p1 = api.plan(family="gcrn", level="v3")
+    pB = api.plan(family="gcrn", level="v3", batch=B)
+    one = jax.jit(lambda s, hh, cc: api.run_arrays(p1, *s, hh, cc, wx, wh, b))
+    bat = jax.jit(lambda hB, cB: api.run_arrays(pB, *batch, hB, cB,
+                                                wx, wh, b))
     t_seq, t_bat, path = _time_batched_vs_sequential(
         one, lambda: bat(h0B, c0B),
         [(single[i], h0B[i], c0B[i]) for i in range(B)], iters)
     return _dispatch_rows("gcrn", B, t_steps, t_seq, t_bat, path,
-                          node_mask=batch[5])
+                          node_mask=batch[5], plan=pB)
 
 
 if __name__ == "__main__":
-    for r in run():
+    rows = run()
+    for r in rows:
         print(",".join(map(str, r)))
+    write_stream_bench(rows, PLANS)

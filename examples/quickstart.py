@@ -4,27 +4,34 @@ Generates a UCI-like temporal graph, slices snapshots on the host, and
 streams them through the GCRN-M2 model with the V2 fused dataflow —
 the paper's end-to-end inference pipeline in ~30 lines of user code.
 
+The surface is the typed plan/execute API: build ONE validated
+``StreamPlan`` (dataflow level, tiling, serve policy — anything invalid
+raises right here, not at launch), bind it to a ``BoosterSession`` that
+owns the params and recurrent state, and serve.
+
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 import numpy as np
 
+from repro.api import BoosterSession, plan
 from repro.configs.dgnn import GCRN_M2, UCI
 from repro.graph import generate_temporal_graph, slice_snapshots
-from repro.serve import SnapshotServer
 
 def main():
     # 1. data: time-stamped COO edges (here: synthetic UCI-like stream)
     tg, feat_table = generate_temporal_graph(UCI)
     snapshots = slice_snapshots(tg, time_splitter=1.0)[:24]
 
-    # 2. engine: GCRN-M2 with the V2 (intra-step GNN/RNN fusion) dataflow
-    server = SnapshotServer(GCRN_M2, feat_table, n_global=tg.n_global_nodes,
-                            mode="v2")
-    params, state = server.init(jax.random.PRNGKey(0))
+    # 2. plan + session: GCRN-M2 with the V2 (intra-step GNN/RNN fusion)
+    #    dataflow, validated at construction time
+    session = BoosterSession(GCRN_M2, plan(GCRN_M2, level="v2"),
+                             n_global=tg.n_global_nodes,
+                             feat_table=feat_table,
+                             rng=jax.random.PRNGKey(0))
 
     # 3. serve: host thread preprocesses (CPU tasks), device consumes
-    state, outputs, stats = server.run(params, state, snapshots)
+    outputs, stats = session.serve(snapshots)
 
     print(f"served {len(outputs)} snapshots")
     print(f"mean device latency  : {stats.mean_latency_ms:8.3f} ms/snapshot")

@@ -14,8 +14,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import plan
 from repro.configs.dgnn import BC_ALPHA, EVOLVEGCN
-from repro.core import build_model, run_stream, stack_time
+from repro.core import build_model, run_plan, stack_time
 from repro.graph import (
     generate_temporal_graph,
     pad_snapshot,
@@ -64,10 +65,11 @@ def main():
     snaps = slice_snapshots(tg, 1.0)
     model = build_model(EVOLVEGCN, n_global=tg.n_global_nodes)
     params0 = model.init(jax.random.PRNGKey(0))
+    v1 = plan(EVOLVEGCN, level="v1")
 
     def loss_fn(params, batch):
-        state = model.init_state(params, mode="v1")
-        _, outs = run_stream(model, params, state, batch["window"], mode="v1")
+        state = model.init_state(params, mode=v1.level)
+        _, outs = run_plan(model, params, state, batch["window"], v1)
         emb_local = outs[-1]                       # (n_pad, out_dim)
         # scatter window-final embeddings into a global table for scoring
         ren = batch["last_renumber"]

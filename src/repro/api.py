@@ -1,0 +1,390 @@
+"""Typed plan/execute front-end for the DGNN-Booster stack.
+
+The paper's claim is a *generic* accelerator framework; this module is the
+generic *surface*: instead of picking dataflows by bare mode strings
+(``run_stream(..., mode="v3")``), tile knobs by scattered kwargs and serve
+policy by ``SnapshotServer.__init__`` arguments, callers build ONE typed,
+frozen :class:`StreamPlan` — validated against the stream-engine registry
+and the hardware tiling limits at construction time — and hand it to an
+executor:
+
+  * :func:`plan` — the validating builder (from a ``DGNNConfig`` or a raw
+    family name). Every invalid combination (unknown family, a dataflow
+    level the family does not support, misaligned ``tn``/``td`` tiles,
+    ragged ``lengths`` that do not match the batch, a ``DeviceSpec`` the
+    host cannot satisfy) raises HERE, not at launch time.
+  * :class:`BoosterSession` — owns a model + params + recurrent state and
+    exposes ``run`` (one stream), ``run_batched`` (B independent streams,
+    ragged T welcome) and ``serve`` / ``serve_multi`` (the snapshot
+    serving engine as a consumer of the session).
+  * ``core/dataflow.run_plan[_batched]`` — the engine executors a plan
+    compiles down to. The historical ``run_stream(mode=...)`` /
+    ``run_batched(mode=...)`` entry points survive as deprecated shims
+    that build the equivalent plan.
+  * :func:`run_arrays` — the kernel-level executor for pre-padded ELL
+    stream arrays (benchmarks); same plan, no snapshot pytrees.
+
+Two engine capabilities exist ONLY through the plan:
+
+  * ``lengths`` — per-stream ragged T inside one batched launch: stream
+    b's steps past ``lengths[b]`` execute as in-launch no-ops, so a batch
+    of unequal-length streams needs no host-manufactured empty snapshots.
+  * ``device`` — a :class:`DeviceSpec` sharding the leading B grid axis
+    over a ``launch/mesh.py`` data-axis mesh via shard_map; streams are
+    independent, so the sharded launch is bit-identical to the unsharded
+    one.
+
+See docs/api.md for the plan-field -> engine-behavior table and migration
+notes from the mode-string surface.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.dgnn import DGNNConfig
+from repro.kernels import ops as _ops
+from repro.launch.mesh import DeviceSpec
+
+# dataflow levels each registered family supports (the paper's ablation
+# ladder; v1 is the module-overlap schedule — undefined for the integrated
+# family, whose Pipeline-O2 is v2 — and v2 the intra-step fusion, which
+# the weights-evolved family has no kernel for).
+FAMILY_LEVELS = {
+    "gcrn": ("baseline", "o1", "v2", "v3"),
+    "stacked": ("baseline", "o1", "v1", "v2", "v3"),
+    "evolve": ("baseline", "o1", "v1", "v3"),
+}
+
+_FAMILY_OF_TYPE = {
+    "integrated": "gcrn",
+    "stacked": "stacked",
+    "weights_evolved": "evolve",
+}
+
+# TPU tiling alignment for the node/state tile knobs (sublane granularity;
+# the engine's BlockSpecs assume it).
+_TILE_ALIGN = 8
+
+_UNSET = object()
+
+
+def family_for(cfg: DGNNConfig) -> str:
+    """Stream-engine family (registry key) of a DGNN model config."""
+    try:
+        return _FAMILY_OF_TYPE[cfg.dgnn_type]
+    except KeyError:
+        raise ValueError(f"unknown dgnn_type {cfg.dgnn_type!r}") from None
+
+
+@dataclass(frozen=True)
+class StreamPlan:
+    """A validated, immutable execution plan for the DGNN-Booster stack.
+
+    Construct through :func:`plan`; every field is checked in
+    ``__post_init__`` so an invalid plan cannot exist. See docs/api.md for
+    the field -> engine behavior table.
+    """
+
+    family: str                       # stream-engine registry key
+    level: str = "v3"                 # dataflow level (ablation ladder)
+    tn: int = 128                     # node-tile rows (grid J axis)
+    td: Optional[int] = None          # state-feature block (grid D axis)
+    batch: int = 1                    # B independent streams per launch
+    lengths: Optional[tuple] = None   # per-stream ragged T (len == batch)
+    device: DeviceSpec = field(default_factory=DeviceSpec)
+    # serve policy (SnapshotServer consumes these)
+    n_pad: int = 640
+    e_pad: int = 4096
+    k_max: int = 64
+    buckets: Optional[tuple] = None   # ((n, e, k), ...) smallest-first
+    stream_chunk: int = 8             # snapshots per v3 chunk launch
+    queue_depth: int = 2              # host->device queue (ping-pong = 2)
+    promote_buckets: Optional[float] = None  # max promotion overhead ratio
+    promotion_guard: str = "static"   # "static" proxy | "measured" times
+
+    def __post_init__(self):
+        _validate(self)
+
+    # ------------------------------------------------------- helpers ----
+
+    def lengths_array(self):
+        """(B,) int32 lengths, or None when the plan is not ragged."""
+        if self.lengths is None:
+            return None
+        return jnp.asarray(self.lengths, jnp.int32)
+
+    def as_dict(self) -> dict:
+        """JSON-ready plan record (benchmarks embed it in BENCH_streams)."""
+        return dataclasses.asdict(self)
+
+
+def _validate(p: StreamPlan) -> None:
+    fams = _ops.stream_families()
+    if p.family not in fams:
+        raise ValueError(f"unknown stream-engine family {p.family!r}; "
+                         f"registered: {fams}")
+    if p.level not in FAMILY_LEVELS[p.family]:
+        raise ValueError(
+            f"dataflow level {p.level!r} is not defined for family "
+            f"{p.family!r}; supported: {FAMILY_LEVELS[p.family]}")
+    if not (isinstance(p.tn, int) and p.tn > 0 and p.tn % _TILE_ALIGN == 0):
+        raise ValueError(f"tn={p.tn!r}: node tile must be a positive "
+                         f"multiple of {_TILE_ALIGN}")
+    if p.td is not None and not (isinstance(p.td, int) and p.td > 0
+                                 and p.td % _TILE_ALIGN == 0):
+        raise ValueError(f"td={p.td!r}: state-feature block must be None "
+                         f"(fully resident) or a positive multiple of "
+                         f"{_TILE_ALIGN}")
+    if not (isinstance(p.batch, int) and p.batch >= 1):
+        raise ValueError(f"batch={p.batch!r}: need an int >= 1")
+    if p.lengths is not None:
+        if p.level != "v3":
+            raise ValueError("ragged lengths are a stream-engine (v3) "
+                             f"capability; level={p.level!r}")
+        if len(p.lengths) != p.batch:
+            raise ValueError(f"lengths has {len(p.lengths)} entries for "
+                             f"batch={p.batch}")
+        if not all(isinstance(t, (int, np.integer)) and t >= 0
+                   for t in p.lengths):
+            raise ValueError(f"lengths={p.lengths!r}: need ints >= 0")
+        if max(p.lengths) == 0:
+            raise ValueError("lengths are all zero: nothing to run")
+    if not isinstance(p.device, DeviceSpec) or p.device.n_devices < 1:
+        raise ValueError(f"device={p.device!r}: need a DeviceSpec with "
+                         "n_devices >= 1")
+    if p.device.n_devices > 1:
+        if p.level != "v3":
+            raise ValueError("DeviceSpec sharding shards the stream-engine "
+                             f"batch grid axis; level={p.level!r} has none")
+        if p.batch % p.device.n_devices:
+            raise ValueError(f"batch={p.batch} is not divisible by "
+                             f"n_devices={p.device.n_devices}")
+        if p.device.n_devices > jax.device_count():
+            raise ValueError(
+                f"DeviceSpec wants {p.device.n_devices} devices; this host "
+                f"has {jax.device_count()} (use XLA_FLAGS="
+                "--xla_force_host_platform_device_count=N on CPU)")
+    for name in ("n_pad", "e_pad", "k_max", "stream_chunk", "queue_depth"):
+        v = getattr(p, name)
+        if not (isinstance(v, int) and v >= 1):
+            raise ValueError(f"{name}={v!r}: need an int >= 1")
+    if p.buckets is not None:
+        bs = tuple(tuple(b) for b in p.buckets)
+        if not bs or any(len(b) != 3 or any(int(x) < 1 for x in b)
+                         for b in bs):
+            raise ValueError(f"buckets={p.buckets!r}: need non-empty "
+                             "(n_pad, e_pad, k_max) triples")
+        for a, b in zip(bs, bs[1:]):
+            if any(x > y for x, y in zip(a, b)):
+                raise ValueError(f"buckets must be a smallest-first chain; "
+                                 f"{a} !<= {b}")
+    if p.promote_buckets is not None:
+        if p.buckets is None:
+            raise ValueError("promote_buckets needs bucketed padding "
+                             "(buckets=None)")
+        if not p.promote_buckets > 0:
+            raise ValueError(f"promote_buckets={p.promote_buckets!r}: need "
+                             "a ratio > 0")
+    if p.promotion_guard not in ("static", "measured"):
+        raise ValueError(f"promotion_guard={p.promotion_guard!r}: "
+                         "'static' or 'measured'")
+    if p.promotion_guard == "measured" and p.promote_buckets is None:
+        raise ValueError("promotion_guard='measured' without "
+                         "promote_buckets: nothing to guard")
+
+
+def plan(cfg: Optional[DGNNConfig] = None, *, family: Optional[str] = None,
+         level: Optional[str] = None, tn: int = 128, td=_UNSET,
+         batch: int = 1, lengths=None, device: Optional[DeviceSpec] = None,
+         n_pad: int = 640, e_pad: int = 4096, k_max: int = 64,
+         buckets=None, stream_chunk: int = 8, queue_depth: int = 2,
+         promote_buckets=None, promotion_guard: str = "static") -> StreamPlan:
+    """Build a validated :class:`StreamPlan`.
+
+    From a ``DGNNConfig``, the family, preferred dataflow level and the
+    D-axis block size default from the config (``dgnn_type``,
+    ``cfg.dataflow``, ``cfg.stream_td``); from a bare ``family`` the level
+    defaults to "v3". Everything is checked at construction time — a plan
+    that would fail at launch does not exist.
+    """
+    if cfg is not None:
+        fam = family_for(cfg)
+        if family is not None and family != fam:
+            raise ValueError(f"family={family!r} contradicts cfg "
+                             f"{cfg.name!r} (family {fam!r})")
+        family = fam
+        level = level if level is not None else cfg.dataflow
+        td = cfg.stream_td if td is _UNSET else td
+    if family is None:
+        raise ValueError("plan() needs a DGNNConfig or a family name")
+    return StreamPlan(
+        family=family, level=level if level is not None else "v3", tn=tn,
+        td=None if td is _UNSET else td, batch=batch,
+        lengths=None if lengths is None else tuple(int(t) for t in lengths),
+        device=device if device is not None else DeviceSpec(),
+        n_pad=n_pad, e_pad=e_pad, k_max=k_max,
+        buckets=None if buckets is None else tuple(tuple(b) for b in buckets),
+        stream_chunk=stream_chunk, queue_depth=queue_depth,
+        promote_buckets=promote_buckets, promotion_guard=promotion_guard)
+
+
+def run_arrays(p: StreamPlan, *args, force_ref: bool = False):
+    """Kernel-level plan executor: pre-padded ELL stream arrays straight
+    through the stream engine (the family argument lists of
+    ``kernels/ops.stream_steps``). A plan with ``batch > 1`` OR ragged
+    ``lengths`` takes the batched entry — its args carry a leading
+    (B, ...) axis (B == plan.batch, possibly 1) — with the plan's lengths
+    and device sharding; benchmarks use this instead of naming the ops
+    entry points."""
+    if p.batch > 1 or p.lengths is not None:
+        return _ops.stream_steps_batched(
+            p.family, *args, tn=p.tn, td=p.td, lengths=p.lengths_array(),
+            device=p.device, force_ref=force_ref)
+    return _ops.stream_steps(p.family, *args, tn=p.tn, td=p.td,
+                             force_ref=force_ref)
+
+
+class BoosterSession:
+    """A model + params + recurrent state bound to one :class:`StreamPlan`.
+
+    The front-end of the stack: build once, then ``run`` padded snapshot
+    streams through the plan's dataflow, ``run_batched`` a ragged batch of
+    independent streams in one launch, or ``serve`` raw COO snapshot
+    iterators through the serving engine (which consumes this session).
+
+    ``run`` advances the session's own recurrent state (streaming
+    semantics); ``run_batched`` is stateless-by-default — pass ``states``
+    to continue previous chunks, or take the returned states forward.
+    """
+
+    def __init__(self, cfg: DGNNConfig, plan: Optional[StreamPlan] = None,
+                 *, n_global: int = 4096, feat_table=None, params=None,
+                 rng=None):
+        from repro.core.dataflow import build_model
+
+        self.cfg = cfg
+        self.plan = plan if plan is not None else _plan_builder(cfg)
+        fam = family_for(cfg)
+        if self.plan.family != fam:
+            raise ValueError(f"plan family {self.plan.family!r} does not "
+                             f"serve cfg {cfg.name!r} (family {fam!r})")
+        self.model = build_model(cfg, n_global=n_global)
+        self.n_global = n_global
+        self.feat_table = feat_table
+        self.params = params
+        self.state = None
+        if params is None and rng is not None:
+            self.init(rng)
+        elif params is not None:
+            self.reset_state()
+
+    # -------------------------------------------------------- state ----
+
+    def init(self, rng):
+        """(Re)initialize params and a fresh recurrent state; returns
+        ``(params, state)`` (the historical SnapshotServer.init pair)."""
+        self.params = self.model.init(rng)
+        self.reset_state()
+        return self.params, self.state
+
+    def reset_state(self):
+        self.state = self.model.init_state(self.params, mode=self.plan.level)
+        return self.state
+
+    def _need_params(self):
+        if self.params is None:
+            raise RuntimeError("session has no params: pass params= or "
+                               "rng=, or call session.init(rng)")
+
+    # ---------------------------------------------------- execution ----
+
+    def run(self, snaps_T):
+        """One padded (T, ...) snapshot stream through the plan's engine,
+        advancing the session state. Returns the (T, n_pad, out) outputs."""
+        from repro.core.dataflow import run_plan
+
+        self._need_params()
+        self.state, outs = run_plan(self.model, self.params, self.state,
+                                    snaps_T, self.plan)
+        return outs
+
+    def run_batched(self, streams: list, states=None):
+        """B independent padded streams — RAGGED T welcome — in ONE
+        batched launch.
+
+        ``streams`` is a list of per-stream (T_b, ...) snapshot pytrees.
+        Unequal lengths are stacked to the longest (tail slots repeat the
+        stream's last snapshot; their content is ignored — the launch
+        masks them out via the plan's ragged-lengths capability) and each
+        stream's outputs are sliced back to its true length. Returns
+        ``(final_states, [outs_b (T_b, n, out)])``; row b of the states
+        equals running stream b alone.
+        """
+        from repro.core.dataflow import init_states_batched, run_plan_batched
+
+        self._need_params()
+        B = len(streams)
+        lens = [int(jax.tree.leaves(s)[0].shape[0]) for s in streams]
+        if self.plan.lengths is not None:
+            if list(self.plan.lengths) != lens:
+                raise ValueError(f"plan.lengths={self.plan.lengths} does "
+                                 f"not match stream lengths {lens}")
+        p = self.plan
+        if p.batch != B:
+            p = dataclasses.replace(p, batch=B, lengths=None)
+        if len(set(lens)) > 1 and p.lengths is None:  # genuinely ragged
+            p = dataclasses.replace(p, lengths=tuple(lens))
+        t_max = max(lens)
+        padded = [jax.tree.map(
+            lambda a, t=t: np.concatenate(
+                [a, np.repeat(np.asarray(a)[-1:], t_max - t, axis=0)], axis=0)
+            if t < t_max else a, s) for s, t in zip(streams, lens)]
+        snaps_BT = jax.tree.map(lambda *xs: np.stack(xs, axis=0), *padded)
+        if states is None:
+            states = init_states_batched(self.model, self.params, B,
+                                         mode=p.level)
+        states, outs_BT = run_plan_batched(self.model, self.params, states,
+                                           snaps_BT, p)
+        outs_BT = np.asarray(outs_BT)
+        return states, [outs_BT[b, :lens[b]] for b in range(B)]
+
+    # ------------------------------------------------------ serving ----
+
+    def _server(self):
+        from repro.serve.engine import SnapshotServer
+
+        if self.feat_table is None:
+            raise RuntimeError("serving needs the global feat_table: pass "
+                               "feat_table= to BoosterSession")
+        return SnapshotServer(session=self)
+
+    def serve(self, snaps: Iterable):
+        """Serve a raw COO snapshot iterator through the engine (host
+        preprocessing overlapped with device launches), advancing the
+        session state. Returns ``(outputs, ServeStats)``."""
+        self._need_params()
+        if self.state is None:
+            self.reset_state()
+        self.state, outs, stats = self._server().run(self.params, self.state,
+                                                     snaps)
+        return outs, stats
+
+    def serve_multi(self, streams: dict, states: Optional[dict] = None):
+        """Serve many independent client streams concurrently (one
+        recurrent state per tenant; same-bucket chunks co-batched into one
+        launch). Returns ``(states, {sid: [outputs]}, ServeStats)``."""
+        self._need_params()
+        if states is None:
+            states = {sid: self.model.init_state(self.params,
+                                                 mode=self.plan.level)
+                      for sid in streams}
+        return self._server().run_multi(self.params, states, streams)
+
+
+_plan_builder = plan

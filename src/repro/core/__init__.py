@@ -3,6 +3,8 @@ from repro.core.dataflow import (
     build_model,
     init_states_batched,
     run_batched,
+    run_plan,
+    run_plan_batched,
     run_stream,
     stack_time,
 )
@@ -11,6 +13,7 @@ from repro.core.gcrn import GCRN
 from repro.core.stacked import StackedDGNN
 
 __all__ = [
-    "build_model", "run_stream", "run_batched", "init_states_batched",
-    "stack_time", "EvolveGCN", "GCRN", "StackedDGNN",
+    "build_model", "run_plan", "run_plan_batched", "run_stream",
+    "run_batched", "init_states_batched", "stack_time",
+    "EvolveGCN", "GCRN", "StackedDGNN",
 ]

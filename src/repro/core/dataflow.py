@@ -47,13 +47,18 @@ tests assert. The difference is the critical path / fusion structure, which
 shows up in the lowered HLO (benchmarks/fig6_ablation.py measures it).
 
 Snapshot streams are pytrees with a leading T axis (same padding bucket);
-multi-stream batching adds a B axis (``run_batched``): v3 runs the whole
-(B, T) batch in ONE batched stream-kernel launch, other modes vmap the
-per-stream scan.
+multi-stream batching adds a B axis (``run_plan_batched``): v3 runs the
+whole (B, T) batch in ONE batched stream-kernel launch — optionally
+RAGGED over T (per-stream lengths) and sharded over devices (DeviceSpec),
+both carried by the plan — while other levels vmap the per-stream scan.
+
+Dispatch is by typed StreamPlan (repro.api): ``run_plan`` /
+``run_plan_batched`` execute a validated plan; the historical mode-string
+entry points ``run_stream`` / ``run_batched`` survive as deprecated shims
+that build the equivalent plan.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any
 
 import jax
@@ -110,37 +115,86 @@ def _run_stacked_v1(model: StackedDGNN, params, state0, snaps_T):
     return state, outs
 
 
-def run_stream(model: Model, params, state0, snaps_T, mode: str = "baseline"):
-    """Run one dynamic-graph stream through the chosen dataflow engine.
+def run_plan(model: Model, params, state0, snaps_T, plan):
+    """Execute a typed StreamPlan (repro.api) on one (T, ...) stream.
 
-    Returns (final_state, outputs (T, n_pad, out_dim)).
+    The plan's ``level`` selects the dataflow engine and its ``tn``/``td``
+    the engine tiling; validity was established when the plan was built,
+    so there is no mode-string dispatch left to go wrong here. Returns
+    (final_state, outputs (T, n_pad, out_dim)).
     """
-    if mode == "v1" and isinstance(model, StackedDGNN):
+    if plan.lengths is not None:
+        raise ValueError("plan carries ragged lengths — a batched-launch "
+                         "capability; use run_plan_batched")
+    if plan.level == "v1" and isinstance(model, StackedDGNN):
         return _run_stacked_v1(model, params, state0, snaps_T)
-    if mode == "v3":
+    if plan.level == "v3":
         # every family has a time-fused stream engine: node-state-resident
         # for GCRN/stacked, weights-resident for EvolveGCN.
-        return model.step_stream(params, state0, snaps_T)
-    return _scan_steps(model, params, state0, snaps_T, mode)
+        return model.step_stream(params, state0, snaps_T, tn=plan.tn,
+                                 td=plan.td)
+    return _scan_steps(model, params, state0, snaps_T, plan.level)
+
+
+def run_plan_batched(model: Model, params, states0, snaps_BT, plan,
+                     lengths=None):
+    """Execute a StreamPlan on B independent streams: snaps arrays are
+    (B, T, ...), states (B, ...). Params are shared across streams;
+    recurrent state is not. This is the production throughput axis
+    (DESIGN §4).
+
+    level="v3" dispatches to the model's ``step_stream_batched`` — the
+    batch axis becomes a leading grid dimension of ONE time-fused kernel
+    launch (kernels/stream_fused.py), so every stream's recurrent state
+    still crosses HBM exactly twice — carrying the plan's two
+    batch-capabilities: ``lengths`` (ragged per-stream T, masked in-launch)
+    and ``device`` (DeviceSpec sharding of the B grid axis). Other levels
+    vmap the per-stream engine (equal T only)."""
+    B = jax.tree.leaves(states0)[0].shape[0]
+    if B != plan.batch:
+        raise ValueError(f"plan.batch={plan.batch} but the state batch "
+                         f"is {B}")
+    lengths = plan.lengths if lengths is None else lengths
+    if plan.level == "v3":
+        lens = None if lengths is None else jnp.asarray(lengths, jnp.int32)
+        return model.step_stream_batched(params, states0, snaps_BT,
+                                         tn=plan.tn, td=plan.td,
+                                         lengths=lens, device=plan.device)
+    if lengths is not None:
+        raise ValueError("ragged lengths need the stream engine "
+                         f"(level='v3'); level={plan.level!r}")
+    fn = lambda st, sT: run_plan(model, params, st, sT, plan)
+    return jax.vmap(fn)(states0, snaps_BT)
+
+
+# ------------------------------------------------- deprecated shims ----
+# The historical mode-string surface. New code builds a typed plan
+# (repro.api.plan / BoosterSession); these shims construct the equivalent
+# plan and execute it, so their outputs are bit-identical to the plan
+# path by construction.
+
+def _shim_plan(model: Model, mode: str, batch: int = 1):
+    from repro import api
+
+    return api.plan(family=model.stream_family, level=mode,
+                    td=model.cfg.stream_td, batch=batch)
+
+
+def run_stream(model: Model, params, state0, snaps_T, mode: str = "baseline"):
+    """Deprecated: build a repro.api.StreamPlan instead (this shim does,
+    then executes it). Returns (final_state, outputs (T, n_pad, out_dim))."""
+    return run_plan(model, params, state0, snaps_T, _shim_plan(model, mode))
 
 
 def run_batched(model: Model, params, states0, snaps_TB, mode: str = "baseline"):
-    """Batched independent streams: snaps arrays are (T, B, ...), states
-    (B, ...). Params are shared across streams; recurrent state is not.
-    This is the production throughput axis (DESIGN §4): streams shard over
-    (pod, data) and the feature dims over model.
-
-    mode="v3" dispatches to the model's ``step_stream_batched`` — the batch
-    axis becomes a leading grid dimension of ONE time-fused kernel launch
-    (kernels/stream_fused.py) instead of a vmap over per-step scans, so
-    every stream's recurrent state (node store or evolving weights) still
-    crosses HBM exactly twice. All three families batch this way."""
-    if mode == "v3":
-        snaps_BT = jax.tree.map(lambda a: jnp.swapaxes(a, 0, 1), snaps_TB)
-        state, outs_BT = model.step_stream_batched(params, states0, snaps_BT)
-        return state, jnp.swapaxes(outs_BT, 0, 1)
-    fn = partial(run_stream, model, params, mode=mode)
-    return jax.vmap(fn, in_axes=(0, 1), out_axes=(0, 1))(states0, snaps_TB)
+    """Deprecated: build a repro.api.StreamPlan instead (this shim does,
+    then executes it). Batched streams in the historical (T, B, ...)
+    layout; see ``run_plan_batched`` for the (B, T, ...) plan executor."""
+    B = jax.tree.leaves(states0)[0].shape[0]
+    snaps_BT = jax.tree.map(lambda a: jnp.swapaxes(a, 0, 1), snaps_TB)
+    state, outs_BT = run_plan_batched(model, params, states0, snaps_BT,
+                                      _shim_plan(model, mode, batch=B))
+    return state, jnp.swapaxes(outs_BT, 0, 1)
 
 
 def init_states_batched(model: Model, params, n_streams: int,

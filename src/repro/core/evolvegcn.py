@@ -130,40 +130,52 @@ class EvolveGCN:
         return aggs
 
     def _run_stream_kernel(self, params: dict, state: dict,
-                           snaps: PaddedSnapshot, batched: bool
+                           snaps: PaddedSnapshot, batched: bool,
+                           tn=128, td="cfg", lengths=None, device=None
                            ) -> tuple[dict, jax.Array]:
         """Shared plumbing for the (batched) stream-engine dispatch:
         live flags (n_nodes > 0 — no-op padding snapshots must not evolve
         the weights), per-layer param lists, edge aggregates."""
         from repro.kernels import ops as kops
 
-        fn = kops.stream_steps_batched if batched else kops.stream_steps
+        td = self.cfg.stream_td if td == "cfg" else td
         live = (snaps.n_nodes > 0).astype(jnp.int32)
-        outs, wT = fn(
-            self.stream_family,
-            snaps.neigh_idx, snaps.neigh_coef, snaps.node_feat,
-            snaps.node_mask, live, list(state["weights"]),
-            [p["b"] for p in params["gcn"]],
-            [g["wx"] for g in params["gru"]],
-            [g["wh"] for g in params["gru"]],
-            [g["b"] for g in params["gru"]],
-            self._edge_aggs(params, snaps), td=self.cfg.stream_td,
-        )
+        args = (snaps.neigh_idx, snaps.neigh_coef, snaps.node_feat,
+                snaps.node_mask, live, list(state["weights"]),
+                [p["b"] for p in params["gcn"]],
+                [g["wx"] for g in params["gru"]],
+                [g["wh"] for g in params["gru"]],
+                [g["b"] for g in params["gru"]],
+                self._edge_aggs(params, snaps))
+        if batched:
+            outs, wT = kops.stream_steps_batched(
+                self.stream_family, *args, tn=tn, td=td, lengths=lengths,
+                device=device)
+        else:
+            outs, wT = kops.stream_steps(self.stream_family, *args,
+                                         tn=tn, td=td)
         return {"weights": list(wT)}, outs
 
-    def step_stream(self, params: dict, state: dict, snaps_T: PaddedSnapshot
-                    ) -> tuple[dict, jax.Array]:
+    def step_stream(self, params: dict, state: dict, snaps_T: PaddedSnapshot,
+                    *, tn=128, td="cfg") -> tuple[dict, jax.Array]:
         """V3: run a whole (T, ...) snapshot stream through the
         weights-resident kernel; the evolving W_l stay in VMEM across
         steps and the matrix-GRU evolution runs in-kernel between
         snapshots."""
-        return self._run_stream_kernel(params, state, snaps_T, batched=False)
+        return self._run_stream_kernel(params, state, snaps_T, batched=False,
+                                       tn=tn, td=td)
 
     def step_stream_batched(self, params: dict, state: dict,
-                            snaps_BT: PaddedSnapshot) -> tuple[dict, jax.Array]:
+                            snaps_BT: PaddedSnapshot, *, tn=128, td="cfg",
+                            lengths=None, device=None
+                            ) -> tuple[dict, jax.Array]:
         """Batched V3: B independent streams — (B, T, ...) leaves, weight
         state leaves (B, din_l, dout_l) — through ONE launch of the
         batched weights-resident kernel (GRU params shared, one resident
         weight set per stream). Row b of the result is bit-close to
-        running stream b alone through ``step_stream``."""
-        return self._run_stream_kernel(params, state, snaps_BT, batched=True)
+        running stream b alone through ``step_stream``. ``lengths`` runs
+        the launch ragged over T; ``device`` (DeviceSpec) shards the
+        batch axis."""
+        return self._run_stream_kernel(params, state, snaps_BT, batched=True,
+                                       tn=tn, td=td, lengths=lengths,
+                                       device=device)

@@ -119,38 +119,55 @@ class GCRN:
         }
         return new_state, out * m
 
-    def _stream(self, params: dict, state: dict, snaps, batched: bool):
+    def _stream(self, params: dict, state: dict, snaps, batched: bool,
+                tn=128, td="cfg", lengths=None, device=None):
         """Shared plumbing for the (batched) stream-engine dispatch: the
         engine is selected by ``stream_family`` from the registry; the
-        D-axis block size comes from cfg.stream_td (None = fully
-        resident)."""
+        D-axis block size defaults to cfg.stream_td (None = fully
+        resident) unless a plan overrides it."""
         from repro.kernels import ops as kops
 
-        fn = kops.stream_steps_batched if batched else kops.stream_steps
+        td = self.cfg.stream_td if td == "cfg" else td
         w_edge = params.get("w_edge")
         edge_msg = snaps.edge_feat @ w_edge if w_edge is not None else None
-        outs_h, h_T, c_T = fn(
-            self.stream_family,
-            snaps.neigh_idx, snaps.neigh_coef, snaps.neigh_eidx,
-            snaps.node_feat, snaps.renumber, snaps.node_mask,
-            state["h"], state["c"],
-            params["lstm"]["wx"], params["lstm"]["wh"], params["lstm"]["b"],
-            edge_msg, td=self.cfg.stream_td,
-        )
+        args = (snaps.neigh_idx, snaps.neigh_coef, snaps.neigh_eidx,
+                snaps.node_feat, snaps.renumber, snaps.node_mask,
+                state["h"], state["c"],
+                params["lstm"]["wx"], params["lstm"]["wh"],
+                params["lstm"]["b"], edge_msg)
+        if batched:
+            outs_h, h_T, c_T = kops.stream_steps_batched(
+                self.stream_family, *args, tn=tn, td=td, lengths=lengths,
+                device=device)
+        else:
+            outs_h, h_T, c_T = kops.stream_steps(self.stream_family, *args,
+                                                 tn=tn, td=td)
         out = outs_h @ params["head"]["w"] + params["head"]["b"]
-        return {"h": h_T, "c": c_T}, out * snaps.node_mask[..., None]
+        mask = snaps.node_mask
+        if lengths is not None:
+            # ragged T: the masking happens inside the launch; mirror it on
+            # the host-side output mask so dead-tail rows read as zero.
+            live = (jnp.arange(mask.shape[1])[None, :]
+                    < jnp.asarray(lengths)[:, None])
+            mask = mask * live[:, :, None]
+        return {"h": h_T, "c": c_T}, out * mask[..., None]
 
-    def step_stream(self, params: dict, state: dict, snaps_T: PaddedSnapshot
-                    ) -> tuple[dict, jax.Array]:
+    def step_stream(self, params: dict, state: dict, snaps_T: PaddedSnapshot,
+                    *, tn=128, td="cfg") -> tuple[dict, jax.Array]:
         """V3: run a whole (T, ...) snapshot stream through the stream
         engine; h/c stay in VMEM across steps (gather/scatter included)."""
-        return self._stream(params, state, snaps_T, batched=False)
+        return self._stream(params, state, snaps_T, batched=False, tn=tn,
+                            td=td)
 
     def step_stream_batched(self, params: dict, state: dict,
-                            snaps_BT: PaddedSnapshot) -> tuple[dict, jax.Array]:
+                            snaps_BT: PaddedSnapshot, *, tn=128, td="cfg",
+                            lengths=None, device=None
+                            ) -> tuple[dict, jax.Array]:
         """Batched V3: B independent snapshot streams — (B, T, ...) leaves,
         state leaves (B, n_global, H) — through ONE launch of the batched
         stream engine (weights shared, one VMEM-resident store per
         stream). Row b of the result is bit-close to running stream b alone
-        through ``step_stream``."""
-        return self._stream(params, state, snaps_BT, batched=True)
+        through ``step_stream``. ``lengths`` runs the launch ragged over T;
+        ``device`` (DeviceSpec) shards the batch axis."""
+        return self._stream(params, state, snaps_BT, batched=True, tn=tn,
+                            td=td, lengths=lengths, device=device)

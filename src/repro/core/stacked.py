@@ -100,7 +100,8 @@ class StackedDGNN:
         new_state, h_new = self.rnn(params, state, snap, x, fused=fused)
         return new_state, h_new
 
-    def _stream(self, params: dict, state: dict, snaps, batched: bool):
+    def _stream(self, params: dict, state: dict, snaps, batched: bool,
+                tn=128, td="cfg", lengths=None, device=None):
         """Shared plumbing for the (batched) stream-engine dispatch.
 
         GCN layers before the last have no temporal dependence, so they
@@ -110,7 +111,7 @@ class StackedDGNN:
         VMEM."""
         from repro.kernels import ops as kops
 
-        fn = kops.stream_steps_batched if batched else kops.stream_steps
+        td = self.cfg.stream_td if td == "cfg" else td
         gcn_vmap = jax.vmap if not batched else (
             lambda f: jax.vmap(jax.vmap(f)))
         x = snaps.node_feat
@@ -123,24 +124,33 @@ class StackedDGNN:
         edge_msg = (snaps.edge_feat @ w_edge
                     if (w_edge is not None and len(params["gcn"]) == 1)
                     else None)
-        outs_h, h_T = fn(
-            self.stream_family,
-            snaps.neigh_idx, snaps.neigh_coef, snaps.neigh_eidx,
-            x, snaps.renumber, snaps.node_mask, state["h"],
-            p_last["w"], p_last["b"],
-            params["gru"]["wx"], params["gru"]["wh"], params["gru"]["b"],
-            edge_msg, td=self.cfg.stream_td,
-        )
+        args = (snaps.neigh_idx, snaps.neigh_coef, snaps.neigh_eidx,
+                x, snaps.renumber, snaps.node_mask, state["h"],
+                p_last["w"], p_last["b"],
+                params["gru"]["wx"], params["gru"]["wh"], params["gru"]["b"],
+                edge_msg)
+        if batched:
+            outs_h, h_T = kops.stream_steps_batched(
+                self.stream_family, *args, tn=tn, td=td, lengths=lengths,
+                device=device)
+        else:
+            outs_h, h_T = kops.stream_steps(self.stream_family, *args,
+                                            tn=tn, td=td)
         return {"h": h_T}, outs_h
 
-    def step_stream(self, params: dict, state: dict, snaps_T: PaddedSnapshot
-                    ) -> tuple[dict, jax.Array]:
+    def step_stream(self, params: dict, state: dict, snaps_T: PaddedSnapshot,
+                    *, tn=128, td="cfg") -> tuple[dict, jax.Array]:
         """V3: whole (T, ...) stream through the stream engine."""
-        return self._stream(params, state, snaps_T, batched=False)
+        return self._stream(params, state, snaps_T, batched=False, tn=tn,
+                            td=td)
 
     def step_stream_batched(self, params: dict, state: dict,
-                            snaps_BT: PaddedSnapshot) -> tuple[dict, jax.Array]:
+                            snaps_BT: PaddedSnapshot, *, tn=128, td="cfg",
+                            lengths=None, device=None
+                            ) -> tuple[dict, jax.Array]:
         """Batched V3: B independent streams — (B, T, ...) leaves, state
         leaves (B, n_global, H) — through one launch of the batched stream
-        engine."""
-        return self._stream(params, state, snaps_BT, batched=True)
+        engine. ``lengths`` runs the launch ragged over T; ``device``
+        (DeviceSpec) shards the batch axis."""
+        return self._stream(params, state, snaps_BT, batched=True, tn=tn,
+                            td=td, lengths=lengths, device=device)

@@ -7,8 +7,11 @@ from repro.graph.padding import (
     choose_bucket,
     choose_bucket_batch,
     empty_like_padded,
+    empty_padded,
     pad_snapshot,
+    pow2_target,
     promote_bucket_groups,
+    round_up,
     stack_streams,
     unpad_snapshot,
 )
@@ -19,6 +22,7 @@ __all__ = [
     "LocalSnapshot", "renumber_and_normalize", "to_ell", "max_in_degree",
     "PaddedSnapshot", "pad_snapshot", "stack_streams", "choose_bucket",
     "choose_bucket_batch", "unpad_snapshot", "empty_like_padded",
-    "bucket_cost", "promote_bucket_groups",
+    "empty_padded", "bucket_cost", "promote_bucket_groups",
+    "pow2_target", "round_up",
     "DEFAULT_BUCKETS", "generate_temporal_graph",
 ]

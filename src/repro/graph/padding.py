@@ -16,6 +16,25 @@ import numpy as np
 from repro.graph.csr import LocalSnapshot, to_ell
 
 
+def round_up(n: int, m: int) -> int:
+    """Round ``n`` up to the next multiple of ``m`` (tile-alignment rule
+    shared by the kernel row padding and the bucket machinery — the single
+    copy; kernels/stream_fused.py and kernels/ops.py import it)."""
+    return ((n + m - 1) // m) * m
+
+
+def pow2_target(real: int, cap: int | None = None) -> int:
+    """Next power of two >= ``real`` (>= 1), optionally capped.
+
+    The padded sizes a jit cache is allowed to hold — log2 many per bucket.
+    Shared by the serve chunk/batch padding and the plan front-end (one
+    copy; serve/engine.py previously reimplemented it)."""
+    target = 1
+    while target < real:
+        target *= 2
+    return min(target, cap) if cap is not None else target
+
+
 @jax.tree_util.register_dataclass
 @dataclass
 class PaddedSnapshot:
@@ -87,17 +106,16 @@ def pad_snapshot(
     )
 
 
-def empty_like_padded(ps: PaddedSnapshot) -> PaddedSnapshot:
-    """An all-padding snapshot in the same bucket as ``ps``.
+def empty_padded(n_pad: int, e_pad: int, k_max: int, din: int,
+                 de: int) -> PaddedSnapshot:
+    """An all-padding snapshot of the given bucket and feature dims.
 
     Running it through any dataflow engine is a no-op on the recurrent
     state (masks 0, renumber -1 so every scatter drops) and produces
     all-zero outputs — used to pad the tail of a stream chunk so the
-    time-fused V3 kernel always sees a static T.
+    time-fused V3 kernel always sees a static T, and by the serve
+    engine's bucket-calibration warmup.
     """
-    n_pad, e_pad, k_max = ps.n_pad, ps.e_pad, ps.k_max
-    de = ps.edge_feat.shape[1]
-    din = ps.node_feat.shape[1]
     return PaddedSnapshot(
         src=np.full(e_pad, n_pad - 1, np.int32),
         dst=np.full(e_pad, n_pad - 1, np.int32),
@@ -112,6 +130,12 @@ def empty_like_padded(ps: PaddedSnapshot) -> PaddedSnapshot:
         n_nodes=np.int32(0),
         n_edges=np.int32(0),
     )
+
+
+def empty_like_padded(ps: PaddedSnapshot) -> PaddedSnapshot:
+    """An all-padding snapshot in the same bucket as ``ps``."""
+    return empty_padded(ps.n_pad, ps.e_pad, ps.k_max, ps.node_feat.shape[1],
+                        ps.edge_feat.shape[1])
 
 
 def stack_streams(snaps: list[PaddedSnapshot]) -> PaddedSnapshot:
@@ -177,7 +201,7 @@ def bucket_cost(bucket: tuple[int, int, int]) -> int:
 
 
 def promote_bucket_groups(groups: dict, buckets: tuple,
-                          max_overhead: float) -> dict:
+                          max_overhead: float, cost=bucket_cost) -> dict:
     """Cross-bucket batching via bucket promotion (multi-tenant grouper).
 
     ``groups`` maps bucket -> list of same-bucket stream chunks queued for
@@ -193,6 +217,10 @@ def promote_bucket_groups(groups: dict, buckets: tuple,
     layout with the bucket re-tagged to the promotion target. Promotion is
     transitive up the chain (a promoted group can merge again) as long as
     every hop honours the guard against the member's ORIGINAL bucket.
+
+    ``cost`` maps a bucket to its per-snapshot cost: the static padded-
+    compute proxy ``bucket_cost`` by default, or measured per-bucket step
+    times from the serve engine's warmup calibration (the adaptive guard).
     """
     order = {b: i for i, b in enumerate(buckets)}
     merged: dict = {b: list(members) for b, members in groups.items()}
@@ -204,7 +232,7 @@ def promote_bucket_groups(groups: dict, buckets: tuple,
             continue
         target = min(bigger, key=order.get)
         # guard against each member's own bucket (promotion may chain)
-        if any(bucket_cost(target) > max_overhead * bucket_cost(own)
+        if any(cost(target) > max_overhead * cost(own)
                for _, _, own in merged[b]):
             continue
         merged[target] = merged[target] + merged[b]

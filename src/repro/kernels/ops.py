@@ -279,17 +279,24 @@ def _evolve_launch(batched, neigh_idx, neigh_coef, node_feat, node_mask,
 
 
 # ------------------------------------------------- unified stream entry ----
-# family name -> ((solo oracle, batched oracle), engine launcher). The
-# oracle column is the XLA production path; the launcher column pads,
-# packs, and dispatches through stream_fused.REGISTRY.
+# family name -> ((solo oracle, batched oracle), engine launcher,
+# batched-arg index set, ragged-axis index map). The oracle column is the
+# XLA production path; the launcher column pads, packs, and dispatches
+# through stream_fused.REGISTRY. The batched-arg set lists the positional
+# args whose leaves carry a leading B axis (DeviceSpec shards exactly
+# those); the ragged map names the (coef, mask, renumber, live) arg
+# positions the per-stream ``lengths`` masking rewrites.
 
 _STREAM_DISPATCH = {
     "gcrn": ((_ref.gcrn_stream_ref, _ref.gcrn_stream_batched_ref),
-             _gcrn_launch),
+             _gcrn_launch, frozenset(range(8)) | {11},
+             dict(coef=1, mask=5, ren=4, live=None)),
     "stacked": ((_ref.stacked_stream_ref, _ref.stacked_stream_batched_ref),
-                _stacked_launch),
+                _stacked_launch, frozenset(range(7)) | {12},
+                dict(coef=1, mask=5, ren=4, live=None)),
     "evolve": ((_ref.evolve_stream_ref, _ref.evolve_stream_batched_ref),
-               _evolve_launch),
+               _evolve_launch, frozenset(range(6)) | {10},
+               dict(coef=1, mask=3, ren=None, live=4)),
 }
 
 
@@ -298,17 +305,73 @@ def stream_families() -> tuple:
     return tuple(sorted(_STREAM_DISPATCH))
 
 
+def _apply_lengths(family: str, args: tuple, lengths) -> tuple:
+    """Turn the T tail of each stream in a (B, T, ...) batch into no-op
+    snapshots: steps t >= lengths[b] get coef 0 / mask 0 / renumber -1
+    (and live 0 for weights-evolved families), which is exactly the
+    empty-snapshot no-op contract the engine already honours — so the tail
+    CONTENT is irrelevant and callers can pad ragged streams with anything
+    shape-compatible instead of manufacturing empty snapshots."""
+    axes = _STREAM_DISPATCH[family][3]
+    lengths = jnp.asarray(lengths, jnp.int32)
+    coef = args[axes["coef"]]
+    t_axis = jnp.arange(coef.shape[1], dtype=jnp.int32)
+    live = t_axis[None, :] < lengths[:, None]          # (B, T)
+    out = list(args)
+    out[axes["coef"]] = jnp.asarray(coef) * live[:, :, None, None]
+    mi = axes["mask"]
+    out[mi] = jnp.asarray(args[mi]) * live[:, :, None]
+    if axes["ren"] is not None:
+        ri = axes["ren"]
+        out[ri] = jnp.where(live[:, :, None], jnp.asarray(args[ri]), -1)
+    if axes["live"] is not None:
+        li = axes["live"]
+        out[li] = jnp.asarray(args[li]) * live.astype(jnp.int32)
+    return tuple(out)
+
+
+def _shard_batch(family: str, run, args, device):
+    """Wrap a batched stream launch in shard_map over the DeviceSpec mesh:
+    the leading B grid axis splits across devices (streams are
+    independent — no collectives), shared params replicate. Covers the
+    Pallas engine AND the force-ref oracle path identically."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import make_stream_mesh
+
+    B = args[0].shape[0]
+    if B % device.n_devices:
+        raise ValueError(
+            f"stream batch B={B} not divisible by DeviceSpec.n_devices="
+            f"{device.n_devices}")
+    batch_args = _STREAM_DISPATCH[family][2]
+    in_specs = tuple(P(device.axis) if i in batch_args else P()
+                     for i in range(len(args)))
+    return shard_map(run, mesh=make_stream_mesh(device), in_specs=in_specs,
+                     out_specs=P(device.axis), check_rep=False)
+
+
 def _stream_dispatch(family: str, batched: bool, args, kwargs, *, tn, td,
-                     force_ref):
+                     force_ref, lengths=None, device=None):
     if family not in _STREAM_DISPATCH:
         raise KeyError(f"unknown stream-engine family {family!r}; "
                        f"registered: {stream_families()}")
-    oracles, launch = _STREAM_DISPATCH[family]
+    oracles, launch = _STREAM_DISPATCH[family][:2]
+    if batched and lengths is not None:
+        args = _apply_lengths(family, args, lengths)
     if force_ref or _FORCE_REF:
         # single force-ref gate for EVERY family and batching mode: the
         # engine launcher (and thus pallas_call) is unreachable from here.
-        return oracles[1 if batched else 0](*args, **kwargs)
-    return launch(batched, *args, **kwargs, tn=tn, td=td)
+        run = lambda *a: oracles[1 if batched else 0](*a, **kwargs)
+    else:
+        run = lambda *a: launch(batched, *a, **kwargs, tn=tn, td=td)
+    if batched and device is not None and device.n_devices > 1:
+        if kwargs:
+            raise ValueError("keyword stream args are unsupported under "
+                             "DeviceSpec sharding; pass them positionally")
+        run = _shard_batch(family, run, args, device)
+    return run(*args)
 
 
 def stream_steps(family: str, *args, tn: int = 128, td=None,
@@ -334,10 +397,20 @@ def stream_steps(family: str, *args, tn: int = 128, td=None,
 
 
 def stream_steps_batched(family: str, *args, tn: int = 128, td=None,
+                         lengths=None, device=None,
                          force_ref: bool = False, **kwargs):
     """B independent time-fused streams in ONE engine launch (the batch is
     a leading grid dimension; weights shared, one resident state per
     stream). Same family argument lists as ``stream_steps`` with a leading
-    (B, ...) axis on stream arrays and per-stream state."""
+    (B, ...) axis on stream arrays and per-stream state.
+
+    ``lengths`` ((B,) ints) makes the launch RAGGED over T: stream b's
+    steps past ``lengths[b]`` execute as no-ops (coef/mask zeroed,
+    renumber -1, live 0 — inside the traced program, so the tail content
+    of the stacked arrays is irrelevant and a length-0 row is a pure
+    padding stream). ``device`` (launch/mesh.DeviceSpec) shards the
+    leading B axis across devices via shard_map; streams are independent,
+    so the sharded launch is bit-identical to the unsharded one."""
     return _stream_dispatch(family, True, args, kwargs, tn=tn, td=td,
-                            force_ref=force_ref)
+                            force_ref=force_ref, lengths=lengths,
+                            device=device)

@@ -71,6 +71,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 # per-tile ELL aggregation over a step-resident feature table (local ids):
 # shared with the per-step V2 kernels, same math by construction.
+from repro.graph.padding import round_up as _round_up
 from repro.kernels.dgnn_fused import _agg as _agg_local
 from repro.kernels.dgnn_fused import _agg_edge as _agg_local_edge
 
@@ -85,10 +86,6 @@ def _agg_store(gidx, coef, store):
     tn, k = gidx.shape
     g = jnp.take(store, gidx.reshape(-1), axis=0).reshape(tn, k, store.shape[1])
     return (g * coef[..., None]).sum(axis=1)
-
-
-def _round_up(n: int, m: int) -> int:
-    return ((n + m - 1) // m) * m
 
 
 def _pad_dim(a, n2: int, axis: int, fill=0):

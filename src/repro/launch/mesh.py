@@ -10,9 +10,40 @@ device state (smoke tests see 1 CPU device; only dryrun.py forces 512).
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
+
 import jax
 import numpy as np
 from jax.sharding import Mesh
+
+
+@dataclass(frozen=True)
+class DeviceSpec:
+    """Device sharding of a batched stream launch.
+
+    ``n_devices`` shards the LEADING B grid axis of the stream engine
+    (kernels/ops.stream_steps_batched) via shard_map over a 1-D data mesh:
+    each device runs an independent slice of the stream batch (streams
+    never communicate — their recurrent states are per-stream), so the
+    sharded launch is bit-identical to the unsharded one. The default
+    (n_devices=1) is the plain single-device launch with no mesh at all.
+    ``axis`` is the mesh axis name (the 'data' axis of the production
+    meshes above).
+    """
+
+    n_devices: int = 1
+    axis: str = "data"
+
+
+def make_stream_mesh(spec: DeviceSpec) -> Mesh:
+    """1-D mesh for sharding a stream batch per ``DeviceSpec``."""
+    devs = jax.devices()
+    if len(devs) < spec.n_devices:
+        raise RuntimeError(
+            f"DeviceSpec wants {spec.n_devices} devices, have {len(devs)} — "
+            "use XLA_FLAGS=--xla_force_host_platform_device_count=N on CPU")
+    return jax.make_mesh((spec.n_devices,), (spec.axis,),
+                         devices=devs[:spec.n_devices])
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:

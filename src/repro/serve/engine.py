@@ -15,7 +15,7 @@ worst-case shape — small snapshots stop paying big-snapshot compute. The
 jit cache holds one compiled step per bucket.
 
 V3 fast path: when the engine runs the time-fused stream dataflow
-(mode="v3" and the model exposes ``step_stream``), consecutive same-bucket
+(plan level "v3" — the stream-engine families), consecutive same-bucket
 snapshots are batched into fixed-T chunks (tail padded with no-op empty
 snapshots) and the WHOLE chunk is handed to the stream kernel in one
 launch, so the recurrent state crosses HBM once per chunk, not per
@@ -43,9 +43,21 @@ round's smaller-bucket chunks may be PROMOTED into the next-larger
 occupied bucket — re-padded to the bigger shape so they join that
 bucket's in-flight batched launch — trading padding overhead (guarded by
 a max padded-compute ratio, graph/padding.promote_bucket_groups) for one
-fewer device dispatch per round. ServeStats reports live vs padded
-snapshot slots and launch counts per run so the overhead stays visible
-instead of hiding in throughput.
+fewer device dispatch per round. The guard compares per-bucket costs:
+the static ``bucket_cost`` padded-compute proxy by default, or — with
+``promotion_guard="measured"`` in the plan — per-bucket step times from a
+tiny warmup calibration (one timed launch per bucket, static proxy kept
+as the fallback). ServeStats reports live vs padded snapshot slots and
+launch counts per run so the overhead stays visible instead of hiding in
+throughput.
+
+Configuration is a typed ``repro.api.StreamPlan`` — the server is a
+consumer of a ``BoosterSession`` (``SnapshotServer(session=...)``, or the
+historical keyword surface, which builds the equivalent plan/session).
+Chunk tails and batch-padding rows are expressed through the plan's
+ragged-``lengths`` capability: every batched launch carries the true
+per-stream lengths and the engine masks the dead slots in-launch, so the
+host never manufactures empty tail snapshots.
 """
 from __future__ import annotations
 
@@ -60,15 +72,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.dgnn import DGNNConfig
-from repro.core.dataflow import build_model, stack_time
+from repro.core.dataflow import stack_time
 from repro.graph.coo import COOSnapshot
 from repro.graph.csr import max_in_degree, renumber_and_normalize
 from repro.graph.padding import (
     PaddedSnapshot,
+    bucket_cost,
     choose_bucket,
     choose_bucket_batch,
-    empty_like_padded,
+    empty_padded,
     pad_snapshot,
+    pow2_target,
     promote_bucket_groups,
     stack_streams,
 )
@@ -94,39 +108,84 @@ class ServeStats:
 
 
 class SnapshotServer:
-    """Streaming DGNN inference over a snapshot iterator."""
+    """Streaming DGNN inference over a snapshot iterator.
 
-    def __init__(self, cfg: DGNNConfig, feat_table: np.ndarray,
-                 n_global: int, mode: Optional[str] = None,
+    A consumer of ``repro.api.BoosterSession``: all policy — dataflow
+    level, tiling, buckets, chunking, promotion — comes from the
+    session's typed ``StreamPlan``. The historical keyword surface
+    (cfg + mode + padding kwargs) is kept as a deprecated shim that
+    builds the equivalent plan/session.
+    """
+
+    def __init__(self, cfg: Optional[DGNNConfig] = None,
+                 feat_table: Optional[np.ndarray] = None,
+                 n_global: Optional[int] = None,
+                 mode: Optional[str] = None,
                  n_pad: int = 640, e_pad: int = 4096, k_max: int = 64,
                  queue_depth: int = 2,
                  buckets: Optional[tuple] = None,
                  stream_chunk: int = 8,
-                 promote_buckets: Optional[float] = None):
-        self.cfg = cfg
-        self.mode = mode or cfg.dataflow
-        self.model = build_model(cfg, n_global=n_global)
-        self.feat_table = feat_table
-        self.n_pad, self.e_pad, self.k_max = n_pad, e_pad, k_max
-        self.buckets = buckets  # ((n_pad, e_pad, k_max), ...) smallest-first
-        self.stream_chunk = stream_chunk
-        self.queue_depth = queue_depth  # 2 == ping-pong buffers
-        # cross-bucket batching: max padded-compute overhead ratio a chunk
-        # may pay to get promoted into a larger occupied bucket and join
-        # that bucket's batched launch (None = promotion off). See
-        # graph/padding.promote_bucket_groups.
-        self.promote_buckets = promote_buckets
+                 promote_buckets: Optional[float] = None,
+                 promotion_guard: str = "static", *,
+                 plan=None, session=None):
+        from repro import api
+
+        if session is None:
+            if cfg is None:
+                raise ValueError("SnapshotServer needs a BoosterSession "
+                                 "(session=) or a DGNNConfig")
+            if n_global is None:
+                raise ValueError("SnapshotServer needs n_global (the "
+                                 "global node-store size) on the config "
+                                 "surface — an undersized default would "
+                                 "silently scatter-drop high node ids")
+            if plan is None:
+                # deprecated keyword surface -> the equivalent typed plan
+                plan = api.plan(
+                    cfg, level=mode if mode is not None else cfg.dataflow,
+                    n_pad=n_pad, e_pad=e_pad, k_max=k_max,
+                    queue_depth=queue_depth, buckets=buckets,
+                    stream_chunk=stream_chunk,
+                    promote_buckets=promote_buckets,
+                    promotion_guard=promotion_guard)
+            session = api.BoosterSession(cfg, plan, n_global=n_global,
+                                         feat_table=feat_table)
+        self.session = session
+        self.plan = session.plan
+        if self.plan.device.n_devices > 1:
+            # the serve loops pick their own launch batch sizes (B=1
+            # chunks, pow2 tenant rounds), which need not divide
+            # n_devices — reject up front instead of crashing mid-serve.
+            raise ValueError(
+                "DeviceSpec sharding is a batched-launch capability "
+                "(BoosterSession.run_batched / api.run_arrays); the "
+                "serving engine does not shard its launches")
+        self.cfg = session.cfg
+        self.model = session.model
+        self.feat_table = (feat_table if feat_table is not None
+                           else session.feat_table)
+        if self.feat_table is None:
+            raise ValueError("SnapshotServer needs the global feat_table")
+        # plan-derived knobs (kept as attributes for callers/tests)
+        self.mode = self.plan.level
+        self.n_pad, self.e_pad = self.plan.n_pad, self.plan.e_pad
+        self.k_max = self.plan.k_max
+        self.buckets = self.plan.buckets
+        self.stream_chunk = self.plan.stream_chunk
+        self.queue_depth = self.plan.queue_depth
+        self.promote_buckets = self.plan.promote_buckets
+        self._bucket_ms: Optional[dict] = None  # measured-guard calibration
         self._step = jax.jit(
             lambda p, s, snap: self.model.step(p, s, snap, mode=self.mode))
-        self._stream_step = jax.jit(
-            lambda p, s, sT: self.model.step_stream(p, s, sT))
+        # every v3 serve launch takes the batched ragged-T entry: chunk
+        # tails and batch-padding rows are dead ``lengths`` slots masked
+        # in-launch, not host-built empty snapshots.
         self._stream_step_batched = jax.jit(
-            lambda p, s, sBT: self.model.step_stream_batched(p, s, sBT))
+            lambda p, s, sBT, lens: self.model.step_stream_batched(
+                p, s, sBT, tn=self.plan.tn, td=self.plan.td, lengths=lens))
 
     def init(self, rng):
-        params = self.model.init(rng)
-        state = self.model.init_state(params, mode=self.mode)
-        return params, state
+        return self.session.init(rng)
 
     # ------------------------------------------------------ host thread ----
 
@@ -156,44 +215,50 @@ class SnapshotServer:
             return False
         if self.model.stream_family not in REGISTRY:
             raise KeyError(
-                f"mode='v3' but family {self.model.stream_family!r} has no "
-                f"stream-engine cell spec; registered: {sorted(REGISTRY)}")
+                f"plan level 'v3' but family {self.model.stream_family!r} "
+                f"has no stream-engine cell spec; registered: "
+                f"{sorted(REGISTRY)}")
         return True
 
-    def _pow2_target(self, real: int, cap: Optional[int] = None) -> int:
-        """Next power of two >= ``real`` (optionally capped): the padded
-        sizes the jit cache is allowed to hold — log2 many per bucket."""
-        target = 1
-        while target < real:
-            target *= 2
-        return min(target, cap) if cap is not None else target
+    def _launch_ragged(self, params, states_B, per_stream: list,
+                       lengths: np.ndarray):
+        """ONE batched ragged-T stream launch: ``per_stream`` are (T, ...)
+        stacked chunks of equal padded shape, ``lengths`` their true live
+        lengths (0 = pure batch-padding row). The dead slots are masked
+        in-launch by the plan's ragged capability."""
+        batch_BT = stack_streams(per_stream)
+        return self._stream_step_batched(params, states_B, batch_BT,
+                                         jnp.asarray(lengths, jnp.int32))
 
     def _run_chunk(self, params, state, chunk: list, outs: list, lat: list,
                    ctr: dict):
-        """Feed one same-bucket chunk to the time-fused stream kernel.
+        """Feed one same-bucket chunk to the time-fused stream kernel
+        (a B=1 ragged launch).
 
         Short flushes (tail of the stream, or a bucket change on a
         bucket-alternating stream) pad T up to the next power of two, not
-        all the way to ``stream_chunk`` — at most 2× no-op steps while the
+        all the way to ``stream_chunk`` — at most 2× dead slots while the
         jit cache stays bounded at log2(stream_chunk)+1 chunk lengths per
-        bucket.
+        bucket. The tail repeats the last snapshot; its content is
+        ignored (masked by ``lengths``).
         """
         real = len(chunk)
-        target = self._pow2_target(real, cap=self.stream_chunk)
-        while len(chunk) < target:  # no-op tail padding
-            chunk.append(empty_like_padded(chunk[0]))
+        target = pow2_target(real, cap=self.stream_chunk)
+        chunk = chunk + [chunk[-1]] * (target - real)
         ctr["live"] += real
         ctr["padded"] += target - real
         ctr["launches"] += 1
+        state_B = jax.tree.map(lambda a: a[None], state)
         t0 = time.perf_counter()
-        state, out_T = self._stream_step(params, state, stack_time(chunk))
-        jax.block_until_ready(out_T)
+        state_B, out_BT = self._launch_ragged(
+            params, state_B, [stack_time(chunk)], np.asarray([real]))
+        jax.block_until_ready(out_BT)
         dt = (time.perf_counter() - t0) * 1e3 / real
-        out_np = np.asarray(out_T)
+        out_np = np.asarray(out_BT)
         for t in range(real):
-            outs.append(out_np[t])
+            outs.append(out_np[0, t])
             lat.append(dt)
-        return state
+        return jax.tree.map(lambda a: a[0], state_B)
 
     def run(self, params, state, snaps: Iterable[COOSnapshot]) -> tuple:
         """Returns (final_state, outputs list, ServeStats)."""
@@ -274,25 +339,66 @@ class SnapshotServer:
             return choose_bucket_batch(dims, self.buckets)
         return (self.n_pad, self.e_pad, self.k_max)
 
+    # ------------------------------------------- promotion cost guard ----
+
+    def _calibrate_bucket_times(self, params) -> Optional[dict]:
+        """Measure per-bucket stream-kernel step time with a tiny warmup:
+        one empty-snapshot B=1 chunk per bucket, compiled then timed.
+        The measured times replace the static ``bucket_cost`` proxy in the
+        promotion guard (plan.promotion_guard == "measured"); returns None
+        (static fallback) if any bucket fails to calibrate."""
+        din = self.feat_table.shape[1]
+        de = self.cfg.edge_dim
+        T = pow2_target(self.stream_chunk, cap=self.stream_chunk)
+        times: dict = {}
+        try:
+            for bucket in self.buckets:
+                chunk = [empty_padded(*bucket, din, de)] * T
+                state = self.model.init_state(params, mode=self.mode)
+                state_B = jax.tree.map(lambda a: a[None], state)
+                run = lambda: self._launch_ragged(
+                    params, state_B, [stack_time(chunk)], np.asarray([T]))
+                jax.block_until_ready(run())  # compile + warm
+                t0 = time.perf_counter()
+                jax.block_until_ready(run())
+                times[bucket] = max((time.perf_counter() - t0) * 1e3 / T,
+                                    1e-6)
+        except Exception:
+            return None  # static proxy fallback
+        return times
+
+    def _promotion_cost(self, params):
+        """Cost function for promote_bucket_groups: measured per-bucket
+        step times when the plan asks for the adaptive guard (calibrated
+        lazily, once), else the static padded-compute proxy."""
+        if self.plan.promotion_guard != "measured":
+            return bucket_cost
+        if self._bucket_ms is None:
+            self._bucket_ms = self._calibrate_bucket_times(params)
+        if self._bucket_ms is None:
+            return bucket_cost  # calibration failed: static fallback
+        return lambda b: self._bucket_ms[b]
+
     def _run_group_batched(self, params, states: dict, group: list,
                            outs: dict, lat: list, ctr: dict):
         """One batched V3 launch over same-bucket chunks of several streams.
 
         ``group`` is [(sid, [LocalSnapshot, ...], bucket), ...]. Each
-        stream's chunk is padded to the shared bucket, its T tail padded
-        with no-op snapshots to the common power-of-two length, stacked to
-        a (B, T, ...) batch with the per-stream states stacked alongside.
-        The BATCH axis is pow2-padded with no-op streams too (zero states,
-        all-padding snapshots, results discarded), so the jit cache stays
-        bounded at log2 sizes per (bucket, T) instead of compiling one
-        program per distinct client count as tenants join and finish.
-        Row b of the launch result is that stream's output in stream order.
+        stream's chunk is padded to the shared bucket and stacked to a
+        (B, T, ...) batch with the per-stream states alongside; T is the
+        common power-of-two target and the BATCH axis is pow2-padded too,
+        so the jit cache stays bounded at log2 sizes per (bucket, T)
+        instead of compiling one program per distinct client count as
+        tenants join and finish. Raggedness is carried by ``lengths``
+        (stream b live for lengths[b] steps, padding rows live for 0) and
+        masked in-launch — no host-built empty snapshots. Row b of the
+        launch result is that stream's output in stream order.
         """
         bucket = group[0][2]
         real_lens = [len(chunk) for _, chunk, _ in group]
-        target = self._pow2_target(max(real_lens), cap=self.stream_chunk)
+        target = pow2_target(max(real_lens), cap=self.stream_chunk)
         b_real = len(group)
-        b_target = self._pow2_target(b_real)
+        b_target = pow2_target(b_real)
         per_stream = []
         for _, chunk, _ in group:
             # fixed-bucket items arrive pre-padded from the producer thread
@@ -301,24 +407,24 @@ class SnapshotServer:
             padded = [ls if isinstance(ls, PaddedSnapshot)
                       else pad_snapshot(ls, self.feat_table, *bucket)
                       for ls in chunk]
-            while len(padded) < target:   # no-op tail padding
-                padded.append(empty_like_padded(padded[0]))
+            # ragged T: tail slots repeat the last snapshot — dead
+            # ``lengths`` slots, masked in-launch, content irrelevant
+            padded = padded + [padded[-1]] * (target - len(padded))
             per_stream.append(stack_time(padded))
-        noop_stream = stack_time([empty_like_padded(
-            jax.tree.map(lambda a: a[0], per_stream[0]))] * target)
-        per_stream.extend([noop_stream] * (b_target - b_real))
+        # batch-axis padding = length-0 streams (results discarded)
+        per_stream.extend([per_stream[0]] * (b_target - b_real))
+        lengths = np.asarray(real_lens + [0] * (b_target - b_real), np.int32)
         ctr["live"] += sum(real_lens)
         ctr["padded"] += b_target * target - sum(real_lens)
         ctr["launches"] += 1
-        batch_BT = stack_streams(per_stream)
         zero_state = jax.tree.map(jnp.zeros_like, states[group[0][0]])
         states_B = jax.tree.map(
             lambda *xs: jnp.stack(xs, axis=0),
             *([states[sid] for sid, _, _ in group]
               + [zero_state] * (b_target - b_real)))
         t0 = time.perf_counter()
-        states_B, out_BT = self._stream_step_batched(params, states_B,
-                                                     batch_BT)
+        states_B, out_BT = self._launch_ragged(params, states_B, per_stream,
+                                               lengths)
         jax.block_until_ready(out_BT)
         dt = (time.perf_counter() - t0) * 1e3 / sum(real_lens)
         out_np = np.asarray(out_BT)
@@ -432,11 +538,15 @@ class SnapshotServer:
                 if self.promote_buckets is not None and self.buckets is not None:
                     # cross-bucket batching: promote smaller-bucket chunks
                     # into the next-larger in-flight bucket (guarded by the
-                    # padded-compute overhead ratio) so they join its
-                    # launch instead of paying their own dispatch.
+                    # per-bucket cost ratio — measured step times under the
+                    # plan's adaptive guard, else the static padded-compute
+                    # proxy) so they join its launch instead of paying
+                    # their own dispatch.
                     before = {b: len(m) for b, m in groups.items()}
                     groups = promote_bucket_groups(groups, self.buckets,
-                                                   self.promote_buckets)
+                                                   self.promote_buckets,
+                                                   cost=self._promotion_cost(
+                                                       params))
                     ctr["promoted"] += sum(
                         len(m) - before.get(b, 0) for b, m in groups.items())
                 for bucket in sorted(groups):

@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.configs.dgnn import DGNN_CONFIGS, DGNNConfig
 from repro.core import (
     build_model,
@@ -39,14 +40,13 @@ from repro.graph import (
     unpad_snapshot,
 )
 
-# Which engines apply per DGNN family. Every family's v3 is a real
-# time-fused stream kernel now: node-state-resident for GCRN/stacked,
-# weights-resident (in-kernel matrix-GRU evolution) for EvolveGCN.
-MODES = {
-    "evolvegcn": ["baseline", "o1", "v1", "v3"],
-    "gcrn-m2": ["baseline", "o1", "v2", "v3"],
-    "stacked-gcn-gru": ["baseline", "o1", "v1", "v2", "v3"],
-}
+# Which engines apply per DGNN family — the plan API's validity table is
+# the single source of truth (api.plan rejects anything outside it).
+# Every family's v3 is a real time-fused stream kernel:
+# node-state-resident for GCRN/stacked, weights-resident (in-kernel
+# matrix-GRU evolution) for EvolveGCN.
+MODES = {name: list(api.FAMILY_LEVELS[api.family_for(cfg)])
+         for name, cfg in DGNN_CONFIGS.items()}
 
 
 def small_config(name: str, stream_td: int | None = None) -> DGNNConfig:

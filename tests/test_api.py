@@ -1,0 +1,288 @@
+"""Plan/execute API contract (repro.api).
+
+Four guarantees pinned here:
+
+  1. plan() VALIDATES at construction time: bad families, levels a family
+     does not support, misaligned tn/td tiles, inconsistent
+     batch/lengths/device combinations all raise from plan() itself —
+     nothing survives to launch time;
+  2. the typed surface is the same function as the deprecated shims:
+     for every family and every dataflow level, BoosterSession.run /
+     run_plan produce outputs BIT-IDENTICAL to run_stream(mode=...), and
+     run_plan_batched to run_batched(mode=...);
+  3. ragged T is exact: a batched v3 launch over unequal ``lengths``
+     equals each stream's solo run sliced to its true length — outputs
+     AND final recurrent states (no leakage from the dead tail slots);
+  4. DeviceSpec sharding is exact: the shard_map'd batched launch over
+     fake CPU devices is bit-identical to the unsharded launch
+     (subprocess, like tests/test_multidevice.py).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+import harness
+from repro import api
+from repro.configs.dgnn import DGNN_CONFIGS
+from repro.core import run_plan, run_stream
+from repro.graph import pow2_target, round_up
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ------------------------------------------------- plan validation ----
+
+def test_plan_defaults_from_config():
+    for name, cfg in DGNN_CONFIGS.items():
+        p = api.plan(cfg)
+        assert p.family == api.family_for(cfg)
+        assert p.level == cfg.dataflow
+        assert p.td == cfg.stream_td
+
+
+@pytest.mark.parametrize("kwargs,match", [
+    (dict(family="gat"), "unknown stream-engine family"),
+    (dict(family="gcrn", level="v1"), "not defined for family"),
+    (dict(family="evolve", level="v2"), "not defined for family"),
+    (dict(family="gcrn", level="warp"), "not defined for family"),
+    (dict(family="gcrn", tn=0), "node tile"),
+    (dict(family="gcrn", tn=12), "node tile"),
+    (dict(family="gcrn", td=12), "state-feature block"),
+    (dict(family="gcrn", td=-8), "state-feature block"),
+    (dict(family="gcrn", batch=0), "batch"),
+    (dict(family="gcrn", batch=2, lengths=(3,)), "lengths has 1 entries"),
+    (dict(family="gcrn", batch=2, lengths=(0, 0)), "all zero"),
+    (dict(family="stacked", level="v2", batch=2, lengths=(3, 2)),
+     "stream-engine .v3. capability"),
+    (dict(family="gcrn", batch=4, device=api.DeviceSpec(3)),
+     "not divisible"),
+    (dict(family="stacked", level="v2", batch=2,
+          device=api.DeviceSpec(2)), "batch grid axis"),
+    (dict(family="gcrn", stream_chunk=0), "stream_chunk"),
+    (dict(family="gcrn", buckets=((64, 256, 8), (32, 512, 16))),
+     "smallest-first"),
+    (dict(family="gcrn", promote_buckets=1.5), "bucketed padding"),
+    (dict(family="gcrn", buckets=((64, 256, 8),), promote_buckets=1.5,
+          promotion_guard="psychic"), "promotion_guard"),
+    (dict(family="gcrn", buckets=((64, 256, 8),),
+          promotion_guard="measured"), "without"),
+])
+def test_plan_invalid_raises_at_construction(kwargs, match):
+    with pytest.raises(ValueError, match=match):
+        api.plan(**kwargs)
+
+
+def test_plan_device_over_host_capacity_raises():
+    n = jax.device_count() + 1
+    with pytest.raises(ValueError, match="devices"):
+        api.plan(family="gcrn", batch=2 * n, device=api.DeviceSpec(n))
+
+
+def test_plan_is_frozen_and_serializable():
+    p = api.plan(family="gcrn", level="v3", batch=2, lengths=(3, 2))
+    with pytest.raises(Exception):
+        p.level = "v2"
+    d = p.as_dict()
+    assert d["family"] == "gcrn" and d["lengths"] == (3, 2)
+    assert d["device"] == {"n_devices": 1, "axis": "data"}
+
+
+def test_padding_target_helpers_single_copy():
+    """The pow2/round-up rounding lives in graph/padding.py only: serve
+    and the kernel wrappers import it (the dedup satellite)."""
+    assert [pow2_target(x) for x in (1, 2, 3, 5, 8)] == [1, 2, 4, 8, 8]
+    assert pow2_target(9, cap=8) == 8
+    assert round_up(1, 32) == 32 and round_up(64, 32) == 64
+    from repro.kernels import ops, stream_fused
+    from repro.graph import padding
+
+    assert stream_fused._round_up is padding.round_up
+    assert ops._pad_rows(9, 8) == 16
+
+
+# ----------------------------------- session == deprecated shims ----
+
+@pytest.mark.parametrize("name", sorted(DGNN_CONFIGS))
+def test_session_levels_match_mode_shims(name):
+    """Every dataflow level of every family through BoosterSession is
+    bit-identical to the deprecated run_stream(mode=...) shim."""
+    case = harness.make_case(name, seed=7, T=3, B=1)
+    sT = case.stacked[0]
+    for level in harness.MODES[name]:
+        st = case.model.init_state(case.params, mode=level)
+        want_state, want = run_stream(case.model, case.params, st, sT,
+                                      mode=level)
+        session = api.BoosterSession(
+            case.cfg, api.plan(case.cfg, level=level),
+            n_global=case.n_global, params=case.params)
+        got = session.run(sT)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want),
+                                      err_msg=f"{name} level={level}")
+        jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b)), session.state, want_state)
+
+
+def test_session_run_advances_state():
+    """run() is streaming: two chunks through one session == one long
+    stream through the shim."""
+    case = harness.make_case("gcrn-m2", seed=9, T=4, B=1)
+    sT = case.stacked[0]
+    first = jax.tree.map(lambda a: a[:2], sT)
+    rest = jax.tree.map(lambda a: a[2:], sT)
+    session = api.BoosterSession(case.cfg, api.plan(case.cfg, level="v3"),
+                                 n_global=case.n_global, params=case.params)
+    o1, o2 = session.run(first), session.run(rest)
+    st = case.model.init_state(case.params, mode="v3")
+    _, want = run_stream(case.model, case.params, st, sT, mode="v3")
+    np.testing.assert_allclose(
+        np.concatenate([np.asarray(o1), np.asarray(o2)]), np.asarray(want),
+        atol=1e-5)
+
+
+# ------------------------------------------------------- ragged T ----
+
+@pytest.mark.parametrize("name", sorted(DGNN_CONFIGS))
+def test_ragged_batched_launch_matches_solo_runs(name):
+    """One batched v3 launch over UNEQUAL lengths == per-stream solo runs
+    sliced to each stream's true length, including final states."""
+    case = harness.make_case(name, seed=5, T=5, B=3)
+    lens = [5, 3, 2]
+    ragged = [jax.tree.map(lambda a, t=t: a[:t], s)
+              for s, t in zip(case.stacked, lens)]
+    session = api.BoosterSession(case.cfg, api.plan(case.cfg, level="v3"),
+                                 n_global=case.n_global, params=case.params)
+    states, outs = session.run_batched(ragged)
+    p = api.plan(case.cfg, level="v3")
+    for b, (stream, t) in enumerate(zip(ragged, lens)):
+        st = case.model.init_state(case.params, mode="v3")
+        want_state, want = run_plan(case.model, case.params, st, stream, p)
+        assert outs[b].shape[0] == t
+        np.testing.assert_allclose(outs[b], np.asarray(want), atol=3e-4,
+                                   err_msg=f"{name} ragged row {b}")
+        jax.tree.map(lambda a, w, b=b: np.testing.assert_allclose(
+            np.asarray(a)[b], np.asarray(w), atol=3e-4,
+            err_msg=f"{name} ragged state row {b}"), states, want_state)
+
+
+def test_ragged_plan_rejected_by_solo_executors():
+    """lengths is a batched-launch capability: the solo executor rejects a
+    ragged plan loudly instead of silently running the dead tail, and
+    run_arrays honors lengths even at batch=1 (via the batched entry)."""
+    from repro.kernels import ops
+
+    case = harness.make_case("gcrn-m2", seed=3, T=3, B=1)
+    p = api.plan(case.cfg, level="v3", batch=1, lengths=(2,))
+    with pytest.raises(ValueError, match="batched"):
+        run_plan(case.model, case.params,
+                 case.model.init_state(case.params, mode="v3"),
+                 case.stacked[0], p)
+    args, _, _ = harness.stream_kernel_case("gcrn", seed=3, B=1)
+    pk = api.plan(family="gcrn", level="v3", tn=32, batch=1, lengths=(2,))
+    got = api.run_arrays(pk, *args)
+    want = ops.stream_steps_batched("gcrn", *args, tn=32,
+                                    lengths=np.asarray([2]))
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+
+
+def test_serve_rejects_sharded_plan_and_requires_n_global():
+    """The serving engine picks its own launch batch sizes, so a
+    DeviceSpec-sharded plan fails at construction (not mid-serve); the
+    deprecated config surface still requires n_global."""
+    from repro.serve import SnapshotServer
+
+    cfg = DGNN_CONFIGS["gcrn-m2"]
+    ft = np.zeros((8, cfg.in_dim), np.float32)
+    with pytest.raises(ValueError, match="n_global"):
+        SnapshotServer(cfg, ft)
+    if jax.device_count() >= 2:  # sharded plan only constructible then
+        p = api.plan(cfg, level="v3", batch=2, device=api.DeviceSpec(2))
+        with pytest.raises(ValueError, match="does not shard"):
+            SnapshotServer(session=api.BoosterSession(
+                cfg, p, n_global=8, feat_table=ft))
+
+
+def test_plan_tn_reaches_the_engine(monkeypatch):
+    """plan.tn is threaded through run_plan -> model -> ops (it used to be
+    validated but silently dropped in favour of the default 128)."""
+    from repro.kernels import ops
+
+    seen = {}
+    orig = ops.stream_steps
+
+    def probe(family, *a, tn=128, **k):
+        seen["tn"] = tn
+        return orig(family, *a, tn=tn, **k)
+
+    monkeypatch.setattr(ops, "stream_steps", probe)
+    case = harness.make_case("gcrn-m2", seed=3, T=3, B=1)
+    p = api.plan(case.cfg, level="v3", tn=32)
+    run_plan(case.model, case.params,
+             case.model.init_state(case.params, mode="v3"),
+             case.stacked[0], p)
+    assert seen["tn"] == 32
+
+
+def test_ragged_kernel_zero_length_row_is_noop():
+    """A length-0 row (the serve batch-padding case) leaves its state
+    untouched and its outputs all-zero."""
+    from repro.kernels import ops
+
+    args, oracle, _ = harness.stream_kernel_case("gcrn", seed=13, B=2)
+    lens = np.asarray([args[0].shape[1], 0], np.int32)
+    outs, hT, cT = ops.stream_steps_batched("gcrn", *args, tn=32,
+                                            lengths=lens)
+    assert np.asarray(outs)[1].max() == 0
+    np.testing.assert_array_equal(np.asarray(hT)[1], np.asarray(args[6][1]))
+    np.testing.assert_array_equal(np.asarray(cT)[1], np.asarray(args[7][1]))
+
+
+# ------------------------------------------------ device sharding ----
+
+def _run_subprocess(code: str) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(REPO, "src"), os.path.join(REPO, "tests")])
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, env=env, timeout=600)
+    assert r.returncode == 0, r.stdout + "\n" + r.stderr
+    return r.stdout
+
+
+@pytest.mark.slow
+def test_device_spec_sharded_launch_identical():
+    """DeviceSpec(n_devices>1) on fake CPU devices: the shard_map'd
+    batched launch (Pallas interpret AND force-ref oracle) is
+    bit-identical to the unsharded launch, for every family; a plan
+    carrying the DeviceSpec validates and executes."""
+    out = _run_subprocess("""
+        import numpy as np
+        import harness
+        from repro import api
+        from repro.kernels import ops
+        dev = api.DeviceSpec(n_devices=2)
+        for family in sorted(ops.stream_families()):
+            args, oracle, _ = harness.stream_kernel_case(family, seed=3, B=4)
+            base = ops.stream_steps_batched(family, *args, tn=32)
+            p = api.plan(family=family, level="v3", batch=4, tn=32,
+                         device=dev)
+            shard = api.run_arrays(p, *args)
+            for g, w in zip(shard, base):
+                gs = g if isinstance(g, (tuple, list)) else (g,)
+                ws = w if isinstance(w, (tuple, list)) else (w,)
+                for gg, ww in zip(gs, ws):
+                    np.testing.assert_array_equal(np.asarray(gg),
+                                                  np.asarray(ww))
+            ref = api.run_arrays(p, *args, force_ref=True)
+            np.testing.assert_allclose(np.asarray(ref[0]),
+                                       np.asarray(oracle(*args)[0]),
+                                       atol=1e-5)
+            print('OK', family)
+    """)
+    assert out.count("OK") == 3

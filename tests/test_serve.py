@@ -311,6 +311,70 @@ def test_run_multi_bucket_promotion_joins_inflight_batch():
                                            atol=1e-5, err_msg=f"{sid} t={t}")
 
 
+def test_run_multi_adaptive_promotion_guard_measured():
+    """promotion_guard="measured": the server calibrates per-bucket step
+    times with a tiny warmup (one timed empty-chunk launch per bucket) and
+    guards promotion with the MEASURED ratio instead of the static
+    n_pad*(k_max+1) proxy. Outputs stay offline-identical and a generous
+    ratio still merges the two buckets into one launch."""
+    from repro import api
+    from repro.graph import bucket_cost, promote_bucket_groups
+
+    tg, ft = generate_temporal_graph(UCI)
+    buckets = ((256, 1024, 48), (640, 4096, 64))
+    by_bucket = _split_snaps_by_bucket(slice_snapshots(tg, 1.0), buckets)
+    small, big = (by_bucket[b] for b in buckets)
+    streams = {"s": small[:4], "b": big[:4]}
+    plan = api.plan(DGNN_CONFIGS["gcrn-m2"], level="v3", stream_chunk=4,
+                    buckets=buckets, promote_buckets=1e6,
+                    promotion_guard="measured")
+    srv = SnapshotServer(n_global=tg.n_global_nodes, feat_table=ft,
+                         session=api.BoosterSession(
+                             DGNN_CONFIGS["gcrn-m2"], plan,
+                             n_global=tg.n_global_nodes, feat_table=ft))
+    params, _ = srv.init(jax.random.PRNGKey(0))
+    states = {sid: srv.model.init_state(params, mode="v3")
+              for sid in streams}
+    states, outs, stats = srv.run_multi(params, states, streams)
+    # calibration happened: one measured positive step time per bucket
+    assert srv._bucket_ms is not None
+    assert set(srv._bucket_ms) == set(buckets)
+    assert all(t > 0 for t in srv._bucket_ms.values())
+    # generous measured guard merged the buckets into one launch
+    assert stats.launches == 1 and stats.promoted_chunks == 1
+    # outputs stay offline-identical on real-node rows
+    model = build_model(DGNN_CONFIGS["gcrn-m2"], n_global=tg.n_global_nodes)
+    for sid, snaps in streams.items():
+        pads = [pad_snapshot(renumber_and_normalize(s), ft, 640, 4096, 64)
+                for s in snaps]
+        st = model.init_state(params, mode="baseline")
+        _, off = run_stream(model, params, st, stack_time(pads),
+                            mode="baseline")
+        for t, s in enumerate(snaps):
+            nr = renumber_and_normalize(s).n_nodes
+            np.testing.assert_allclose(outs[sid][t][:nr],
+                                       np.asarray(off)[t][:nr], atol=1e-5,
+                                       err_msg=f"{sid} t={t}")
+    # the measured costs actually drive the guard: a ratio below the
+    # measured big/small quotient blocks promotion that the static proxy
+    # (or a bigger ratio) would allow
+    ms = srv._bucket_ms
+    ratio = ms[buckets[1]] / ms[buckets[0]]
+    groups = {buckets[0]: [("s", ["x"], buckets[0])],
+              buckets[1]: [("b", ["y"], buckets[1])]}
+    merged = promote_bucket_groups(groups, buckets, ratio * 0.5,
+                                   cost=lambda b: ms[b])
+    assert set(merged) == set(buckets)  # measured guard blocks
+    merged = promote_bucket_groups(groups, buckets, ratio * 2.0,
+                                   cost=lambda b: ms[b])
+    assert set(merged) == {buckets[1]}  # measured guard allows
+    # static proxy remains the default cost
+    merged = promote_bucket_groups(groups, buckets,
+                                   bucket_cost(buckets[1])
+                                   / bucket_cost(buckets[0]))
+    assert set(merged) == {buckets[1]}
+
+
 def test_run_multi_producer_exception_propagates():
     """A no-fit snapshot in ONE tenant's stream must raise out of
     run_multi (not hang the round loop) and leave the producer threads
