@@ -107,6 +107,13 @@ class StreamPlan:
     queue_depth: int = 2              # host->device queue (ping-pong = 2)
     promote_buckets: Optional[float] = None  # max promotion overhead ratio
     promotion_guard: str = "static"   # "static" proxy | "measured" times
+    # fault isolation / recovery (docs/serve_robustness.md)
+    supervision: str = "strict"       # "strict" raise | "isolate" per tenant
+    max_retries: int = 0              # chunk-launch retries (rolled-back)
+    retry_backoff_ms: float = 10.0    # exponential backoff base
+    launch_timeout_ms: Optional[float] = None  # per-launch deadline
+    degrade: bool = False             # solo/oracle degradation ladder
+    fault_plan: Optional[object] = None  # serve.faults.FaultPlan (chaos)
 
     def __post_init__(self):
         _validate(self)
@@ -197,6 +204,26 @@ def _validate(p: StreamPlan) -> None:
     if p.promotion_guard == "measured" and p.promote_buckets is None:
         raise ValueError("promotion_guard='measured' without "
                          "promote_buckets: nothing to guard")
+    if p.supervision not in ("strict", "isolate"):
+        raise ValueError(f"supervision={p.supervision!r}: 'strict' or "
+                         "'isolate'")
+    if not (isinstance(p.max_retries, int) and p.max_retries >= 0):
+        raise ValueError(f"max_retries={p.max_retries!r}: need an int >= 0")
+    if not (isinstance(p.retry_backoff_ms, (int, float))
+            and p.retry_backoff_ms >= 0):
+        raise ValueError(f"retry_backoff_ms={p.retry_backoff_ms!r}: "
+                         "need >= 0")
+    if p.launch_timeout_ms is not None and not p.launch_timeout_ms > 0:
+        raise ValueError(f"launch_timeout_ms={p.launch_timeout_ms!r}: "
+                         "need > 0 (None = no deadline)")
+    if not isinstance(p.degrade, bool):
+        raise ValueError(f"degrade={p.degrade!r}: need a bool")
+    if p.fault_plan is not None:
+        from repro.serve.faults import FaultPlan
+
+        if not isinstance(p.fault_plan, FaultPlan):
+            raise ValueError(f"fault_plan={p.fault_plan!r}: need a "
+                             "serve.faults.FaultPlan")
 
 
 def plan(cfg: Optional[DGNNConfig] = None, *, family: Optional[str] = None,
@@ -204,7 +231,10 @@ def plan(cfg: Optional[DGNNConfig] = None, *, family: Optional[str] = None,
          batch: int = 1, lengths=None, device: Optional[DeviceSpec] = None,
          n_pad: int = 640, e_pad: int = 4096, k_max: int = 64,
          buckets=None, stream_chunk: int = 8, queue_depth: int = 2,
-         promote_buckets=None, promotion_guard: str = "static") -> StreamPlan:
+         promote_buckets=None, promotion_guard: str = "static",
+         supervision: str = "strict", max_retries: int = 0,
+         retry_backoff_ms: float = 10.0, launch_timeout_ms=None,
+         degrade: bool = False, fault_plan=None) -> StreamPlan:
     """Build a validated :class:`StreamPlan`.
 
     From a ``DGNNConfig``, the family, preferred dataflow level and the
@@ -231,7 +261,11 @@ def plan(cfg: Optional[DGNNConfig] = None, *, family: Optional[str] = None,
         n_pad=n_pad, e_pad=e_pad, k_max=k_max,
         buckets=None if buckets is None else tuple(tuple(b) for b in buckets),
         stream_chunk=stream_chunk, queue_depth=queue_depth,
-        promote_buckets=promote_buckets, promotion_guard=promotion_guard)
+        promote_buckets=promote_buckets, promotion_guard=promotion_guard,
+        supervision=supervision, max_retries=max_retries,
+        retry_backoff_ms=retry_backoff_ms,
+        launch_timeout_ms=launch_timeout_ms, degrade=degrade,
+        fault_plan=fault_plan)
 
 
 def run_arrays(p: StreamPlan, *args, force_ref: bool = False):

@@ -131,8 +131,8 @@ class EvolveGCN:
 
     def _run_stream_kernel(self, params: dict, state: dict,
                            snaps: PaddedSnapshot, batched: bool,
-                           tn=128, td="cfg", lengths=None, device=None
-                           ) -> tuple[dict, jax.Array]:
+                           tn=128, td="cfg", lengths=None, device=None,
+                           force_ref=False) -> tuple[dict, jax.Array]:
         """Shared plumbing for the (batched) stream-engine dispatch:
         live flags (n_nodes > 0 — no-op padding snapshots must not evolve
         the weights), per-layer param lists, edge aggregates."""
@@ -150,10 +150,10 @@ class EvolveGCN:
         if batched:
             outs, wT = kops.stream_steps_batched(
                 self.stream_family, *args, tn=tn, td=td, lengths=lengths,
-                device=device)
+                device=device, force_ref=force_ref)
         else:
             outs, wT = kops.stream_steps(self.stream_family, *args,
-                                         tn=tn, td=td)
+                                         tn=tn, td=td, force_ref=force_ref)
         return {"weights": list(wT)}, outs
 
     def step_stream(self, params: dict, state: dict, snaps_T: PaddedSnapshot,
@@ -167,7 +167,7 @@ class EvolveGCN:
 
     def step_stream_batched(self, params: dict, state: dict,
                             snaps_BT: PaddedSnapshot, *, tn=128, td="cfg",
-                            lengths=None, device=None
+                            lengths=None, device=None, force_ref=False
                             ) -> tuple[dict, jax.Array]:
         """Batched V3: B independent streams — (B, T, ...) leaves, weight
         state leaves (B, din_l, dout_l) — through ONE launch of the
@@ -175,7 +175,8 @@ class EvolveGCN:
         weight set per stream). Row b of the result is bit-close to
         running stream b alone through ``step_stream``. ``lengths`` runs
         the launch ragged over T; ``device`` (DeviceSpec) shards the
-        batch axis."""
+        batch axis; ``force_ref`` takes the XLA oracle path (the serve
+        engine's degraded-mode rung)."""
         return self._run_stream_kernel(params, state, snaps_BT, batched=True,
                                        tn=tn, td=td, lengths=lengths,
-                                       device=device)
+                                       device=device, force_ref=force_ref)

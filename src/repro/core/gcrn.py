@@ -120,7 +120,8 @@ class GCRN:
         return new_state, out * m
 
     def _stream(self, params: dict, state: dict, snaps, batched: bool,
-                tn=128, td="cfg", lengths=None, device=None):
+                tn=128, td="cfg", lengths=None, device=None,
+                force_ref=False):
         """Shared plumbing for the (batched) stream-engine dispatch: the
         engine is selected by ``stream_family`` from the registry; the
         D-axis block size defaults to cfg.stream_td (None = fully
@@ -138,10 +139,11 @@ class GCRN:
         if batched:
             outs_h, h_T, c_T = kops.stream_steps_batched(
                 self.stream_family, *args, tn=tn, td=td, lengths=lengths,
-                device=device)
+                device=device, force_ref=force_ref)
         else:
             outs_h, h_T, c_T = kops.stream_steps(self.stream_family, *args,
-                                                 tn=tn, td=td)
+                                                 tn=tn, td=td,
+                                                 force_ref=force_ref)
         out = outs_h @ params["head"]["w"] + params["head"]["b"]
         mask = snaps.node_mask
         if lengths is not None:
@@ -161,13 +163,15 @@ class GCRN:
 
     def step_stream_batched(self, params: dict, state: dict,
                             snaps_BT: PaddedSnapshot, *, tn=128, td="cfg",
-                            lengths=None, device=None
+                            lengths=None, device=None, force_ref=False
                             ) -> tuple[dict, jax.Array]:
         """Batched V3: B independent snapshot streams — (B, T, ...) leaves,
         state leaves (B, n_global, H) — through ONE launch of the batched
         stream engine (weights shared, one VMEM-resident store per
         stream). Row b of the result is bit-close to running stream b alone
         through ``step_stream``. ``lengths`` runs the launch ragged over T;
-        ``device`` (DeviceSpec) shards the batch axis."""
+        ``device`` (DeviceSpec) shards the batch axis; ``force_ref`` takes
+        the XLA oracle path (the serve engine's degraded-mode rung)."""
         return self._stream(params, state, snaps_BT, batched=True, tn=tn,
-                            td=td, lengths=lengths, device=device)
+                            td=td, lengths=lengths, device=device,
+                            force_ref=force_ref)

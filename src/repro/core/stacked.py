@@ -101,7 +101,8 @@ class StackedDGNN:
         return new_state, h_new
 
     def _stream(self, params: dict, state: dict, snaps, batched: bool,
-                tn=128, td="cfg", lengths=None, device=None):
+                tn=128, td="cfg", lengths=None, device=None,
+                force_ref=False):
         """Shared plumbing for the (batched) stream-engine dispatch.
 
         GCN layers before the last have no temporal dependence, so they
@@ -132,10 +133,11 @@ class StackedDGNN:
         if batched:
             outs_h, h_T = kops.stream_steps_batched(
                 self.stream_family, *args, tn=tn, td=td, lengths=lengths,
-                device=device)
+                device=device, force_ref=force_ref)
         else:
             outs_h, h_T = kops.stream_steps(self.stream_family, *args,
-                                            tn=tn, td=td)
+                                            tn=tn, td=td,
+                                            force_ref=force_ref)
         return {"h": h_T}, outs_h
 
     def step_stream(self, params: dict, state: dict, snaps_T: PaddedSnapshot,
@@ -146,11 +148,13 @@ class StackedDGNN:
 
     def step_stream_batched(self, params: dict, state: dict,
                             snaps_BT: PaddedSnapshot, *, tn=128, td="cfg",
-                            lengths=None, device=None
+                            lengths=None, device=None, force_ref=False
                             ) -> tuple[dict, jax.Array]:
         """Batched V3: B independent streams — (B, T, ...) leaves, state
         leaves (B, n_global, H) — through one launch of the batched stream
         engine. ``lengths`` runs the launch ragged over T; ``device``
-        (DeviceSpec) shards the batch axis."""
+        (DeviceSpec) shards the batch axis; ``force_ref`` takes the XLA
+        oracle path (the serve engine's degraded-mode rung)."""
         return self._stream(params, state, snaps_BT, batched=True, tn=tn,
-                            td=td, lengths=lengths, device=device)
+                            td=td, lengths=lengths, device=device,
+                            force_ref=force_ref)

@@ -41,6 +41,57 @@ def set_force_ref(flag: bool) -> None:
     _FORCE_REF = flag
 
 
+# ------------------------------------------------------- fault hook ----
+# Launch-site fault injection for the serve engine's chaos harness
+# (serve/faults.py). When a hook is installed at TRACE time, the stream
+# dispatch embeds an io_callback ahead of the launch, so the hook fires
+# at RUN time on every execution of the jitted program — a raised fault
+# fails the real launch (wrapped in the backend's callback error), and a
+# sleeping hook delays it (deadline tests). The embedded callback reads
+# the CURRENT hook on each run, so restoring the hook to None turns
+# already-traced programs back into no-ops.
+
+_FAULT_HOOK = None
+
+
+def set_fault_hook(hook):
+    """Install (or clear, with None) the stream-launch fault hook:
+    ``hook(family=..., batched=..., force_ref=...)``, called inside every
+    stream-engine dispatch. Returns the previous hook so callers can
+    scope the installation (the serve engine installs around its run
+    loops). Chaos testing only — never installed in production paths."""
+    global _FAULT_HOOK
+    prev, _FAULT_HOOK = _FAULT_HOOK, hook
+    return prev
+
+
+def _call_fault_hook(family: str, batched: bool, force_ref: bool):
+    import numpy as np
+
+    hook = _FAULT_HOOK
+    if hook is not None:
+        hook(family=family, batched=batched, force_ref=force_ref)
+    return np.int32(0)
+
+
+def _with_fault_probe(run, family: str, batched: bool, force_ref: bool):
+    """Sequence the fault hook into the traced program (io_callback: runs
+    every execution, never DCE'd). Deliberately NOT ``ordered=True``:
+    every serve launch is synchronous (block_until_ready before the next),
+    and the ordered token chain would carry a failed probe's error into a
+    LATER healthy launch — exactly the cross-launch contamination the
+    fault-isolation layer must not manufacture itself."""
+    from jax.experimental import io_callback
+
+    def probed(*a):
+        io_callback(
+            lambda: _call_fault_hook(family, batched, force_ref),
+            jax.ShapeDtypeStruct((), jnp.int32))
+        return run(*a)
+
+    return probed
+
+
 # single shared copies of the round-up / constant-fill padding helpers
 # (stream_fused owns them; ops re-exports under its historical names)
 _pad_to = _stream._pad_dim
@@ -360,12 +411,15 @@ def _stream_dispatch(family: str, batched: bool, args, kwargs, *, tn, td,
     oracles, launch = _STREAM_DISPATCH[family][:2]
     if batched and lengths is not None:
         args = _apply_lengths(family, args, lengths)
-    if force_ref or _FORCE_REF:
+    ref = bool(force_ref or _FORCE_REF)
+    if ref:
         # single force-ref gate for EVERY family and batching mode: the
         # engine launcher (and thus pallas_call) is unreachable from here.
         run = lambda *a: oracles[1 if batched else 0](*a, **kwargs)
     else:
         run = lambda *a: launch(batched, *a, **kwargs, tn=tn, td=td)
+    if _FAULT_HOOK is not None:
+        run = _with_fault_probe(run, family, batched, ref)
     if batched and device is not None and device.n_devices > 1:
         if kwargs:
             raise ValueError("keyword stream args are unsupported under "

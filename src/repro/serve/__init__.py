@@ -1,4 +1,39 @@
 from repro.serve.engine import ServeStats, SnapshotServer
+from repro.serve.faults import (
+    FAULT_SCOPES,
+    FAULT_SITES,
+    FaultInjector,
+    FaultPlan,
+    FaultSpec,
+    InjectedFault,
+    LaunchTimeout,
+    ServeFault,
+    SnapshotValidationError,
+    validate_snapshot,
+)
 from repro.serve.lm_serve import generate, make_serve_step
+from repro.serve.supervision import (
+    SupervisionPolicy,
+    TenantResult,
+    TenantSupervisor,
+)
 
-__all__ = ["ServeStats", "SnapshotServer", "generate", "make_serve_step"]
+__all__ = [
+    "FAULT_SCOPES",
+    "FAULT_SITES",
+    "FaultInjector",
+    "FaultPlan",
+    "FaultSpec",
+    "InjectedFault",
+    "LaunchTimeout",
+    "ServeFault",
+    "ServeStats",
+    "SnapshotServer",
+    "SnapshotValidationError",
+    "SupervisionPolicy",
+    "TenantResult",
+    "TenantSupervisor",
+    "generate",
+    "make_serve_step",
+    "validate_snapshot",
+]

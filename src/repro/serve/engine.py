@@ -51,6 +51,27 @@ as the fallback). ServeStats reports live vs padded snapshot slots and
 launch counts per run so the overhead stays visible instead of hiding in
 throughput.
 
+Fault isolation and recovery (docs/serve_robustness.md): every chunk
+launch goes through a SUPERVISED runner. Snapshots are validated at the
+serve boundary (serve/faults.validate_snapshot — malformed input raises a
+typed ``SnapshotValidationError`` carrying the tenant id); per-tenant
+recurrent state is CHECKPOINTED before each chunk commit and ROLLED BACK
+on any failure, so a replayed chunk can never double-evolve state; failed
+launches are retried with exponential backoff (plan ``max_retries`` /
+``retry_backoff_ms``), bounded by a per-launch deadline (plan
+``launch_timeout_ms`` — enforced on completion, overdue results are
+discarded, never committed); a persistent fault attributable to one
+tenant QUARANTINES that tenant (plan ``supervision="isolate"``) while the
+co-batched healthy tenants are transparently retried without the failed
+member; an unattributable kernel-path failure walks the graceful
+DEGRADATION LADDER (plan ``degrade=True``): batched v3 -> solo v3 -> the
+pure-XLA oracle via the kernels/ops force-ref gate, serving
+correct-but-slower results instead of erroring. Every recovery action is
+visible in ``ServeStats`` (per-tenant errors, retries, rollbacks,
+degraded launches, timeouts); the deterministic fault-injection harness
+(plan ``fault_plan`` -> serve/faults.FaultInjector) drives each site on
+demand so chaos tests pin all of the above.
+
 Configuration is a typed ``repro.api.StreamPlan`` — the server is a
 consumer of a ``BoosterSession`` (``SnapshotServer(session=...)``, or the
 historical keyword surface, which builds the equivalent plan/session).
@@ -64,7 +85,9 @@ from __future__ import annotations
 import queue
 import threading
 import time
-from dataclasses import dataclass
+import warnings
+from contextlib import contextmanager
+from dataclasses import dataclass, field
 from typing import Iterable, Optional
 
 import jax
@@ -86,6 +109,18 @@ from repro.graph.padding import (
     promote_bucket_groups,
     stack_streams,
 )
+from repro.kernels import ops as kops
+from repro.serve.faults import LaunchTimeout, validate_snapshot
+from repro.serve.supervision import SupervisionPolicy, TenantSupervisor
+
+# sid the single-tenant ``run`` path supervises its stream under (one
+# namespace for probes/results across both entry points)
+SOLO_SID = "stream"
+
+# how long shutdown keeps drain-joining producer threads before giving up
+# with a warning (threads cannot be killed in Python; a producer stuck in
+# USER iterator code past this is reported, not silently leaked)
+_SHUTDOWN_DEADLINE_S = 5.0
 
 
 @dataclass
@@ -101,20 +136,36 @@ class ServeStats:
     padded_snapshots: int = 0
     promoted_chunks: int = 0  # chunks promoted to a larger bucket
     launches: int = 0         # stream-kernel launches (v3 paths)
+    # fault-isolation / recovery signals (docs/serve_robustness.md)
+    retries: int = 0            # failed chunk attempts that were replayed
+    rollbacks: int = 0          # per-tenant state rollbacks
+    degraded_launches: int = 0  # solo/oracle ladder launches that served
+    timeouts: int = 0           # launches past the plan deadline
+    # per-tenant outcomes: {sid: supervision.TenantResult} — errors of
+    # quarantined tenants, per-tenant recovery counters, output lists
+    tenants: dict = field(default_factory=dict)
+    # measured-guard calibration fell back to the static proxy (repr of
+    # the error; None = calibration ok or never requested)
+    calibration_fallback: Optional[str] = None
 
     @property
     def mean_latency_ms(self) -> float:
         return float(np.mean(self.per_snapshot_ms)) if self.per_snapshot_ms else 0.0
+
+    @property
+    def tenant_errors(self) -> dict:
+        """{sid: error} for every quarantined tenant."""
+        return {sid: r.error for sid, r in self.tenants.items() if not r.ok}
 
 
 class SnapshotServer:
     """Streaming DGNN inference over a snapshot iterator.
 
     A consumer of ``repro.api.BoosterSession``: all policy — dataflow
-    level, tiling, buckets, chunking, promotion — comes from the
-    session's typed ``StreamPlan``. The historical keyword surface
-    (cfg + mode + padding kwargs) is kept as a deprecated shim that
-    builds the equivalent plan/session.
+    level, tiling, buckets, chunking, promotion, fault
+    isolation/recovery — comes from the session's typed ``StreamPlan``.
+    The historical keyword surface (cfg + mode + padding kwargs) is kept
+    as a deprecated shim that builds the equivalent plan/session.
     """
 
     def __init__(self, cfg: Optional[DGNNConfig] = None,
@@ -175,32 +226,126 @@ class SnapshotServer:
         self.queue_depth = self.plan.queue_depth
         self.promote_buckets = self.plan.promote_buckets
         self._bucket_ms: Optional[dict] = None  # measured-guard calibration
+        self._calib_error: Optional[str] = None  # fallback-to-static reason
+        self._policy = SupervisionPolicy.from_plan(self.plan)
+        self._injector = (self.plan.fault_plan.injector()
+                          if self.plan.fault_plan is not None else None)
+        self._fault_exempt = False   # calibration launches skip probes
+        self._launch_ctx: tuple = ()  # live sids of the in-flight launch
+        self._warmed: set = set()    # launch signatures past first compile
         self._step = jax.jit(
             lambda p, s, snap: self.model.step(p, s, snap, mode=self.mode))
         # every v3 serve launch takes the batched ragged-T entry: chunk
         # tails and batch-padding rows are dead ``lengths`` slots masked
-        # in-launch, not host-built empty snapshots.
+        # in-launch, not host-built empty snapshots. The force-ref twin is
+        # the degradation ladder's oracle rung (pure-XLA production path).
         self._stream_step_batched = jax.jit(
             lambda p, s, sBT, lens: self.model.step_stream_batched(
                 p, s, sBT, tn=self.plan.tn, td=self.plan.td, lengths=lens))
+        self._stream_step_batched_ref = jax.jit(
+            lambda p, s, sBT, lens: self.model.step_stream_batched(
+                p, s, sBT, tn=self.plan.tn, td=self.plan.td, lengths=lens,
+                force_ref=True))
 
     def init(self, rng):
         return self.session.init(rng)
 
+    # ------------------------------------------------- fault injection ----
+
+    def _probe(self, site: str, tenant=None) -> None:
+        """Host-side fault-site probe (preprocess/bucket/evolve sites;
+        launch-site probes fire inside the traced program via the
+        kernels/ops fault hook)."""
+        if self._injector is not None and not self._fault_exempt:
+            self._injector.probe(
+                site, tenants=() if tenant is None else (tenant,))
+
+    def _launch_probe(self, *, family, batched, force_ref) -> None:
+        """The kernels/ops fault hook: fires at RUN time inside every
+        stream-engine dispatch, with the engine supplying the live-tenant
+        context of the in-flight launch."""
+        del family, batched  # scope is judged on live tenants, not shape
+        if self._injector is None or self._fault_exempt:
+            return
+        sids = self._launch_ctx
+        self._injector.probe("launch", tenants=sids, n_live=len(sids),
+                             force_ref=force_ref)
+
+    @contextmanager
+    def _fault_window(self):
+        """Install the ops-layer launch hook for the duration of a serve
+        run (only when the fault plan addresses the launch site), and
+        restore the previous hook on every exit path."""
+        if (self._injector is None
+                or "launch" not in self.plan.fault_plan.sites()):
+            yield
+            return
+        prev = kops.set_fault_hook(self._launch_probe)
+        try:
+            yield
+        finally:
+            kops.set_fault_hook(prev)
+
+    def _attribution(self, exc: BaseException) -> BaseException:
+        """Map a launch exception to its root fault: an injected fault
+        crosses the XLA callback boundary rewrapped, so ask the injector
+        what fired; otherwise the exception speaks for itself."""
+        if self._injector is not None:
+            fired = self._injector.take_fired()
+            if fired is not None:
+                return fired
+        return exc
+
     # ------------------------------------------------------ host thread ----
 
-    def _preprocess(self, snap: COOSnapshot) -> PaddedSnapshot:
+    def _preprocess(self, snap: COOSnapshot,
+                    tenant=SOLO_SID) -> PaddedSnapshot:
         # shapes must be static so the jitted step never recompiles (the
         # "snapshot fits in BRAM" contract; overflow = the bucket chooser
         # picked wrong and should raise). With ``buckets`` the shapes are
         # static PER BUCKET: one compiled step per bucket in the jit cache.
+        self._probe("preprocess", tenant=tenant)
+        validate_snapshot(snap, self.feat_table.shape[0], tenant=tenant)
         ls = renumber_and_normalize(snap)
         if self.buckets is not None:
+            self._probe("bucket", tenant=tenant)
             n_pad, e_pad, k_max = choose_bucket(
                 ls.n_nodes, ls.src.shape[0], max_in_degree(ls), self.buckets)
         else:
             n_pad, e_pad, k_max = self.n_pad, self.e_pad, self.k_max
         return pad_snapshot(ls, self.feat_table, n_pad, e_pad, k_max)
+
+    # -------------------------------------------------------- shutdown ----
+
+    @staticmethod
+    def _drain(q: queue.Queue) -> None:
+        try:
+            while True:
+                q.get_nowait()
+        except queue.Empty:
+            pass
+
+    def _shutdown(self, stop: threading.Event, queues: list,
+                  threads: list) -> None:
+        """Deterministic producer shutdown, run on EVERY exit path: signal
+        stop, then drain-join until every producer thread has exited (a
+        producer blocked on a full queue wakes on the drain; one blocked
+        on the stop-aware put wakes on the event). A thread still alive
+        past the deadline is stuck in user iterator code — warned about,
+        since Python offers no way to kill it."""
+        stop.set()
+        deadline = time.perf_counter() + _SHUTDOWN_DEADLINE_S
+        alive = [th for th in threads if th.is_alive()]
+        while alive and time.perf_counter() < deadline:
+            for q in queues:
+                self._drain(q)
+            for th in alive:
+                th.join(timeout=0.05)
+            alive = [th for th in alive if th.is_alive()]
+        for th in alive:
+            warnings.warn(f"serve producer thread {th.name!r} did not exit "
+                          "within the shutdown deadline (stuck in the "
+                          "stream iterator?)", RuntimeWarning)
 
     # ------------------------------------------------------ device loop ----
 
@@ -221,47 +366,248 @@ class SnapshotServer:
         return True
 
     def _launch_ragged(self, params, states_B, per_stream: list,
-                       lengths: np.ndarray):
+                       lengths: np.ndarray, force_ref: bool = False):
         """ONE batched ragged-T stream launch: ``per_stream`` are (T, ...)
         stacked chunks of equal padded shape, ``lengths`` their true live
         lengths (0 = pure batch-padding row). The dead slots are masked
-        in-launch by the plan's ragged capability."""
+        in-launch by the plan's ragged capability. ``force_ref`` routes to
+        the jitted oracle twin (degraded-mode rung)."""
         batch_BT = stack_streams(per_stream)
-        return self._stream_step_batched(params, states_B, batch_BT,
-                                         jnp.asarray(lengths, jnp.int32))
+        fn = (self._stream_step_batched_ref if force_ref
+              else self._stream_step_batched)
+        return fn(params, states_B, batch_BT,
+                  jnp.asarray(lengths, jnp.int32))
 
-    def _run_chunk(self, params, state, chunk: list, outs: list, lat: list,
-                   ctr: dict):
-        """Feed one same-bucket chunk to the time-fused stream kernel
-        (a B=1 ragged launch).
+    # -------------------------------------------------- supervised launch ----
+
+    def _stage_group(self, params, states: dict, group: list,
+                     force_ref: bool = False) -> tuple:
+        """Launch one batched V3 group WITHOUT committing anything: build
+        the (B, T) batch, run it, and return the staged per-tenant results
+        ``(staged_states, staged_outs, dt_per_snapshot_ms, live, padded)``.
+        Commit/rollback is the supervised runner's job, so a failure here
+        (or after, in the commit phase) leaves tenant state untouched.
+
+        ``group`` is [(sid, [LocalSnapshot | PaddedSnapshot, ...],
+        bucket), ...]. Each stream's chunk is padded to the shared bucket
+        and stacked to a (B, T, ...) batch with the per-stream states
+        alongside; T is the common power-of-two target and the BATCH axis
+        is pow2-padded too, so the jit cache stays bounded at log2 sizes
+        per (bucket, T) instead of compiling one program per distinct
+        client count as tenants join and finish. Raggedness is carried by
+        ``lengths`` (stream b live for lengths[b] steps, padding rows live
+        for 0) and masked in-launch — no host-built empty snapshots. Row b
+        of the launch result is that stream's output in stream order.
+
+        The plan's ``launch_timeout_ms`` deadline is enforced on
+        completion (JAX launches cannot be cancelled): an overdue result
+        raises ``LaunchTimeout`` and is DISCARDED by the caller. The first
+        launch of each (bucket, T, B, path) signature is exempt — it pays
+        one-time compilation.
+        """
+        bucket = group[0][2]
+        real_lens = [len(chunk) for _, chunk, _ in group]
+        target = pow2_target(max(real_lens), cap=self.stream_chunk)
+        b_real = len(group)
+        b_target = pow2_target(b_real)
+        per_stream = []
+        for _, chunk, _ in group:
+            # fixed-bucket items arrive pre-padded from the producer thread
+            # (host-prep overlap); bucketed items pad here, once the chunk
+            # bucket is known.
+            padded = [ls if isinstance(ls, PaddedSnapshot)
+                      else pad_snapshot(ls, self.feat_table, *bucket)
+                      for ls in chunk]
+            # ragged T: tail slots repeat the last snapshot — dead
+            # ``lengths`` slots, masked in-launch, content irrelevant
+            padded = padded + [padded[-1]] * (target - len(padded))
+            per_stream.append(stack_time(padded))
+        # batch-axis padding = length-0 streams (results discarded)
+        per_stream.extend([per_stream[0]] * (b_target - b_real))
+        lengths = np.asarray(real_lens + [0] * (b_target - b_real), np.int32)
+        zero_state = jax.tree.map(jnp.zeros_like, states[group[0][0]])
+        states_B = jax.tree.map(
+            lambda *xs: jnp.stack(xs, axis=0),
+            *([states[sid] for sid, _, _ in group]
+              + [zero_state] * (b_target - b_real)))
+        key = (bucket, target, b_target, force_ref)
+        warmed = key in self._warmed
+        self._launch_ctx = tuple(sid for sid, _, _ in group)
+        try:
+            t0 = time.perf_counter()
+            states_B, out_BT = self._launch_ragged(params, states_B,
+                                                   per_stream, lengths,
+                                                   force_ref=force_ref)
+            jax.block_until_ready(out_BT)
+            dt_ms = (time.perf_counter() - t0) * 1e3
+        finally:
+            self._launch_ctx = ()
+        self._warmed.add(key)
+        timeout = self._policy.timeout_ms
+        if timeout is not None and warmed and dt_ms > timeout:
+            raise LaunchTimeout(
+                f"launch took {dt_ms:.1f}ms > launch_timeout_ms={timeout}"
+                f" (bucket={bucket}, B={b_target}, T={target}); result "
+                "discarded", site="launch")
+        out_np = np.asarray(out_BT)
+        staged_states = {
+            sid: jax.tree.map(lambda a, b=b: a[b], states_B)
+            for b, (sid, _, _) in enumerate(group)}
+        staged_outs = {sid: [out_np[b, t] for t in range(real_lens[b])]
+                       for b, (sid, _, _) in enumerate(group)}
+        live = sum(real_lens)
+        padded_slots = b_target * target - live
+        return staged_states, staged_outs, dt_ms / live, live, padded_slots
+
+    def _commit_group(self, states: dict, group: list, staged: tuple,
+                      outs: dict, lat: list, ctr: dict, sup: TenantSupervisor,
+                      degraded: bool = False) -> None:
+        """Commit one staged group: the ``evolve`` fault site sits inside
+        the state-commit loop, so an injected (or real) mid-commit failure
+        leaves ``states`` partially written — exactly what the
+        supervisor's checkpoint/rollback must undo for the replay to
+        evolve state exactly once per served snapshot."""
+        staged_states, staged_outs, dt, live, padded_slots = staged
+        for sid, _, _ in group:
+            self._probe("evolve", tenant=sid)
+            states[sid] = staged_states[sid]
+        for sid, chunk, _ in group:
+            outs[sid].extend(staged_outs[sid])
+            lat.extend([dt] * len(chunk))
+            if degraded:
+                sup.note_degraded(sid)
+        ctr["live"] += live
+        ctr["padded"] += padded_slots
+        if degraded:
+            ctr["degraded"] += 1
+
+    def _degrade_group(self, params, states: dict, members: list,
+                       outs: dict, lat: list, ctr: dict,
+                       sup: TenantSupervisor, cause: BaseException) -> None:
+        """The degradation ladder's lower rungs, per member: a solo (B=1)
+        v3 launch isolates the batch from a poisoned co-tenant; if the
+        kernel path itself is the fault, the pure-XLA oracle (force-ref
+        gate) serves correct-but-slower results. A member that fails every
+        rung is quarantined (isolate) or raises (strict) with the LAST
+        error as cause."""
+        for member in members:
+            sid = member[0]
+            err = cause
+            for force_ref in (False, True):
+                ckpt = sup.checkpoint(states, [sid])
+                try:
+                    ctr["launches"] += 1
+                    staged = self._stage_group(params, states, [member],
+                                               force_ref=force_ref)
+                    self._commit_group(states, [member], staged, outs, lat,
+                                       ctr, sup, degraded=True)
+                    break
+                except Exception as exc:
+                    err = self._attribution(exc)
+                    if isinstance(err, LaunchTimeout):
+                        ctr["timeouts"] += 1
+                    sup.rollback(states, ckpt)
+            else:
+                sup.quarantine(sid, err,
+                               site=getattr(err, "site", "launch"))
+
+    def _run_group_supervised(self, params, states: dict, group: list,
+                              outs: dict, lat: list, ctr: dict,
+                              sup: TenantSupervisor) -> None:
+        """One batched V3 group under the supervision contract:
+
+          1. checkpoint every member's recurrent state;
+          2. stage the batched launch + commit (the happy path);
+          3. on failure: roll back, then retry the SAME group up to
+             ``max_retries`` times with exponential backoff (a transient
+             fault is survived in place, replaying from the checkpoint);
+          4. retries exhausted + fault attributable to one member: that
+             tenant is quarantined and the remaining members are
+             transparently retried without it;
+          5. retries exhausted + unattributable: walk the degradation
+             ladder (plan ``degrade=True``), else quarantine the whole
+             group (isolate) / raise (strict).
+        """
+        members = [m for m in group if sup.ok(m[0])]
+        attempt = 0
+        while members:
+            sids = [sid for sid, _, _ in members]
+            ckpt = sup.checkpoint(states, sids)
+            try:
+                ctr["launches"] += 1
+                staged = self._stage_group(params, states, members)
+                self._commit_group(states, members, staged, outs, lat, ctr,
+                                   sup)
+                return
+            except Exception as exc:
+                err = self._attribution(exc)
+                if isinstance(err, LaunchTimeout):
+                    ctr["timeouts"] += 1
+                sup.rollback(states, ckpt)
+                attempt += 1
+                if attempt <= self._policy.max_retries:
+                    sup.note_retry(sids, attempt)
+                    continue
+                tenant = getattr(err, "tenant", None)
+                if tenant is not None and tenant in sids:
+                    # persistent fault pinned to one member: quarantine it,
+                    # retry the healthy co-batch without it
+                    sup.quarantine(tenant, err,
+                                   site=getattr(err, "site", "launch"))
+                    members = [m for m in members if m[0] != tenant]
+                    attempt = 0
+                    continue
+                if self._policy.degrade:
+                    self._degrade_group(params, states, members, outs, lat,
+                                        ctr, sup, err)
+                    return
+                # no ladder: the whole group fails together
+                for sid in sids:
+                    sup.quarantine(sid, err,
+                                   site=getattr(err, "site", "launch"))
+                return
+
+    def _run_chunk(self, params, states: dict, chunk: list, outs: dict,
+                   lat: list, ctr: dict, sup: TenantSupervisor) -> None:
+        """Feed one same-bucket single-tenant chunk to the time-fused
+        stream kernel (a B=1 supervised launch).
 
         Short flushes (tail of the stream, or a bucket change on a
         bucket-alternating stream) pad T up to the next power of two, not
-        all the way to ``stream_chunk`` — at most 2× dead slots while the
+        all the way to ``stream_chunk`` — at most 2x dead slots while the
         jit cache stays bounded at log2(stream_chunk)+1 chunk lengths per
         bucket. The tail repeats the last snapshot; its content is
         ignored (masked by ``lengths``).
         """
-        real = len(chunk)
-        target = pow2_target(real, cap=self.stream_chunk)
-        chunk = chunk + [chunk[-1]] * (target - real)
-        ctr["live"] += real
-        ctr["padded"] += target - real
-        ctr["launches"] += 1
-        state_B = jax.tree.map(lambda a: a[None], state)
-        t0 = time.perf_counter()
-        state_B, out_BT = self._launch_ragged(
-            params, state_B, [stack_time(chunk)], np.asarray([real]))
-        jax.block_until_ready(out_BT)
-        dt = (time.perf_counter() - t0) * 1e3 / real
-        out_np = np.asarray(out_BT)
-        for t in range(real):
-            outs.append(out_np[0, t])
-            lat.append(dt)
-        return jax.tree.map(lambda a: a[0], state_B)
+        bucket = (chunk[0].n_pad, chunk[0].e_pad, chunk[0].k_max)
+        self._run_group_supervised(params, states,
+                                   [(SOLO_SID, chunk, bucket)], outs, lat,
+                                   ctr, sup)
+
+    def _make_stats(self, lat, pre_ms, total, ctr,
+                    sup: Optional[TenantSupervisor]) -> ServeStats:
+        totals = sup.totals() if sup is not None else {}
+        return ServeStats(
+            lat, pre_ms, total,
+            live_snapshots=ctr["live"], padded_snapshots=ctr["padded"],
+            promoted_chunks=ctr["promoted"], launches=ctr["launches"],
+            retries=totals.get("retries", 0),
+            rollbacks=totals.get("rollbacks", 0),
+            degraded_launches=totals.get("degraded_launches", 0),
+            timeouts=ctr.get("timeouts", 0),
+            tenants=dict(sup.results) if sup is not None else {},
+            calibration_fallback=self._calib_error)
 
     def run(self, params, state, snaps: Iterable[COOSnapshot]) -> tuple:
-        """Returns (final_state, outputs list, ServeStats)."""
+        """Returns (final_state, outputs list, ServeStats).
+
+        Single-tenant edition of the supervision contract: the stream is
+        supervised under the sid ``"stream"`` — with the default strict
+        policy every failure raises (after a clean shutdown); with plan
+        ``supervision="isolate"`` a terminal failure stops the stream and
+        returns the partial outputs with the error recorded in
+        ``stats.tenants["stream"]``.
+        """
         # the v3 device loop consumes ``stream_chunk`` snapshots per kernel
         # launch; a queue_depth-sized queue would stall the producer at 2
         # staged snapshots while a whole chunk runs, killing the §IV-D
@@ -271,6 +617,16 @@ class SnapshotServer:
                  if self._use_stream() else self.queue_depth)
         q: queue.Queue = queue.Queue(maxsize=depth)
         pre_ms: list = []
+        stop = threading.Event()
+
+        def _put(item):
+            while not stop.is_set():
+                try:
+                    q.put(item, timeout=0.05)
+                    return True
+                except queue.Full:
+                    continue
+            return False
 
         def producer():
             try:
@@ -278,50 +634,71 @@ class SnapshotServer:
                     t0 = time.perf_counter()
                     ps = self._preprocess(s)
                     pre_ms.append((time.perf_counter() - t0) * 1e3)
-                    q.put(ps)
-                q.put(None)
+                    if not _put(ps):
+                        return
+                _put(None)
             except BaseException as exc:  # propagate, don't hang the consumer
-                q.put(exc)
+                _put(exc)
 
-        th = threading.Thread(target=producer, daemon=True)
+        th = threading.Thread(target=producer, daemon=True,
+                              name=f"dgnn-serve-producer-{SOLO_SID}")
         t_start = time.perf_counter()
         th.start()
-        outs, lat = [], []
-        ctr = {"live": 0, "padded": 0, "promoted": 0, "launches": 0}
+        outs: list = []
+        lat: list = []
+        ctr = {"live": 0, "padded": 0, "promoted": 0, "launches": 0,
+               "timeouts": 0, "degraded": 0}
+        sup = TenantSupervisor([SOLO_SID], self._policy,
+                               outputs={SOLO_SID: outs})
+        states = {SOLO_SID: state}
+        outs_d = {SOLO_SID: outs}
         use_stream = self._use_stream()
         chunk: list = []
-        while True:
-            ps = q.get()
-            if ps is None:
-                break
-            if isinstance(ps, BaseException):
-                th.join()
-                raise ps  # e.g. choose_bucket: no bucket fits the snapshot
-            if not use_stream:
-                t0 = time.perf_counter()
-                state, out = self._step(params, state, ps)
-                jax.block_until_ready(out)
-                lat.append((time.perf_counter() - t0) * 1e3)
-                outs.append(np.asarray(out))
-                continue
-            # v3: gather same-bucket runs into fixed-T chunks
-            bucket = (ps.n_pad, ps.e_pad, ps.k_max)
-            if chunk and (chunk[0].n_pad, chunk[0].e_pad, chunk[0].k_max) != bucket:
-                state = self._run_chunk(params, state, chunk, outs, lat, ctr)
-                chunk = []
-            chunk.append(ps)
-            if len(chunk) == self.stream_chunk:
-                state = self._run_chunk(params, state, chunk, outs, lat, ctr)
-                chunk = []
-        if chunk:
-            state = self._run_chunk(params, state, chunk, outs, lat, ctr)
-        th.join()
+        try:
+            with self._fault_window():
+                while sup.ok(SOLO_SID):
+                    ps = q.get()
+                    if ps is None:
+                        break
+                    if isinstance(ps, BaseException):
+                        # e.g. validation / no-fit bucket: strict raises,
+                        # isolate records and stops the stream
+                        sup.quarantine(SOLO_SID, ps,
+                                       site=getattr(ps, "site", None))
+                        break
+                    if not use_stream:
+                        ckpt = sup.checkpoint(states, [SOLO_SID])
+                        try:
+                            t0 = time.perf_counter()
+                            states[SOLO_SID], out = self._step(
+                                params, states[SOLO_SID], ps)
+                            jax.block_until_ready(out)
+                            lat.append((time.perf_counter() - t0) * 1e3)
+                            outs.append(np.asarray(out))
+                        except Exception as exc:
+                            sup.rollback(states, ckpt)
+                            sup.quarantine(SOLO_SID, self._attribution(exc))
+                        continue
+                    # v3: gather same-bucket runs into fixed-T chunks
+                    bucket = (ps.n_pad, ps.e_pad, ps.k_max)
+                    if chunk and (chunk[0].n_pad, chunk[0].e_pad,
+                                  chunk[0].k_max) != bucket:
+                        self._run_chunk(params, states, chunk, outs_d, lat,
+                                        ctr, sup)
+                        chunk = []
+                    chunk.append(ps)
+                    if len(chunk) == self.stream_chunk:
+                        self._run_chunk(params, states, chunk, outs_d, lat,
+                                        ctr, sup)
+                        chunk = []
+                if chunk and sup.ok(SOLO_SID):
+                    self._run_chunk(params, states, chunk, outs_d, lat, ctr,
+                                    sup)
+        finally:
+            self._shutdown(stop, [q], [th])
         total = (time.perf_counter() - t_start) * 1e3
-        return state, outs, ServeStats(lat, pre_ms, total,
-                                       live_snapshots=ctr["live"],
-                                       padded_snapshots=ctr["padded"],
-                                       promoted_chunks=ctr["promoted"],
-                                       launches=ctr["launches"])
+        return states[SOLO_SID], outs, self._make_stats(lat, pre_ms, total,
+                                                        ctr, sup)
 
     # ------------------------------------------- multi-tenant device loop ----
 
@@ -346,11 +723,14 @@ class SnapshotServer:
         one empty-snapshot B=1 chunk per bucket, compiled then timed.
         The measured times replace the static ``bucket_cost`` proxy in the
         promotion guard (plan.promotion_guard == "measured"); returns None
-        (static fallback) if any bucket fails to calibrate."""
+        (static fallback) if any bucket fails to calibrate — the fallback
+        is WARNED about and recorded in ``ServeStats.calibration_fallback``
+        instead of failing silently."""
         din = self.feat_table.shape[1]
         de = self.cfg.edge_dim
         T = pow2_target(self.stream_chunk, cap=self.stream_chunk)
         times: dict = {}
+        self._fault_exempt = True  # calibration is not a serve launch
         try:
             for bucket in self.buckets:
                 chunk = [empty_padded(*bucket, din, de)] * T
@@ -363,8 +743,14 @@ class SnapshotServer:
                 jax.block_until_ready(run())
                 times[bucket] = max((time.perf_counter() - t0) * 1e3 / T,
                                     1e-6)
-        except Exception:
+        except Exception as exc:
+            self._calib_error = repr(exc)
+            warnings.warn(
+                "measured promotion-guard calibration failed; falling back "
+                f"to the static bucket_cost proxy: {exc!r}", RuntimeWarning)
             return None  # static proxy fallback
+        finally:
+            self._fault_exempt = False
         return times
 
     def _promotion_cost(self, params):
@@ -373,66 +759,11 @@ class SnapshotServer:
         lazily, once), else the static padded-compute proxy."""
         if self.plan.promotion_guard != "measured":
             return bucket_cost
-        if self._bucket_ms is None:
+        if self._bucket_ms is None and self._calib_error is None:
             self._bucket_ms = self._calibrate_bucket_times(params)
         if self._bucket_ms is None:
             return bucket_cost  # calibration failed: static fallback
         return lambda b: self._bucket_ms[b]
-
-    def _run_group_batched(self, params, states: dict, group: list,
-                           outs: dict, lat: list, ctr: dict):
-        """One batched V3 launch over same-bucket chunks of several streams.
-
-        ``group`` is [(sid, [LocalSnapshot, ...], bucket), ...]. Each
-        stream's chunk is padded to the shared bucket and stacked to a
-        (B, T, ...) batch with the per-stream states alongside; T is the
-        common power-of-two target and the BATCH axis is pow2-padded too,
-        so the jit cache stays bounded at log2 sizes per (bucket, T)
-        instead of compiling one program per distinct client count as
-        tenants join and finish. Raggedness is carried by ``lengths``
-        (stream b live for lengths[b] steps, padding rows live for 0) and
-        masked in-launch — no host-built empty snapshots. Row b of the
-        launch result is that stream's output in stream order.
-        """
-        bucket = group[0][2]
-        real_lens = [len(chunk) for _, chunk, _ in group]
-        target = pow2_target(max(real_lens), cap=self.stream_chunk)
-        b_real = len(group)
-        b_target = pow2_target(b_real)
-        per_stream = []
-        for _, chunk, _ in group:
-            # fixed-bucket items arrive pre-padded from the producer thread
-            # (host-prep overlap); bucketed items pad here, once the chunk
-            # bucket is known.
-            padded = [ls if isinstance(ls, PaddedSnapshot)
-                      else pad_snapshot(ls, self.feat_table, *bucket)
-                      for ls in chunk]
-            # ragged T: tail slots repeat the last snapshot — dead
-            # ``lengths`` slots, masked in-launch, content irrelevant
-            padded = padded + [padded[-1]] * (target - len(padded))
-            per_stream.append(stack_time(padded))
-        # batch-axis padding = length-0 streams (results discarded)
-        per_stream.extend([per_stream[0]] * (b_target - b_real))
-        lengths = np.asarray(real_lens + [0] * (b_target - b_real), np.int32)
-        ctr["live"] += sum(real_lens)
-        ctr["padded"] += b_target * target - sum(real_lens)
-        ctr["launches"] += 1
-        zero_state = jax.tree.map(jnp.zeros_like, states[group[0][0]])
-        states_B = jax.tree.map(
-            lambda *xs: jnp.stack(xs, axis=0),
-            *([states[sid] for sid, _, _ in group]
-              + [zero_state] * (b_target - b_real)))
-        t0 = time.perf_counter()
-        states_B, out_BT = self._launch_ragged(params, states_B, per_stream,
-                                               lengths)
-        jax.block_until_ready(out_BT)
-        dt = (time.perf_counter() - t0) * 1e3 / sum(real_lens)
-        out_np = np.asarray(out_BT)
-        for b, (sid, _, _) in enumerate(group):
-            states[sid] = jax.tree.map(lambda a, b=b: a[b], states_B)
-            for t in range(real_lens[b]):
-                outs[sid].append(out_np[b, t])
-                lat.append(dt)
 
     def run_multi(self, params, states: dict, streams: dict) -> tuple:
         """Serve many independent client streams concurrently.
@@ -443,7 +774,13 @@ class SnapshotServer:
         ServeStats). Outputs per stream are in that stream's snapshot order.
 
         Device loop: rounds of up-to-``stream_chunk`` snapshots per stream;
-        same-bucket chunks from different streams batch into one V3 launch.
+        same-bucket chunks from different streams batch into one V3 launch,
+        supervised per the plan's fault-isolation policy (see the module
+        docstring): with ``supervision="isolate"`` a failing tenant is
+        quarantined — its error lands in ``stats.tenants[sid]``, its
+        outputs stop at the last committed chunk — and the surviving
+        tenants are unaffected; the strict default re-raises the first
+        failure after a clean shutdown.
         """
         sids = sorted(streams)
         qs = {sid: queue.Queue(maxsize=max(self.queue_depth,
@@ -465,9 +802,13 @@ class SnapshotServer:
             try:
                 for s in streams[sid]:
                     t0 = time.perf_counter()
+                    self._probe("preprocess", tenant=sid)
+                    validate_snapshot(s, self.feat_table.shape[0],
+                                      tenant=sid)
                     ls = renumber_and_normalize(s)
                     dims = (ls.n_nodes, ls.src.shape[0], max_in_degree(ls))
                     if self.buckets is not None:
+                        self._probe("bucket", tenant=sid)
                         choose_bucket(*dims, self.buckets)  # fail fast
                     else:
                         # fixed bucket known up front: pad here so the host
@@ -483,82 +824,108 @@ class SnapshotServer:
             except BaseException as exc:  # propagate, don't hang the consumer
                 _put(qs[sid], exc)
 
-        threads = [threading.Thread(target=producer, args=(sid,), daemon=True)
+        threads = [threading.Thread(target=producer, args=(sid,), daemon=True,
+                                    name=f"dgnn-serve-producer-{sid}")
                    for sid in sids]
         t_start = time.perf_counter()
         for th in threads:
             th.start()
         outs: dict = {sid: [] for sid in sids}
         lat: list = []
-        ctr = {"live": 0, "padded": 0, "promoted": 0, "launches": 0}
+        ctr = {"live": 0, "padded": 0, "promoted": 0, "launches": 0,
+               "timeouts": 0, "degraded": 0}
+        sup = TenantSupervisor(sids, self._policy, outputs=outs)
         active = set(sids)
         batched = self._use_stream_batched()
         try:
-            while active:
-                # one round: pull the next chunk of every active stream
-                chunks = {}
-                for sid in sorted(active):
-                    chunk: list = []
-                    dims: list = []
-                    while len(chunk) < self.stream_chunk:
-                        item = qs[sid].get()
-                        if item is None:
-                            active.discard(sid)
-                            break
-                        if isinstance(item, BaseException):
-                            active.discard(sid)
-                            raise item
-                        chunk.append(item[0])
-                        dims.append(item[1])
-                        if not batched and chunk:
-                            break  # non-v3 per-snapshot loop: no chunking
-                    if chunk:
-                        chunks[sid] = (chunk, dims)
-                if not chunks:
-                    continue
-                if not batched:
-                    # non-v3 engine modes: round-robin per-snapshot stepping
+            with self._fault_window():
+                while active:
+                    # one round: pull the next chunk of every active stream
+                    chunks = {}
+                    for sid in sorted(active):
+                        chunk: list = []
+                        dims: list = []
+                        while len(chunk) < self.stream_chunk:
+                            item = qs[sid].get()
+                            if item is None:
+                                active.discard(sid)
+                                break
+                            if isinstance(item, BaseException):
+                                # producer-side failure (validation,
+                                # no-fit bucket, injected fault): strict
+                                # raises; isolate quarantines THIS tenant
+                                # — outputs stop at the last committed
+                                # chunk, the round continues without it
+                                active.discard(sid)
+                                chunk = []
+                                sup.quarantine(sid, item,
+                                               site=getattr(item, "site",
+                                                            None))
+                                break
+                            chunk.append(item[0])
+                            dims.append(item[1])
+                            if not batched and chunk:
+                                break  # non-v3 loop: no chunking
+                        if chunk:
+                            chunks[sid] = (chunk, dims)
+                    if not chunks:
+                        continue
+                    if not batched:
+                        # non-v3 engine modes: round-robin per-snapshot
+                        # stepping, checkpointed per snapshot
+                        for sid, (chunk, dims) in sorted(chunks.items()):
+                            if not sup.ok(sid):
+                                continue
+                            ckpt = sup.checkpoint(states, [sid])
+                            try:
+                                for ls, d in zip(chunk, dims):
+                                    ps = (ls if isinstance(ls, PaddedSnapshot)
+                                          else pad_snapshot(
+                                              ls, self.feat_table,
+                                              *self._chunk_bucket([d])))
+                                    ckpt = sup.checkpoint(states, [sid])
+                                    t0 = time.perf_counter()
+                                    states[sid], out = self._step(
+                                        params, states[sid], ps)
+                                    jax.block_until_ready(out)
+                                    lat.append(
+                                        (time.perf_counter() - t0) * 1e3)
+                                    outs[sid].append(np.asarray(out))
+                            except Exception as exc:
+                                sup.rollback(states, ckpt)
+                                sup.quarantine(sid, self._attribution(exc))
+                                active.discard(sid)
+                        continue
+                    # group same-bucket chunks across streams -> one
+                    # supervised launch each
+                    groups: dict = {}
                     for sid, (chunk, dims) in sorted(chunks.items()):
-                        for ls, d in zip(chunk, dims):
-                            ps = (ls if isinstance(ls, PaddedSnapshot)
-                                  else pad_snapshot(ls, self.feat_table,
-                                                    *self._chunk_bucket([d])))
-                            t0 = time.perf_counter()
-                            states[sid], out = self._step(params, states[sid],
-                                                          ps)
-                            jax.block_until_ready(out)
-                            lat.append((time.perf_counter() - t0) * 1e3)
-                            outs[sid].append(np.asarray(out))
-                    continue
-                # group same-bucket chunks across streams -> one launch each
-                groups: dict = {}
-                for sid, (chunk, dims) in sorted(chunks.items()):
-                    bucket = self._chunk_bucket(dims)
-                    groups.setdefault(bucket, []).append((sid, chunk, bucket))
-                if self.promote_buckets is not None and self.buckets is not None:
-                    # cross-bucket batching: promote smaller-bucket chunks
-                    # into the next-larger in-flight bucket (guarded by the
-                    # per-bucket cost ratio — measured step times under the
-                    # plan's adaptive guard, else the static padded-compute
-                    # proxy) so they join its launch instead of paying
-                    # their own dispatch.
-                    before = {b: len(m) for b, m in groups.items()}
-                    groups = promote_bucket_groups(groups, self.buckets,
-                                                   self.promote_buckets,
-                                                   cost=self._promotion_cost(
-                                                       params))
-                    ctr["promoted"] += sum(
-                        len(m) - before.get(b, 0) for b, m in groups.items())
-                for bucket in sorted(groups):
-                    self._run_group_batched(params, states, groups[bucket],
-                                            outs, lat, ctr)
+                        bucket = self._chunk_bucket(dims)
+                        groups.setdefault(bucket, []).append(
+                            (sid, chunk, bucket))
+                    if (self.promote_buckets is not None
+                            and self.buckets is not None):
+                        # cross-bucket batching: promote smaller-bucket
+                        # chunks into the next-larger in-flight bucket
+                        # (guarded by the per-bucket cost ratio — measured
+                        # step times under the plan's adaptive guard, else
+                        # the static padded-compute proxy) so they join its
+                        # launch instead of paying their own dispatch.
+                        before = {b: len(m) for b, m in groups.items()}
+                        groups = promote_bucket_groups(
+                            groups, self.buckets, self.promote_buckets,
+                            cost=self._promotion_cost(params))
+                        ctr["promoted"] += sum(
+                            len(m) - before.get(b, 0)
+                            for b, m in groups.items())
+                    for bucket in sorted(groups):
+                        self._run_group_supervised(params, states,
+                                                   groups[bucket], outs,
+                                                   lat, ctr, sup)
+                    # tenants quarantined by the launch path stop being
+                    # scheduled (their producers are drained at shutdown)
+                    active -= set(sup.quarantined)
         finally:
-            stop.set()
-            for th in threads:
-                th.join(timeout=5.0)
+            self._shutdown(stop, list(qs.values()), threads)
         total = (time.perf_counter() - t_start) * 1e3
-        return states, outs, ServeStats(lat, pre_ms, total,
-                                        live_snapshots=ctr["live"],
-                                        padded_snapshots=ctr["padded"],
-                                        promoted_chunks=ctr["promoted"],
-                                        launches=ctr["launches"])
+        return states, outs, self._make_stats(lat, pre_ms, total, ctr, sup)

@@ -1,0 +1,168 @@
+"""Tenant supervision for the multi-tenant serve engine.
+
+The engine's recovery contract (docs/serve_robustness.md): a per-tenant
+failure anywhere on the serve path — malformed snapshot, no-fit bucket,
+failed or overdue launch, mid-commit crash — quarantines THAT tenant and
+the batch continues; recurrent state is checkpointed before every chunk
+launch and rolled back on failure, so a replayed chunk can never
+double-evolve state (the EvolveGCN regression class PR 3's harness pins).
+
+This module owns the bookkeeping half of that contract:
+
+  * :class:`TenantResult` — one tenant's outcome: served outputs, the
+    quarantining error (None = healthy), and the recovery counters
+    (retries, rollbacks, degraded launches).
+  * :class:`SupervisionPolicy` — the plan-derived recovery knobs
+    (``supervision``/``max_retries``/``retry_backoff_ms``/
+    ``launch_timeout_ms``/``degrade``).
+  * :class:`TenantSupervisor` — quarantine state + checkpoint/rollback of
+    the per-tenant recurrent-state dict. JAX arrays are immutable, so a
+    checkpoint is a dict of REFERENCES taken before the commit phase;
+    rollback restores those references over whatever the interrupted
+    commit managed to write.
+
+The launch/degrade driver itself lives once in the engine
+(``SnapshotServer._run_group_supervised``) — GenGNN's framing: recovery
+machinery in the generic engine, not per model family.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+# Degradation ladder rungs, slowest-recovery last: the batched stream
+# launch, a solo (B=1) stream launch per member, the pure-XLA oracle via
+# the kernels/ops force-ref gate. Later rungs are slower but share no
+# failure mode with the kernel path.
+LADDER = ("batched", "solo", "oracle")
+
+
+@dataclass
+class TenantResult:
+    """One tenant's serve outcome. ``outputs`` is the SAME list object the
+    engine returns in its outputs dict, so partial results served before a
+    quarantine stay visible. ``error is None`` means healthy."""
+
+    sid: object
+    outputs: list = field(default_factory=list)
+    error: Optional[BaseException] = None
+    failed_site: Optional[str] = None
+    retries: int = 0
+    rollbacks: int = 0
+    degraded_launches: int = 0
+
+    @property
+    def ok(self) -> bool:
+        return self.error is None
+
+
+@dataclass(frozen=True)
+class SupervisionPolicy:
+    """Plan-derived recovery policy (see docs/api.md for field docs)."""
+
+    isolate: bool = False          # quarantine per tenant vs raise (strict)
+    max_retries: int = 0           # same-group retries before escalating
+    backoff_ms: float = 10.0       # exponential backoff base
+    timeout_ms: Optional[float] = None  # per-launch deadline (None = off)
+    degrade: bool = False          # enable the solo/oracle ladder rungs
+
+    @classmethod
+    def from_plan(cls, plan) -> "SupervisionPolicy":
+        return cls(isolate=plan.supervision == "isolate",
+                   max_retries=plan.max_retries,
+                   backoff_ms=plan.retry_backoff_ms,
+                   timeout_ms=plan.launch_timeout_ms,
+                   degrade=plan.degrade)
+
+    def backoff_s(self, attempt: int) -> float:
+        """Exponential backoff before retry ``attempt`` (1-based), in
+        seconds."""
+        return self.backoff_ms * (2 ** (attempt - 1)) / 1e3
+
+
+class TenantSupervisor:
+    """Quarantine + checkpoint/rollback bookkeeping for one serve run.
+
+    One instance per ``run``/``run_multi`` call; the engine consults
+    ``alive``/``ok`` to stop scheduling a quarantined tenant and folds the
+    per-tenant counters into ``ServeStats`` at the end.
+    """
+
+    def __init__(self, sids, policy: SupervisionPolicy,
+                 outputs: Optional[dict] = None):
+        self.policy = policy
+        self.results = {
+            sid: TenantResult(sid, outputs=outputs[sid]
+                              if outputs is not None else [])
+            for sid in sids
+        }
+
+    # ------------------------------------------------------- queries ----
+
+    def ok(self, sid) -> bool:
+        return self.results[sid].ok
+
+    def alive(self, sids) -> list:
+        return [sid for sid in sids if self.results[sid].ok]
+
+    @property
+    def quarantined(self) -> dict:
+        return {sid: r for sid, r in self.results.items() if not r.ok}
+
+    # -------------------------------------------- checkpoint/rollback ----
+
+    def checkpoint(self, states: dict, sids) -> dict:
+        """Snapshot the recurrent state of ``sids`` before a chunk launch.
+        JAX arrays are immutable, so holding the references is a complete
+        copy-free checkpoint: any commit writes replace dict entries, they
+        never mutate the checkpointed arrays."""
+        return {sid: states[sid] for sid in sids}
+
+    def rollback(self, states: dict, ckpt: dict) -> None:
+        """Restore every checkpointed tenant's state (undoing whatever a
+        failed commit wrote) and count the rollback per tenant — the
+        retry will replay the chunk from exactly the pre-launch state, so
+        recurrent state (h/c, evolving W) advances at most once per
+        served snapshot."""
+        for sid, state in ckpt.items():
+            states[sid] = state
+            self.results[sid].rollbacks += 1
+
+    # ------------------------------------------------------ recording ----
+
+    def note_retry(self, sids, attempt: int, sleep: bool = True) -> None:
+        """Count a retry for every member and apply exponential backoff."""
+        for sid in sids:
+            self.results[sid].retries += 1
+        if sleep and self.policy.backoff_ms > 0:
+            time.sleep(self.policy.backoff_s(attempt))
+
+    def note_degraded(self, sid) -> None:
+        self.results[sid].degraded_launches += 1
+
+    def quarantine(self, sid, error: BaseException,
+                   site: Optional[str] = None) -> None:
+        """Mark ``sid`` failed. Under the strict policy the error is
+        re-raised instead (fault isolation is opt-in: plan
+        ``supervision="isolate"``)."""
+        if not self.policy.isolate:
+            raise error
+        r = self.results[sid]
+        if r.ok:  # first failure wins; later noise keeps the root cause
+            r.error = error
+            r.failed_site = site if site is not None else getattr(
+                error, "site", None)
+
+    # ---------------------------------------------------------- stats ----
+
+    def totals(self) -> dict:
+        """Aggregate counters for ServeStats."""
+        rs = self.results.values()
+        return {
+            "retries": sum(r.retries for r in rs),
+            "rollbacks": sum(r.rollbacks for r in rs),
+            "degraded_launches": sum(r.degraded_launches for r in rs),
+            "tenant_errors": {sid: r.error for sid, r in self.results.items()
+                              if not r.ok},
+        }

@@ -1,0 +1,460 @@
+"""Chaos suite: the serve engine's fault-isolation contract, driven by the
+deterministic injection harness (serve/faults.py).
+
+What these tests pin (docs/serve_robustness.md):
+
+  * every fault site (preprocess / bucket / launch / evolve) x every DGNN
+    family: the targeted tenant is quarantined, the SURVIVING tenants get
+    outputs and final recurrent state BIT-IDENTICAL to a fault-free run;
+  * a transient launch fault is retried from the rolled-back checkpoint —
+    on EvolveGCN the evolving weights advance exactly once per live
+    snapshot (final state equals the fault-free run exactly);
+  * a mid-commit ("evolve"-site) fault leaves a partial state write that
+    rollback undoes before the replay;
+  * the degradation ladder: batched -> solo (a poisoned co-batch) ->
+    pure-XLA oracle (a poisoned kernel path), still serving results;
+  * launch deadlines: an overdue launch is discarded, counted, retried;
+  * shutdown leaves no producer threads behind, on success AND failure;
+  * malformed snapshots are rejected at the serve boundary with typed,
+    tenant-attributed errors.
+
+``CHAOS_SEED`` (env, default 0) seeds the synthetic streams and the
+FaultPlans, so CI can sweep seeds while any single failure reproduces
+from its seed alone.
+"""
+import os
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro import api
+from repro.configs.dgnn import DGNNConfig
+from repro.graph.coo import COOSnapshot
+from repro.graph.padding import bucket_cost
+from repro.serve import (
+    FaultPlan,
+    FaultSpec,
+    InjectedFault,
+    SnapshotServer,
+    SnapshotValidationError,
+    validate_snapshot,
+)
+
+CHAOS_SEED = int(os.environ.get("CHAOS_SEED", "0"))
+N_GLOBAL = 32
+# streams are generated to always fit the SMALL bucket (<= 6 raw edges,
+# distinct dst ids; normalization symmetrizes + adds self-loops, so
+# e <= 2*6 + n <= 24), so every chunk of every tenant co-buckets and each
+# round produces exactly one batched launch — probe occurrence numbering
+# stays deterministic.
+BUCKETS = ((16, 32, 8), (32, 64, 8))
+SIDS = ("a", "b", "c")
+N_SNAP = 4
+CHUNK = 2
+
+FAMILIES = {
+    "gcrn": DGNNConfig(name="chaos-gcrn", dgnn_type="integrated", gnn="gcn",
+                       rnn="lstm", dataflow="v3", in_dim=4, hidden=8,
+                       out_dim=4, n_gnn_layers=1, edge_dim=2),
+    "stacked": DGNNConfig(name="chaos-stacked", dgnn_type="stacked",
+                          gnn="gcn", rnn="gru", dataflow="v3", in_dim=4,
+                          hidden=8, out_dim=4, n_gnn_layers=1, edge_dim=2),
+    "evolve": DGNNConfig(name="chaos-evolve", dgnn_type="weights_evolved",
+                         gnn="gcn", rnn="gru", dataflow="v3", in_dim=4,
+                         hidden=8, out_dim=4, n_gnn_layers=1, edge_dim=2),
+}
+
+_FEAT = np.asarray(
+    np.random.default_rng(CHAOS_SEED).normal(size=(N_GLOBAL, 4)), np.float32)
+
+
+def _make_snaps(stream_ix, n_snap=N_SNAP):
+    r = np.random.default_rng(CHAOS_SEED * 7919 + stream_ix)
+    out = []
+    for t in range(n_snap):
+        e = int(r.integers(3, 7))
+        src = r.integers(0, N_GLOBAL, size=e)
+        dst = r.choice(N_GLOBAL, size=e, replace=False)  # in-degree 1
+        ef = np.asarray(r.normal(size=(e, 2)), np.float32)
+        out.append(COOSnapshot(src=src, dst=dst, edge_feat=ef, t_index=t))
+    return out
+
+
+def _streams():
+    return {sid: _make_snaps(i) for i, sid in enumerate(SIDS)}
+
+
+def _server(family, level="v3", **plan_kw):
+    cfg = FAMILIES[family]
+    plan = api.plan(cfg, level=level, buckets=BUCKETS, stream_chunk=CHUNK,
+                    **plan_kw)
+    sess = api.BoosterSession(cfg, plan, n_global=N_GLOBAL, feat_table=_FEAT)
+    return SnapshotServer(session=sess)
+
+
+def _init(srv):
+    params, _ = srv.init(jax.random.PRNGKey(CHAOS_SEED))
+    states = {sid: srv.model.init_state(params, mode=srv.mode)
+              for sid in SIDS}
+    return params, states
+
+
+def _assert_tree_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _assert_no_serve_threads():
+    leaked = [t.name for t in threading.enumerate()
+              if t.name.startswith("dgnn-serve")]
+    assert not leaked, f"leaked serve threads: {leaked}"
+
+
+@pytest.fixture(scope="module")
+def baseline():
+    """Fault-free run_multi per family: the oracle the chaos runs'
+    survivors must match bit-for-bit."""
+    res = {}
+    for fam in sorted(FAMILIES):
+        srv = _server(fam)
+        params, states = _init(srv)
+        st, outs, stats = srv.run_multi(params, states, _streams())
+        assert not stats.tenant_errors
+        assert all(len(v) == N_SNAP for v in outs.values())
+        res[fam] = (st, outs)
+    _assert_no_serve_threads()
+    return res
+
+
+# --------------------------------------------- site x family isolation ----
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+@pytest.mark.parametrize("site", ["preprocess", "bucket", "launch", "evolve"])
+def test_fault_site_isolates_tenant(family, site, baseline):
+    """Every fault site x every family: tenant 'b' is quarantined with the
+    injected error attributed to it; the survivors' outputs AND final
+    recurrent states are bit-identical to the fault-free run."""
+    if site in ("preprocess", "bucket"):
+        # fires on b's 3rd snapshot: one full chunk of b is served first,
+        # proving partial results survive the quarantine
+        spec = FaultSpec(site=site, tenant="b", index=2)
+    else:
+        # persistent: every launch/commit involving b fails, so retrying
+        # the healthy co-batch WITHOUT b is the only way forward
+        spec = FaultSpec(site=site, tenant="b", index=0, count=99)
+    srv = _server(family, supervision="isolate",
+                  fault_plan=FaultPlan(specs=(spec,), seed=CHAOS_SEED))
+    params, states = _init(srv)
+    st, outs, stats = srv.run_multi(params, states, _streams())
+    base_st, base_outs = baseline[family]
+    assert isinstance(stats.tenants["b"].error, InjectedFault)
+    assert stats.tenants["b"].failed_site == site
+    assert len(outs["b"]) < N_SNAP
+    for sid in ("a", "c"):
+        assert stats.tenants[sid].ok
+        assert len(outs[sid]) == N_SNAP
+        for got, want in zip(outs[sid], base_outs[sid]):
+            np.testing.assert_array_equal(got, want)
+        _assert_tree_equal(st[sid], base_st[sid])
+    _assert_no_serve_threads()
+
+
+# ------------------------------------------------- retry + rollback ----
+
+
+def test_transient_launch_fault_retried_evolvegcn(baseline):
+    """A transient launch failure on EvolveGCN is survived by one retry
+    from the rolled-back checkpoint: no tenant is quarantined and the
+    final evolving weights equal the fault-free run EXACTLY — the weights
+    advanced once per live snapshot, never twice."""
+    fp = FaultPlan(specs=(FaultSpec(site="launch", index=0, count=1),),
+                   seed=CHAOS_SEED)
+    srv = _server("evolve", supervision="isolate", max_retries=2,
+                  retry_backoff_ms=1.0, fault_plan=fp)
+    params, states = _init(srv)
+    st, outs, stats = srv.run_multi(params, states, _streams())
+    base_st, base_outs = baseline["evolve"]
+    assert not stats.tenant_errors
+    assert stats.retries >= 1 and stats.rollbacks >= 1
+    for sid in SIDS:
+        for got, want in zip(outs[sid], base_outs[sid]):
+            np.testing.assert_array_equal(got, want)
+        _assert_tree_equal(st[sid], base_st[sid])
+
+
+def test_midcommit_evolve_fault_rolls_back_partial_write(baseline):
+    """An 'evolve'-site fault fires INSIDE the commit loop, after a
+    co-tenant's state was already written: rollback must undo the partial
+    commit so the replay serves every tenant exactly once."""
+    fp = FaultPlan(
+        specs=(FaultSpec(site="evolve", tenant="b", index=0, count=1),),
+        seed=CHAOS_SEED)
+    srv = _server("evolve", supervision="isolate", max_retries=1,
+                  retry_backoff_ms=1.0, fault_plan=fp)
+    params, states = _init(srv)
+    st, outs, stats = srv.run_multi(params, states, _streams())
+    base_st, base_outs = baseline["evolve"]
+    assert not stats.tenant_errors
+    assert stats.rollbacks >= 1
+    for sid in SIDS:
+        assert len(outs[sid]) == N_SNAP
+        for got, want in zip(outs[sid], base_outs[sid]):
+            np.testing.assert_array_equal(got, want)
+        _assert_tree_equal(st[sid], base_st[sid])
+
+
+# ------------------------------------------------- degradation ladder ----
+
+
+def test_degrade_to_solo_launches(baseline):
+    """A fault scoped to BATCHED launches (a poisoned co-batch) walks the
+    ladder to solo launches: every tenant is still served, bit-identical,
+    with the degradation visible in the stats."""
+    fp = FaultPlan(
+        specs=(FaultSpec(site="launch", scope="batched", index=0, count=99),),
+        seed=CHAOS_SEED)
+    srv = _server("gcrn", supervision="isolate", degrade=True, fault_plan=fp)
+    params, states = _init(srv)
+    st, outs, stats = srv.run_multi(params, states, _streams())
+    base_st, base_outs = baseline["gcrn"]
+    assert not stats.tenant_errors
+    assert stats.degraded_launches >= len(SIDS)
+    for sid in SIDS:
+        for got, want in zip(outs[sid], base_outs[sid]):
+            np.testing.assert_array_equal(got, want)
+        _assert_tree_equal(st[sid], base_st[sid])
+
+
+def test_degrade_to_xla_oracle(baseline):
+    """A fault scoped to the KERNEL path (batched AND solo launches fail)
+    degrades to the pure-XLA oracle via the force-ref gate: results keep
+    flowing, numerically equal to the kernel path within float tolerance."""
+    fp = FaultPlan(
+        specs=(FaultSpec(site="launch", scope="kernel", index=0, count=999),),
+        seed=CHAOS_SEED)
+    srv = _server("gcrn", supervision="isolate", degrade=True, fault_plan=fp)
+    params, states = _init(srv)
+    st, outs, stats = srv.run_multi(params, states, _streams())
+    base_st, base_outs = baseline["gcrn"]
+    assert not stats.tenant_errors
+    assert stats.degraded_launches >= len(SIDS)
+    for sid in SIDS:
+        assert len(outs[sid]) == N_SNAP
+        for got, want in zip(outs[sid], base_outs[sid]):
+            np.testing.assert_allclose(got, want, atol=1e-5)
+        for x, y in zip(jax.tree_util.tree_leaves(st[sid]),
+                        jax.tree_util.tree_leaves(base_st[sid])):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       atol=1e-5)
+
+
+# ------------------------------------------------------- deadlines ----
+
+
+def test_launch_timeout_discards_and_retries(baseline):
+    """A delay injected into the SECOND launch (the first is exempt — it
+    pays compilation) trips the plan deadline: the overdue result is
+    discarded, counted, and the chunk is replayed to completion."""
+    fp = FaultPlan(
+        specs=(FaultSpec(site="launch", index=1, count=1, delay_ms=2000.0),),
+        seed=CHAOS_SEED)
+    srv = _server("gcrn", supervision="isolate", max_retries=3,
+                  retry_backoff_ms=1.0, launch_timeout_ms=1000.0,
+                  fault_plan=fp)
+    params, states = _init(srv)
+    st, outs, stats = srv.run_multi(params, states, _streams())
+    base_st, base_outs = baseline["gcrn"]
+    assert not stats.tenant_errors
+    assert stats.timeouts >= 1
+    assert stats.retries >= 1
+    for sid in SIDS:
+        for got, want in zip(outs[sid], base_outs[sid]):
+            np.testing.assert_array_equal(got, want)
+        _assert_tree_equal(st[sid], base_st[sid])
+
+
+# ---------------------------------------------- single-tenant + non-v3 ----
+
+
+def test_run_isolate_returns_partial_outputs():
+    """Single-tenant ``run`` under supervision="isolate": a mid-stream
+    fault stops the stream, keeps the already-committed chunk, and records
+    the error instead of raising."""
+    srv = _server("gcrn")
+    params, _ = _init(srv)
+    state = srv.model.init_state(params, mode="v3")
+    base_state, base_outs, _ = srv.run(params, state, _make_snaps(0))
+
+    fp = FaultPlan(
+        specs=(FaultSpec(site="preprocess", tenant="stream", index=2),),
+        seed=CHAOS_SEED)
+    srv_f = _server("gcrn", supervision="isolate", fault_plan=fp)
+    params_f, _ = _init(srv_f)
+    state = srv_f.model.init_state(params_f, mode="v3")
+    _, outs, stats = srv_f.run(params_f, state, _make_snaps(0))
+    assert len(outs) == CHUNK  # first chunk committed before the fault
+    assert isinstance(stats.tenants["stream"].error, InjectedFault)
+    for got, want in zip(outs, base_outs[:CHUNK]):
+        np.testing.assert_array_equal(got, want)
+    _assert_no_serve_threads()
+
+
+def test_run_multi_isolate_nonstream_mode():
+    """The per-snapshot (non-v3) device loop honors the same isolation
+    contract: a preprocess fault quarantines its tenant, survivors match
+    the fault-free run bit-for-bit."""
+    srv = _server("gcrn", level="o1")
+    params, states = _init(srv)
+    _, base_outs, base_stats = srv.run_multi(params, states, _streams())
+    assert not base_stats.tenant_errors
+
+    fp = FaultPlan(
+        specs=(FaultSpec(site="preprocess", tenant="b", index=2),),
+        seed=CHAOS_SEED)
+    srv_f = _server("gcrn", level="o1", supervision="isolate", fault_plan=fp)
+    params, states = _init(srv_f)
+    _, outs, stats = srv_f.run_multi(params, states, _streams())
+    assert isinstance(stats.tenants["b"].error, InjectedFault)
+    assert len(outs["b"]) < N_SNAP
+    for sid in ("a", "c"):
+        assert len(outs[sid]) == N_SNAP
+        for got, want in zip(outs[sid], base_outs[sid]):
+            np.testing.assert_array_equal(got, want)
+    _assert_no_serve_threads()
+
+
+# ------------------------------------------------- shutdown hygiene ----
+
+
+def test_shutdown_leaves_no_threads_on_strict_failure():
+    """The strict path raises — but only AFTER a clean shutdown: no
+    producer thread outlives run_multi, queues are drained."""
+    fp = FaultPlan(
+        specs=(FaultSpec(site="preprocess", tenant="b", index=0),),
+        seed=CHAOS_SEED)
+    srv = _server("gcrn", fault_plan=fp)  # supervision="strict" default
+    params, states = _init(srv)
+    with pytest.raises(InjectedFault):
+        srv.run_multi(params, states, _streams())
+    _assert_no_serve_threads()
+
+
+# --------------------------------------------- boundary validation ----
+
+
+def _bad_snap(kind):
+    src = np.asarray([1, 2]), np.asarray([3, 4])
+    if kind == "shape":
+        return COOSnapshot(src=np.asarray([1, 2]), dst=np.asarray([3]),
+                           edge_feat=np.ones((2, 2), np.float32), t_index=0)
+    if kind == "rows":
+        return COOSnapshot(src=src[0], dst=src[1],
+                           edge_feat=np.ones((3, 2), np.float32), t_index=0)
+    if kind == "negative":
+        return COOSnapshot(src=np.asarray([-1, 2]), dst=src[1],
+                           edge_feat=np.ones((2, 2), np.float32), t_index=0)
+    if kind == "range":
+        return COOSnapshot(src=np.asarray([1, N_GLOBAL]), dst=src[1],
+                           edge_feat=np.ones((2, 2), np.float32), t_index=0)
+    if kind == "nan":
+        ef = np.ones((2, 2), np.float32)
+        ef[1, 0] = np.nan
+        return COOSnapshot(src=src[0], dst=src[1], edge_feat=ef, t_index=0)
+    raise AssertionError(kind)
+
+
+@pytest.mark.parametrize("kind", ["shape", "rows", "negative", "range",
+                                  "nan"])
+def test_validate_snapshot_rejects(kind):
+    with pytest.raises(SnapshotValidationError) as ei:
+        validate_snapshot(_bad_snap(kind), N_GLOBAL, tenant="t0")
+    assert ei.value.tenant == "t0"
+    assert ei.value.site == "preprocess"
+    # a healthy snapshot passes
+    validate_snapshot(_make_snaps(0)[0], N_GLOBAL)
+
+
+def test_run_strict_raises_on_malformed_snapshot():
+    srv = _server("gcrn")
+    params, _ = _init(srv)
+    state = srv.model.init_state(params, mode="v3")
+    stream = _make_snaps(0)[:1] + [_bad_snap("negative")]
+    with pytest.raises(SnapshotValidationError):
+        srv.run(params, state, stream)
+    _assert_no_serve_threads()
+
+
+def test_run_multi_isolate_quarantines_malformed_tenant():
+    srv = _server("gcrn", supervision="isolate")
+    params, states = _init(srv)
+    streams = _streams()
+    streams["b"] = streams["b"][:1] + [_bad_snap("nan")]
+    _, outs, stats = srv.run_multi(params, states, streams)
+    err = stats.tenants["b"].error
+    assert isinstance(err, SnapshotValidationError)
+    assert err.tenant == "b"
+    for sid in ("a", "c"):
+        assert stats.tenants[sid].ok
+        assert len(outs[sid]) == N_SNAP
+    _assert_no_serve_threads()
+
+
+# ------------------------------------------------ plan/spec validation ----
+
+
+def test_fault_spec_and_plan_validation():
+    with pytest.raises(ValueError):
+        FaultSpec(site="nope")
+    with pytest.raises(ValueError):
+        FaultSpec(site="launch", scope="nope")
+    with pytest.raises(ValueError):
+        FaultSpec(site="evolve", scope="batched")  # scope narrows launch only
+    with pytest.raises(ValueError):
+        FaultSpec(site="launch", count=0)
+    with pytest.raises(ValueError):
+        FaultSpec(site="launch", index=-1)
+    with pytest.raises(ValueError):
+        FaultSpec(site="launch", delay_ms=-1.0)
+    with pytest.raises(ValueError):
+        FaultPlan(specs=("not a spec",))
+    with pytest.raises(ValueError):
+        FaultPlan(seed="zero")
+
+
+def test_plan_validates_supervision_fields():
+    cfg = FAMILIES["gcrn"]
+    with pytest.raises(ValueError):
+        api.plan(cfg, level="v3", supervision="maybe")
+    with pytest.raises(ValueError):
+        api.plan(cfg, level="v3", max_retries=-1)
+    with pytest.raises(ValueError):
+        api.plan(cfg, level="v3", retry_backoff_ms=-1.0)
+    with pytest.raises(ValueError):
+        api.plan(cfg, level="v3", launch_timeout_ms=0.0)
+    with pytest.raises(ValueError):
+        api.plan(cfg, level="v3", fault_plan="chaos please")
+
+
+# ------------------------------------------- calibration fallback ----
+
+
+def test_measured_guard_calibration_failure_warns_and_falls_back():
+    """The measured promotion guard must not die (or stay silent) when
+    calibration fails: it warns, records the reason, and the static
+    bucket_cost proxy takes over."""
+    srv = _server("gcrn", promote_buckets=2.0, promotion_guard="measured")
+    params, _ = _init(srv)
+
+    def boom(*a, **k):
+        raise RuntimeError("calibration kaboom")
+
+    srv._launch_ragged = boom
+    with pytest.warns(RuntimeWarning, match="falling back"):
+        cost = srv._promotion_cost(params)
+    assert cost is bucket_cost
+    assert "kaboom" in srv._calib_error
