@@ -8,6 +8,8 @@ machine-trackable across PRs.
 """
 from __future__ import annotations
 
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -16,7 +18,7 @@ from repro import api
 from repro.kernels import ref
 
 from benchmarks.common import load_stream, time_step_fn, write_stream_bench
-from repro.configs.dgnn import BC_ALPHA
+from repro.configs.dgnn import BC_ALPHA, DGNNConfig
 
 # row name -> StreamPlan.as_dict() for rows executed through the plan API
 # (written into BENCH_streams.json alongside the measurements)
@@ -114,6 +116,7 @@ def run() -> list[tuple[str, float, str]]:
     rows.extend(run_evolve_stream_vs_per_step())
     rows.extend(run_batched_streams())
     rows.extend(run_evolve_batched_streams())
+    rows.extend(run_serve_schedulers())
     return rows
 
 
@@ -411,6 +414,131 @@ def run_batched_streams(B: int = 8, t_steps: int = 4, n: int = 64,
         [(single[i], h0B[i], c0B[i]) for i in range(B)], iters)
     return _dispatch_rows("gcrn", B, t_steps, t_seq, t_bat, path,
                           node_mask=batch[5], plan=pB)
+
+
+def run_serve_schedulers(n_backlog: int = 24, n_inc_snaps: int = 6,
+                         n_inc_tenants: int = 3, interval_ms: float = 50.0,
+                         chunk: int = 4, repeats: int = 2
+                         ) -> list[tuple[str, float, str]]:
+    """Round-based vs continuous serve scheduler under a SKEWED workload:
+    one tenant with a deep snapshot backlog (all available at t=0 — a
+    client replaying history) plus latency-sensitive incremental tenants
+    whose snapshots ARRIVE one every ``interval_ms``.
+
+    The headline number is the incremental tenants' p99 SOJOURN latency
+    (commit wall-clock minus snapshot arrival, from ``ServeStats.
+    commit_ms`` and an arrival clock stamped in the stream iterators).
+    The round loop gathers a full chunk from EVERY tenant behind a
+    barrier before launching, so an incremental snapshot waits for its
+    chunk-mates to trickle in; the continuous scheduler serves whatever
+    is ready each tick and drains the backlog ``prefill_chunk`` at a time
+    in the gaps. Each scheduler gets one unpaced warm-up run (jit cache)
+    plus ``repeats`` paced runs, best p99 reported — launch signatures
+    depend on tick composition, so a first paced run can still hit a
+    stray compile.
+    """
+    cfg = DGNNConfig(name="bench-sched-gcrn", dgnn_type="integrated",
+                     gnn="gcn", rnn="lstm", dataflow="v3", in_dim=4,
+                     hidden=8, out_dim=4, n_gnn_layers=1, edge_dim=2)
+    from repro.graph.coo import COOSnapshot
+    from repro.serve import SnapshotServer
+
+    n_global = 32
+    rngs = np.random.default_rng(11)
+    feat = np.asarray(rngs.normal(size=(n_global, 4)), np.float32)
+
+    def make_snaps(n_snap, seed):
+        r = np.random.default_rng(seed)
+        out = []
+        for t in range(n_snap):
+            e = int(r.integers(3, 7))
+            out.append(COOSnapshot(
+                src=r.integers(0, n_global, size=e),
+                dst=r.choice(n_global, size=e, replace=False),
+                edge_feat=np.asarray(r.normal(size=(e, 2)), np.float32),
+                t_index=t))
+        return out
+
+    tenant_snaps = {"backlog": make_snaps(n_backlog, 100)}
+    inc_sids = [f"inc{i}" for i in range(n_inc_tenants)]
+    for i, sid in enumerate(inc_sids):
+        tenant_snaps[sid] = make_snaps(n_inc_snaps, 200 + i)
+
+    def paced(sid, arrivals):
+        def gen():
+            for i, s in enumerate(tenant_snaps[sid]):
+                time.sleep(interval_ms / 1e3)
+                arrivals[(sid, i)] = time.perf_counter()
+                yield s
+        return gen()
+
+    rows = []
+    variants = (("rounds", {}),
+                ("continuous", dict(scheduler="continuous",
+                                    state_pool_pages=n_inc_tenants + 1,
+                                    prefill_chunk=2)))
+    for sched, kw in variants:
+        # pads sized to the tiny synthetic graphs: launch cost must sit
+        # well under the arrival interval, the regime continuous batching
+        # exists for (the default 640-node pads would make every launch
+        # slower than the arrivals and the device the only bottleneck)
+        plan = api.plan(cfg, level="v3", stream_chunk=chunk, queue_depth=64,
+                        n_pad=32, e_pad=128, k_max=8, **kw)
+        sess = api.BoosterSession(cfg, plan, n_global=n_global,
+                                  feat_table=feat)
+        srv = SnapshotServer(session=sess)
+        params, _ = srv.init(jax.random.PRNGKey(0))
+
+        # warm every (B, T) launch signature a tick could compose (tick
+        # composition is timing-dependent, so an un-warmed signature would
+        # charge a few hundred ms of CPU compile to whichever snapshot's
+        # launch hits it first and poison the latency percentiles)
+        from repro.core import stack_time
+        ps = srv._preprocess(tenant_snaps["backlog"][0])
+        state = srv.model.init_state(params, mode=srv.mode)
+        for b_sig in (1, 2, 4):
+            for t_sig in (1, 2, 4):
+                st_b = jax.tree.map(lambda *xs: jnp.stack(xs, 0),
+                                    *([state] * b_sig))
+                _, out = srv._launch_ragged(
+                    params, st_b, [stack_time([ps] * t_sig)] * b_sig,
+                    np.asarray([t_sig] * b_sig, np.int32))
+                jax.block_until_ready(out)
+
+        def run_once(pace):
+            arrivals: dict = {}
+            streams = {"backlog": list(tenant_snaps["backlog"])}
+            for sid in inc_sids:
+                streams[sid] = (paced(sid, arrivals) if pace
+                                else list(tenant_snaps[sid]))
+            states = {sid: srv.model.init_state(params, mode=srv.mode)
+                      for sid in streams}
+            _, outs, stats = srv.run_multi(params, states, streams)
+            assert not stats.tenant_errors
+            assert all(len(outs[s]) == len(tenant_snaps[s]) for s in streams)
+            return arrivals, stats
+
+        run_once(pace=False)  # warm the jit cache / launch signatures
+        best = None
+        for _ in range(repeats):
+            arrivals, stats = run_once(pace=True)
+            soj = [stats.commit_ms[sid][i]
+                   - (arrivals[(sid, i)] - srv._t0_run) * 1e3
+                   for sid in inc_sids for i in range(n_inc_snaps)]
+            p99 = float(np.percentile(soj, 99))
+            if best is None or p99 < best[0]:
+                served = sum(len(v) for v in stats.commit_ms.values())
+                best = (p99, float(np.median(soj)), stats, served)
+        p99, p50, stats, served = best
+        thru = served / (stats.total_ms / 1e3)
+        rows.append((_planned(f"serve/sched_{sched}_gcrn_skewed", plan),
+                     p99 * 1e3,  # ledger unit is us_per_call
+                     f"p99_ms={p99:.2f},p50_ms={p50:.2f},"
+                     f"wall_ms={stats.total_ms:.0f},"
+                     f"thru={thru:.0f}_snap/s,launches={stats.launches},"
+                     f"ticks={stats.ticks},prefill={stats.prefill_chunks},"
+                     f"evictions={stats.evictions}"))
+    return rows
 
 
 if __name__ == "__main__":

@@ -107,6 +107,10 @@ class StreamPlan:
     queue_depth: int = 2              # host->device queue (ping-pong = 2)
     promote_buckets: Optional[float] = None  # max promotion overhead ratio
     promotion_guard: str = "static"   # "static" proxy | "measured" times
+    # multi-tenant scheduling (docs/serve_scheduler.md)
+    scheduler: str = "rounds"         # "rounds" barrier | "continuous" ticks
+    state_pool_pages: Optional[int] = None  # paged tenant-state pool size
+    prefill_chunk: Optional[int] = None     # backlog chunk quota per tick
     # fault isolation / recovery (docs/serve_robustness.md)
     supervision: str = "strict"       # "strict" raise | "isolate" per tenant
     max_retries: int = 0              # chunk-launch retries (rolled-back)
@@ -204,6 +208,31 @@ def _validate(p: StreamPlan) -> None:
     if p.promotion_guard == "measured" and p.promote_buckets is None:
         raise ValueError("promotion_guard='measured' without "
                          "promote_buckets: nothing to guard")
+    if p.scheduler not in ("rounds", "continuous"):
+        raise ValueError(f"scheduler={p.scheduler!r}: 'rounds' or "
+                         "'continuous'")
+    if p.scheduler == "continuous" and p.level != "v3":
+        raise ValueError("the continuous-batching scheduler composes "
+                         "ragged stream-engine launches; "
+                         f"level={p.level!r} has no stream kernel")
+    if p.state_pool_pages is not None:
+        if p.scheduler != "continuous":
+            raise ValueError("state_pool_pages is a continuous-scheduler "
+                             "capability (scheduler='continuous')")
+        if not (isinstance(p.state_pool_pages, int)
+                and p.state_pool_pages >= 1):
+            raise ValueError(f"state_pool_pages={p.state_pool_pages!r}: "
+                             "need an int >= 1 (None = unbounded)")
+    if p.prefill_chunk is not None:
+        if p.scheduler != "continuous":
+            raise ValueError("prefill_chunk is a continuous-scheduler "
+                             "capability (scheduler='continuous')")
+        if not (isinstance(p.prefill_chunk, int)
+                and 1 <= p.prefill_chunk <= p.stream_chunk):
+            raise ValueError(
+                f"prefill_chunk={p.prefill_chunk!r}: need an int in "
+                f"[1, stream_chunk={p.stream_chunk}] (a prefill chunk "
+                "larger than the launch chunk cap cannot be composed)")
     if p.supervision not in ("strict", "isolate"):
         raise ValueError(f"supervision={p.supervision!r}: 'strict' or "
                          "'isolate'")
@@ -232,6 +261,8 @@ def plan(cfg: Optional[DGNNConfig] = None, *, family: Optional[str] = None,
          n_pad: int = 640, e_pad: int = 4096, k_max: int = 64,
          buckets=None, stream_chunk: int = 8, queue_depth: int = 2,
          promote_buckets=None, promotion_guard: str = "static",
+         scheduler: str = "rounds", state_pool_pages=None,
+         prefill_chunk=None,
          supervision: str = "strict", max_retries: int = 0,
          retry_backoff_ms: float = 10.0, launch_timeout_ms=None,
          degrade: bool = False, fault_plan=None) -> StreamPlan:
@@ -262,6 +293,8 @@ def plan(cfg: Optional[DGNNConfig] = None, *, family: Optional[str] = None,
         buckets=None if buckets is None else tuple(tuple(b) for b in buckets),
         stream_chunk=stream_chunk, queue_depth=queue_depth,
         promote_buckets=promote_buckets, promotion_guard=promotion_guard,
+        scheduler=scheduler, state_pool_pages=state_pool_pages,
+        prefill_chunk=prefill_chunk,
         supervision=supervision, max_retries=max_retries,
         retry_backoff_ms=retry_backoff_ms,
         launch_timeout_ms=launch_timeout_ms, degrade=degrade,

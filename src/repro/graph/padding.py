@@ -28,11 +28,22 @@ def pow2_target(real: int, cap: int | None = None) -> int:
 
     The padded sizes a jit cache is allowed to hold — log2 many per bucket.
     Shared by the serve chunk/batch padding and the plan front-end (one
-    copy; serve/engine.py previously reimplemented it)."""
+    copy; serve/engine.py previously reimplemented it).
+
+    Contract (changed after the silent-undersize bug): the result is
+    ALWAYS >= ``real``. A ``cap`` smaller than ``real`` cannot be
+    satisfied — a padding target below the true length would truncate
+    live data — so it raises ``ValueError`` instead of silently returning
+    ``cap``; a satisfiable cap clamps the power of two down to ``cap``
+    (still >= ``real``, just no longer a power of two)."""
+    if cap is not None and cap < real:
+        raise ValueError(
+            f"pow2_target: cap={cap} < real={real} — a padding target "
+            "smaller than the real length would truncate live data")
     target = 1
     while target < real:
         target *= 2
-    return min(target, cap) if cap is not None else target
+    return max(min(target, cap), 1) if cap is not None else target
 
 
 @jax.tree_util.register_dataclass

@@ -12,6 +12,8 @@ from repro.serve.faults import (
     validate_snapshot,
 )
 from repro.serve.lm_serve import generate, make_serve_step
+from repro.serve.scheduler import ContinuousScheduler
+from repro.serve.state_pool import PoolOverflow, TenantStatePool
 from repro.serve.supervision import (
     SupervisionPolicy,
     TenantResult,
@@ -19,6 +21,7 @@ from repro.serve.supervision import (
 )
 
 __all__ = [
+    "ContinuousScheduler",
     "FAULT_SCOPES",
     "FAULT_SITES",
     "FaultInjector",
@@ -26,12 +29,14 @@ __all__ = [
     "FaultSpec",
     "InjectedFault",
     "LaunchTimeout",
+    "PoolOverflow",
     "ServeFault",
     "ServeStats",
     "SnapshotServer",
     "SnapshotValidationError",
     "SupervisionPolicy",
     "TenantResult",
+    "TenantStatePool",
     "TenantSupervisor",
     "generate",
     "make_serve_step",

@@ -145,8 +145,17 @@ class ServeStats:
     # quarantined tenants, per-tenant recovery counters, output lists
     tenants: dict = field(default_factory=dict)
     # measured-guard calibration fell back to the static proxy (repr of
-    # the error; None = calibration ok or never requested)
+    # the LAST error; None = calibration ok or never requested)
     calibration_fallback: Optional[str] = None
+    # continuous-scheduler signals (docs/serve_scheduler.md)
+    ticks: int = 0            # engine ticks (0 under the round scheduler)
+    prefill_chunks: int = 0   # backlog chunks served under the prefill quota
+    evictions: int = 0        # tenant-state pages spilled to host
+    recoveries: int = 0       # tenant-state pages restored from host
+    # per-tenant commit timestamps: {sid: [ms since run start, one per
+    # committed snapshot, in stream order]} — sojourn latency is this minus
+    # the caller's arrival clock (benchmarks/kernel_bench does exactly that)
+    commit_ms: dict = field(default_factory=dict)
 
     @property
     def mean_latency_ms(self) -> float:
@@ -177,7 +186,10 @@ class SnapshotServer:
                  buckets: Optional[tuple] = None,
                  stream_chunk: int = 8,
                  promote_buckets: Optional[float] = None,
-                 promotion_guard: str = "static", *,
+                 promotion_guard: str = "static",
+                 scheduler: str = "rounds",
+                 state_pool_pages: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None, *,
                  plan=None, session=None):
         from repro import api
 
@@ -198,7 +210,10 @@ class SnapshotServer:
                     queue_depth=queue_depth, buckets=buckets,
                     stream_chunk=stream_chunk,
                     promote_buckets=promote_buckets,
-                    promotion_guard=promotion_guard)
+                    promotion_guard=promotion_guard,
+                    scheduler=scheduler,
+                    state_pool_pages=state_pool_pages,
+                    prefill_chunk=prefill_chunk)
             session = api.BoosterSession(cfg, plan, n_global=n_global,
                                          feat_table=feat_table)
         self.session = session
@@ -225,6 +240,9 @@ class SnapshotServer:
         self.stream_chunk = self.plan.stream_chunk
         self.queue_depth = self.plan.queue_depth
         self.promote_buckets = self.plan.promote_buckets
+        self.scheduler = self.plan.scheduler
+        self.state_pool_pages = self.plan.state_pool_pages
+        self.prefill_chunk = self.plan.prefill_chunk
         self._bucket_ms: Optional[dict] = None  # measured-guard calibration
         self._calib_error: Optional[str] = None  # fallback-to-static reason
         self._policy = SupervisionPolicy.from_plan(self.plan)
@@ -233,6 +251,8 @@ class SnapshotServer:
         self._fault_exempt = False   # calibration launches skip probes
         self._launch_ctx: tuple = ()  # live sids of the in-flight launch
         self._warmed: set = set()    # launch signatures past first compile
+        self._t0_run = 0.0           # run-start clock for commit stamps
+        self._commit_ms: dict = {}   # {sid: [commit ms since run start]}
         self._step = jax.jit(
             lambda p, s, snap: self.model.step(p, s, snap, mode=self.mode))
         # every v3 serve launch takes the batched ragged-T entry: chunk
@@ -255,8 +275,17 @@ class SnapshotServer:
     def _probe(self, site: str, tenant=None) -> None:
         """Host-side fault-site probe (preprocess/bucket/evolve sites;
         launch-site probes fire inside the traced program via the
-        kernels/ops fault hook)."""
-        if self._injector is not None and not self._fault_exempt:
+        kernels/ops fault hook).
+
+        Deliberately does NOT consult ``_fault_exempt``: calibration never
+        reaches a host site, but it flips that flag on the device loop
+        while producer threads run host probes concurrently — gating here
+        would let a calibration window swallow a concurrent tenant's
+        preprocess/bucket occurrence counts (the stats/occurrence-window
+        leak the calibration-isolation regression test pins). Only
+        ``_launch_probe`` is gated, and only calibration launches run
+        under the flag, on the same thread that sets it."""
+        if self._injector is not None:
             self._injector.probe(
                 site, tenants=() if tenant is None else (tenant,))
 
@@ -471,8 +500,13 @@ class SnapshotServer:
         for sid, _, _ in group:
             self._probe("evolve", tenant=sid)
             states[sid] = staged_states[sid]
+        # commit wall-clock (ms since run start) recorded per snapshot —
+        # only after the whole evolve loop, so a rolled-back commit never
+        # stamps timestamps for outputs it did not serve
+        now_ms = (time.perf_counter() - self._t0_run) * 1e3
         for sid, chunk, _ in group:
             outs[sid].extend(staged_outs[sid])
+            self._commit_ms.setdefault(sid, []).extend([now_ms] * len(chunk))
             lat.extend([dt] * len(chunk))
             if degraded:
                 sup.note_degraded(sid)
@@ -596,7 +630,12 @@ class SnapshotServer:
             degraded_launches=totals.get("degraded_launches", 0),
             timeouts=ctr.get("timeouts", 0),
             tenants=dict(sup.results) if sup is not None else {},
-            calibration_fallback=self._calib_error)
+            calibration_fallback=self._calib_error,
+            ticks=ctr.get("ticks", 0),
+            prefill_chunks=ctr.get("prefill", 0),
+            evictions=totals.get("evictions", 0),
+            recoveries=totals.get("recoveries", 0),
+            commit_ms=dict(self._commit_ms))
 
     def run(self, params, state, snaps: Iterable[COOSnapshot]) -> tuple:
         """Returns (final_state, outputs list, ServeStats).
@@ -643,6 +682,7 @@ class SnapshotServer:
         th = threading.Thread(target=producer, daemon=True,
                               name=f"dgnn-serve-producer-{SOLO_SID}")
         t_start = time.perf_counter()
+        self._t0_run, self._commit_ms = t_start, {}
         th.start()
         outs: list = []
         lat: list = []
@@ -725,7 +765,15 @@ class SnapshotServer:
         promotion guard (plan.promotion_guard == "measured"); returns None
         (static fallback) if any bucket fails to calibrate — the fallback
         is WARNED about and recorded in ``ServeStats.calibration_fallback``
-        instead of failing silently."""
+        instead of failing silently.
+
+        Calibration launches are WARM-UP, not serving: they go straight
+        through ``_launch_ragged`` (never ``_stage_group``), so they touch
+        neither ``ServeStats.launches`` nor ``per_snapshot_ms``, and the
+        ``_fault_exempt`` window keeps them out of launch-site occurrence
+        counting — stats and fault windows on a run are identical with
+        ``promotion_guard`` "measured" or "static" (pinned by the
+        calibration-isolation regression test)."""
         din = self.feat_table.shape[1]
         de = self.cfg.edge_dim
         T = pow2_target(self.stream_chunk, cap=self.stream_chunk)
@@ -753,35 +801,45 @@ class SnapshotServer:
             self._fault_exempt = False
         return times
 
+    def _measured_cost(self, bucket: tuple) -> float:
+        """Per-bucket cost under the measured guard, falling back to the
+        static ``bucket_cost`` proxy PER MISS: a bucket absent from the
+        calibration table (first seen after calibration ran) must not
+        crash the promotion pass with a bare KeyError mid-serve — it gets
+        the static estimate, and the miss is warned about and recorded in
+        ``ServeStats.calibration_fallback``."""
+        try:
+            return self._bucket_ms[bucket]
+        except KeyError:
+            self._calib_error = (f"bucket {bucket!r} missing from the "
+                                 "measured calibration table")
+            warnings.warn(
+                f"measured promotion guard: {self._calib_error}; using the "
+                "static bucket_cost proxy for it", RuntimeWarning)
+            return bucket_cost(bucket)
+
     def _promotion_cost(self, params):
         """Cost function for promote_bucket_groups: measured per-bucket
         step times when the plan asks for the adaptive guard (calibrated
-        lazily, once), else the static padded-compute proxy."""
+        lazily, once), else the static padded-compute proxy. Measured
+        lookups degrade per miss instead of raising (``_measured_cost``)."""
         if self.plan.promotion_guard != "measured":
             return bucket_cost
         if self._bucket_ms is None and self._calib_error is None:
             self._bucket_ms = self._calibrate_bucket_times(params)
         if self._bucket_ms is None:
             return bucket_cost  # calibration failed: static fallback
-        return lambda b: self._bucket_ms[b]
+        return self._measured_cost
 
-    def run_multi(self, params, states: dict, streams: dict) -> tuple:
-        """Serve many independent client streams concurrently.
-
-        ``streams``: {stream_id: iterable of COOSnapshot}; ``states``:
-        {stream_id: recurrent state} (one store per tenant — state is never
-        shared across clients). Returns (states, {stream_id: [outputs]},
-        ServeStats). Outputs per stream are in that stream's snapshot order.
-
-        Device loop: rounds of up-to-``stream_chunk`` snapshots per stream;
-        same-bucket chunks from different streams batch into one V3 launch,
-        supervised per the plan's fault-isolation policy (see the module
-        docstring): with ``supervision="isolate"`` a failing tenant is
-        quarantined — its error lands in ``stats.tenants[sid]``, its
-        outputs stop at the last committed chunk — and the surviving
-        tenants are unaffected; the strict default re-raises the first
-        failure after a clean shutdown.
-        """
+    def _spawn_producers(self, streams: dict) -> tuple:
+        """Start one host preprocessing thread per tenant stream (shared
+        by the round-based and continuous device loops). Returns
+        ``(queues, pre_ms, stop_event, threads)`` with the threads already
+        running. Each queue carries ``(LocalSnapshot | PaddedSnapshot,
+        dims)`` items in stream order, then ``None`` at end-of-stream — or
+        a ``BaseException`` if the producer failed (validation, no-fit
+        bucket, injected fault), which the device loop turns into a
+        quarantine/raise per policy."""
         sids = sorted(streams)
         qs = {sid: queue.Queue(maxsize=max(self.queue_depth,
                                            self.stream_chunk))
@@ -827,9 +885,53 @@ class SnapshotServer:
         threads = [threading.Thread(target=producer, args=(sid,), daemon=True,
                                     name=f"dgnn-serve-producer-{sid}")
                    for sid in sids]
-        t_start = time.perf_counter()
         for th in threads:
             th.start()
+        return qs, pre_ms, stop, threads
+
+    def run_multi(self, params, states: dict, streams: dict) -> tuple:
+        """Serve many independent client streams concurrently.
+
+        ``streams``: {stream_id: iterable of COOSnapshot}; ``states``:
+        {stream_id: recurrent state} (one store per tenant — state is never
+        shared across clients). Returns (states, {stream_id: [outputs]},
+        ServeStats). Outputs per stream are in that stream's snapshot order.
+
+        Two device loops, selected by ``plan.scheduler``:
+
+        ``"rounds"`` (default): rounds of up-to-``stream_chunk`` snapshots
+        per stream with a barrier between rounds; same-bucket chunks from
+        different streams batch into one V3 launch.
+
+        ``"continuous"``: iteration-level scheduling — no round barrier; a
+        tick composes a fresh batch from whatever is READY, long backlogs
+        are served in ``prefill_chunk``-bounded chunks interleaved with
+        other tenants' steps, and per-tenant recurrent state lives in a
+        paged pool (``state_pool_pages``) with LRU eviction to host and
+        transparent recovery (serve/scheduler.ContinuousScheduler,
+        docs/serve_scheduler.md). Outputs and final states are
+        bit-identical to the round scheduler's.
+
+        Both are supervised per the plan's fault-isolation policy (see the
+        module docstring): with ``supervision="isolate"`` a failing tenant
+        is quarantined — its error lands in ``stats.tenants[sid]``, its
+        outputs stop at the last committed chunk — and the surviving
+        tenants are unaffected; the strict default re-raises the first
+        failure after a clean shutdown.
+        """
+        if self.plan.scheduler == "continuous":
+            from repro.serve.scheduler import ContinuousScheduler
+
+            return ContinuousScheduler(self).run(params, states, streams)
+        return self._run_multi_rounds(params, states, streams)
+
+    def _run_multi_rounds(self, params, states: dict, streams: dict) -> tuple:
+        """The round-based multi-tenant device loop (plan.scheduler ==
+        "rounds"); see ``run_multi`` for the contract."""
+        sids = sorted(streams)
+        t_start = time.perf_counter()
+        self._t0_run, self._commit_ms = t_start, {}
+        qs, pre_ms, stop, threads = self._spawn_producers(streams)
         outs: dict = {sid: [] for sid in sids}
         lat: list = []
         ctr = {"live": 0, "padded": 0, "promoted": 0, "launches": 0,

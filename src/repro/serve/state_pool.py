@@ -1,0 +1,121 @@
+"""Paged pool of per-tenant recurrent state for the continuous scheduler.
+
+The multi-tenant serve engine keeps one recurrent-state store per tenant
+(h/c node states, or EvolveGCN's evolving weight matrices). With millions
+of tenants those stores cannot all stay device-resident: the pool bounds
+how many are (``plan.state_pool_pages`` pages, one tenant's full state
+per page — the vLLM block-table idea at tenant granularity, which is the
+granularity the stream kernel loads state at), spills the least-recently
+-scheduled tenants to host memory, and transparently restores a spilled
+tenant the next time the scheduler composes it into a launch.
+
+Eviction reuses the supervision checkpoint machinery
+(``TenantSupervisor.evict_to_host`` / ``recover_from_host``): a spill is
+the same reference checkpoint a chunk launch takes, materialized on the
+host; recovery re-uploads it. f32 state round-trips the host copy
+bit-for-bit, so a tenant that was evicted and recovered mid-stream serves
+outputs identical to one that stayed resident — the differential tests
+pin exactly that.
+
+The pool owns the BLOCK TABLE: ``sid -> "device" | "host"``. The device
+side is the engine's ordinary ``states`` dict (the launch path is
+unchanged — ``_stage_group`` still reads ``states[sid]``); the host side
+is ``self.host_pages``. ``acquire`` is the only way states move, so a
+checkpoint taken for an in-flight launch can never be evicted under it:
+the scheduler acquires the tick's working set BEFORE the supervised
+launch, and eviction only ever picks tenants OUTSIDE the set being
+acquired.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+
+from repro.serve.supervision import TenantSupervisor
+
+
+class PoolOverflow(RuntimeError):
+    """A working set larger than the pool was requested."""
+
+
+class TenantStatePool:
+    """Fixed-capacity paging of the per-tenant recurrent-state dict.
+
+    ``states`` is the engine's device-resident state dict (mutated in
+    place); ``pages=None`` disables eviction (every tenant stays
+    resident — the pool is then pure bookkeeping).
+    """
+
+    def __init__(self, states: dict, pages: int | None,
+                 supervisor: TenantSupervisor):
+        if pages is not None and pages < 1:
+            raise ValueError(f"pages={pages!r}: need >= 1 or None")
+        self.states = states
+        self.pages = pages
+        self.sup = supervisor
+        self.host_pages: dict = {}
+        # LRU order over RESIDENT tenants (oldest first)
+        self._lru: OrderedDict = OrderedDict(
+            (sid, None) for sid in sorted(states, key=repr))
+        if pages is not None and len(states) > pages:
+            # over-committed from the start: spill down to capacity before
+            # the first tick (arbitrary-but-deterministic victim order)
+            for sid in list(self._lru):
+                if len(self._lru) <= pages:
+                    break
+                self._evict(sid)
+
+    # ---------------------------------------------------------- queries ----
+
+    @property
+    def resident(self) -> set:
+        return set(self._lru)
+
+    def location(self, sid) -> str:
+        """Block-table lookup: 'device' or 'host'."""
+        if sid in self._lru:
+            return "device"
+        if sid in self.host_pages:
+            return "host"
+        raise KeyError(f"tenant {sid!r} is not in the pool")
+
+    # ---------------------------------------------------------- paging ----
+
+    def _evict(self, sid) -> None:
+        self.host_pages[sid] = self.sup.evict_to_host(self.states, sid)
+        del self._lru[sid]
+
+    def _recover(self, sid) -> None:
+        self.sup.recover_from_host(self.states, sid,
+                                   self.host_pages.pop(sid))
+        self._lru[sid] = None
+
+    def acquire(self, sids) -> None:
+        """Make every tenant in ``sids`` device-resident (recovering host
+        pages), evicting least-recently-scheduled tenants OUTSIDE the set
+        as needed, and mark the set most-recently used. Raises
+        :class:`PoolOverflow` if the set alone exceeds the pool — the
+        scheduler bounds its tick working set to the pool size, so hitting
+        this means a scheduler bug, not load."""
+        working = list(dict.fromkeys(sids))
+        if self.pages is not None and len(working) > self.pages:
+            raise PoolOverflow(
+                f"working set of {len(working)} tenants exceeds the "
+                f"{self.pages}-page state pool")
+        for sid in working:
+            if sid not in self._lru:
+                if self.pages is not None:
+                    keep = set(working)
+                    while len(self._lru) >= self.pages:
+                        victim = next(s for s in self._lru if s not in keep)
+                        self._evict(victim)
+                self._recover(sid)
+        for sid in working:  # MRU update
+            self._lru.move_to_end(sid)
+
+    def flush(self) -> None:
+        """Restore every host page to the device-resident dict (end of the
+        serve run: the engine returns the full ``states`` dict, wherever
+        each tenant's pages lived mid-run). Recovery counters move with
+        it, so forced end-of-run restores stay visible in the stats."""
+        for sid in list(self.host_pages):
+            self._recover(sid)

@@ -31,6 +31,10 @@ import time
 from dataclasses import dataclass, field
 from typing import Optional
 
+import jax
+import jax.numpy as jnp
+import numpy as np
+
 # Degradation ladder rungs, slowest-recovery last: the batched stream
 # launch, a solo (B=1) stream launch per member, the pure-XLA oracle via
 # the kernels/ops force-ref gate. Later rungs are slower but share no
@@ -51,6 +55,8 @@ class TenantResult:
     retries: int = 0
     rollbacks: int = 0
     degraded_launches: int = 0
+    evictions: int = 0   # state pages spilled to host (continuous scheduler)
+    recoveries: int = 0  # state pages restored from host
 
     @property
     def ok(self) -> bool:
@@ -129,6 +135,31 @@ class TenantSupervisor:
             states[sid] = state
             self.results[sid].rollbacks += 1
 
+    # -------------------------------------------- eviction / recovery ----
+    #
+    # Eviction is checkpointing under a different name: spilling a
+    # tenant's recurrent state out of the device-resident pool takes the
+    # SAME reference checkpoint a chunk launch takes, then materializes it
+    # on the host; recovery re-uploads it bit-for-bit (f32 round-trips the
+    # host copy exactly). The paged tenant-state pool
+    # (serve/state_pool.TenantStatePool) drives these.
+
+    def evict_to_host(self, states: dict, sid) -> dict:
+        """Spill ``sid``'s recurrent state to a host-resident page: take
+        the reference checkpoint, materialize it as numpy, and REMOVE the
+        device entry. Returns the host page (a numpy pytree)."""
+        ckpt = self.checkpoint(states, [sid])
+        page = jax.tree.map(lambda a: np.asarray(a), ckpt[sid])
+        del states[sid]
+        self.results[sid].evictions += 1
+        return page
+
+    def recover_from_host(self, states: dict, sid, page) -> None:
+        """Restore an evicted tenant's state from its host page (the
+        inverse of :meth:`evict_to_host`; bit-identical round trip)."""
+        states[sid] = jax.tree.map(jnp.asarray, page)
+        self.results[sid].recoveries += 1
+
     # ------------------------------------------------------ recording ----
 
     def note_retry(self, sids, attempt: int, sleep: bool = True) -> None:
@@ -163,6 +194,8 @@ class TenantSupervisor:
             "retries": sum(r.retries for r in rs),
             "rollbacks": sum(r.rollbacks for r in rs),
             "degraded_launches": sum(r.degraded_launches for r in rs),
+            "evictions": sum(r.evictions for r in rs),
+            "recoveries": sum(r.recoveries for r in rs),
             "tenant_errors": {sid: r.error for sid, r in self.results.items()
                               if not r.ok},
         }

@@ -96,7 +96,13 @@ def test_padding_target_helpers_single_copy():
     """The pow2/round-up rounding lives in graph/padding.py only: serve
     and the kernel wrappers import it (the dedup satellite)."""
     assert [pow2_target(x) for x in (1, 2, 3, 5, 8)] == [1, 2, 4, 8, 8]
-    assert pow2_target(9, cap=8) == 8
+    # a satisfiable cap clamps (result stays >= real) ...
+    assert pow2_target(5, cap=6) == 6
+    assert pow2_target(8, cap=8) == 8
+    # ... but an unsatisfiable cap raises instead of silently returning a
+    # target SMALLER than the real length (the truncation bug)
+    with pytest.raises(ValueError, match="cap=8 < real=9"):
+        pow2_target(9, cap=8)
     assert round_up(1, 32) == 32 and round_up(64, 32) == 64
     from repro.kernels import ops, stream_fused
     from repro.graph import padding

@@ -131,6 +131,29 @@ def test_choose_bucket_overflow_raises(chain):
         choose_bucket(last[0] + 1, 1, 1, chain)
 
 
+@given(st.integers(0, 1 << 20), st.one_of(st.none(), st.integers(0, 1 << 20)))
+def test_pow2_target_never_undersizes(real, cap):
+    """pow2_target contract: the padding target is NEVER smaller than the
+    real length. Whenever ``cap >= real`` the result satisfies
+    ``real <= target <= max(cap, 1)`` and without a cap it is the exact
+    next power of two; an unsatisfiable cap (< real) raises instead of
+    silently returning it (the serve-chunk truncation bug)."""
+    from repro.graph.padding import pow2_target
+
+    if cap is not None and cap < real:
+        with pytest.raises(ValueError, match="smaller than the real"):
+            pow2_target(real, cap=cap)
+        return
+    target = pow2_target(real, cap=cap)
+    assert target >= real
+    assert target >= 1
+    if cap is not None:
+        assert target <= max(cap, 1)
+    else:
+        assert target & (target - 1) == 0  # a power of two
+        assert target < 2 * max(real, 1)   # the NEXT one, not a later one
+
+
 @given(st.integers(0, 2**31), st.integers(1, 4))
 def test_time_splitter_partition(seed, width):
     rng = np.random.default_rng(seed)

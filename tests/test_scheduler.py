@@ -1,0 +1,363 @@
+"""Continuous-batching scheduler suite (docs/serve_scheduler.md).
+
+What these tests pin:
+
+  * the continuous scheduler's outputs AND final recurrent states are
+    BIT-IDENTICAL to the round-based loop, per tenant, for all three DGNN
+    families — under ragged arrivals, paged-pool eviction/recovery of an
+    active tenant mid-stream, and chunked-prefill interleaving;
+  * the paged tenant-state pool: LRU victim choice, block-table locations,
+    bit-exact host round-trips, overflow rejection, end-of-run flush;
+  * the fault contract holds unchanged under the scheduler: quarantine
+    leaves survivors bit-identical, transient faults are retried from the
+    rolled-back checkpoint, no producer threads leak;
+  * the serve-path bugfix sweep: the measured promotion guard falls back
+    to the static proxy PER MISS instead of raising a bare KeyError
+    (recorded in ``ServeStats.calibration_fallback``), and measured-guard
+    calibration never leaks into serve stats or fault occurrence windows
+    (stats identical with ``promotion_guard`` "measured" vs "static").
+"""
+import os
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.configs.dgnn import DGNNConfig
+from repro.graph.coo import COOSnapshot
+from repro.graph.padding import bucket_cost
+from repro.serve import (
+    FaultPlan,
+    FaultSpec,
+    InjectedFault,
+    PoolOverflow,
+    SnapshotServer,
+    SupervisionPolicy,
+    TenantStatePool,
+    TenantSupervisor,
+)
+
+SEED = int(os.environ.get("CHAOS_SEED", "0"))
+N_GLOBAL = 32
+# all generated streams fit the small bucket (see tests/test_chaos.py)
+BUCKETS = ((16, 32, 8), (32, 64, 8))
+CHUNK = 2
+
+FAMILIES = {
+    "gcrn": DGNNConfig(name="sched-gcrn", dgnn_type="integrated", gnn="gcn",
+                       rnn="lstm", dataflow="v3", in_dim=4, hidden=8,
+                       out_dim=4, n_gnn_layers=1, edge_dim=2),
+    "stacked": DGNNConfig(name="sched-stacked", dgnn_type="stacked",
+                          gnn="gcn", rnn="gru", dataflow="v3", in_dim=4,
+                          hidden=8, out_dim=4, n_gnn_layers=1, edge_dim=2),
+    "evolve": DGNNConfig(name="sched-evolve", dgnn_type="weights_evolved",
+                         gnn="gcn", rnn="gru", dataflow="v3", in_dim=4,
+                         hidden=8, out_dim=4, n_gnn_layers=1, edge_dim=2),
+}
+
+_FEAT = np.asarray(
+    np.random.default_rng(SEED).normal(size=(N_GLOBAL, 4)), np.float32)
+
+# ragged arrivals: per-tenant stream lengths deliberately unequal
+LENS = {"a": 7, "b": 3, "c": 5}
+
+
+def _make_snaps(stream_ix, n_snap):
+    r = np.random.default_rng(SEED * 7919 + stream_ix)
+    out = []
+    for t in range(n_snap):
+        e = int(r.integers(3, 7))
+        src = r.integers(0, N_GLOBAL, size=e)
+        dst = r.choice(N_GLOBAL, size=e, replace=False)  # in-degree 1
+        ef = np.asarray(r.normal(size=(e, 2)), np.float32)
+        out.append(COOSnapshot(src=src, dst=dst, edge_feat=ef, t_index=t))
+    return out
+
+
+def _streams(lens=LENS):
+    return {sid: _make_snaps(i, n)
+            for i, (sid, n) in enumerate(sorted(lens.items()))}
+
+
+def _server(family, **plan_kw):
+    cfg = FAMILIES[family]
+    plan = api.plan(cfg, level="v3", buckets=BUCKETS, stream_chunk=CHUNK,
+                    **plan_kw)
+    sess = api.BoosterSession(cfg, plan, n_global=N_GLOBAL, feat_table=_FEAT)
+    return SnapshotServer(session=sess)
+
+
+def _init(srv, sids):
+    params, _ = srv.init(jax.random.PRNGKey(SEED))
+    states = {sid: srv.model.init_state(params, mode=srv.mode)
+              for sid in sids}
+    return params, states
+
+
+def _assert_tree_equal(a, b, msg=""):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=msg)
+
+
+def _assert_same_serve(streams, st_a, outs_a, st_b, outs_b):
+    for sid in streams:
+        assert len(outs_a[sid]) == len(outs_b[sid]) == len(streams[sid])
+        for t, (x, y) in enumerate(zip(outs_a[sid], outs_b[sid])):
+            np.testing.assert_array_equal(x, y, err_msg=f"{sid} t={t}")
+        _assert_tree_equal(st_a[sid], st_b[sid], msg=f"final state {sid}")
+
+
+def _assert_no_serve_threads():
+    leaked = [t.name for t in threading.enumerate()
+              if t.name.startswith("dgnn-serve")]
+    assert not leaked, f"leaked serve threads: {leaked}"
+
+
+def _serve(family, streams, **plan_kw):
+    srv = _server(family, **plan_kw)
+    params, states = _init(srv, streams)
+    return srv.run_multi(params, states, streams)
+
+
+# ------------------------------------------------ differential equivalence ----
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_continuous_matches_rounds_bit_identical(family):
+    """Tentpole invariant: continuous scheduling — arbitrary tick
+    composition, pool pressure (2 pages for 3 tenants, so an ACTIVE tenant
+    is evicted and recovered mid-stream), chunked prefill — serves every
+    tenant bit-identically to the round-based barrier loop, outputs and
+    final recurrent state both, under ragged arrivals."""
+    streams = _streams()
+    st_r, outs_r, stats_r = _serve(family, streams)
+    st_c, outs_c, stats_c = _serve(family, streams,
+                                   scheduler="continuous",
+                                   state_pool_pages=2, prefill_chunk=1)
+    _assert_same_serve(streams, st_r, outs_r, st_c, outs_c)
+    assert stats_r.ticks == 0  # rounds loop reports no ticks
+    assert stats_c.ticks > 0
+    # 3 tenants through 2 pages: eviction/recovery genuinely exercised,
+    # and every spill was eventually paged back in (flush included)
+    assert stats_c.evictions > 0
+    assert stats_c.recoveries == stats_c.evictions
+    # every committed snapshot carries a commit timestamp
+    assert {sid: len(v) for sid, v in stats_c.commit_ms.items()} == \
+        {sid: len(s) for sid, s in streams.items()}
+    _assert_no_serve_threads()
+
+
+def test_chunked_prefill_interleaves_backlog():
+    """A tenant with a deep snapshot backlog is served ``prefill_chunk``
+    snapshots per tick, interleaved with the incremental tenants — the
+    backlog never monopolizes launches — and the chunking is invisible in
+    the outputs (bit-identical to the round-based run)."""
+    streams = _streams({"deep": 16, "x": 3, "y": 3})
+    st_r, outs_r, _ = _serve("gcrn", streams)
+    # queue_depth > backlog so the producer hands the whole backlog to the
+    # first admission pass and the prefill quota provably engages
+    st_c, outs_c, stats = _serve("gcrn", streams, scheduler="continuous",
+                                 prefill_chunk=1, queue_depth=32)
+    _assert_same_serve(streams, st_r, outs_r, st_c, outs_c)
+    assert stats.prefill_chunks > 0
+    # the deep tenant needed many ticks; the incremental tenants' ticks
+    # ran concurrently inside them, not after
+    assert stats.ticks >= 16 // CHUNK
+
+
+def test_forced_eviction_recovery_is_bit_exact_evolvegcn():
+    """A 1-page pool over 3 tenants forces an eviction + recovery on
+    nearly every tick; the family with the most failure-prone state (the
+    evolving weight matrices) must serve bit-identically regardless."""
+    streams = _streams()
+    st_r, outs_r, _ = _serve("evolve", streams)
+    st_c, outs_c, stats = _serve("evolve", streams, scheduler="continuous",
+                                 state_pool_pages=1)
+    _assert_same_serve(streams, st_r, outs_r, st_c, outs_c)
+    assert stats.evictions >= 2
+    assert stats.recoveries == stats.evictions
+    # per-tenant counters surfaced through the supervision results
+    assert sum(r.evictions for r in stats.tenants.values()) == stats.evictions
+
+
+# ------------------------------------------------------- state pool unit ----
+
+
+def test_tenant_state_pool_paging_unit():
+    """Block-table locations, LRU victim order, bit-exact host round
+    trips, overflow rejection, end-of-run flush."""
+    sids = ["a", "b", "c"]
+    sup = TenantSupervisor(sids, SupervisionPolicy(isolate=True))
+    mk = lambda i: {"h": jnp.arange(4, dtype=jnp.float32) * (i + 1),
+                    "c": jnp.ones((2, 2), jnp.float32) * (i + 1)}
+    states = {sid: mk(i) for i, sid in enumerate(sids)}
+    want = {sid: jax.tree.map(np.asarray, s) for sid, s in states.items()}
+    pool = TenantStatePool(states, pages=2, supervisor=sup)
+    # over-committed at construction: spilled down to capacity
+    assert len(pool.resident) == 2 and len(pool.host_pages) == 1
+    # acquiring the evicted tenant pages it back in, evicting the LRU
+    # resident that is NOT in the working set
+    (victim,) = set(sids) - pool.resident
+    pool.acquire([victim])
+    assert pool.location(victim) == "device"
+    assert len(pool.resident) == 2
+    # LRU: 'victim' is now MRU; acquiring the other evicted tenant must
+    # not evict it
+    (other,) = set(sids) - pool.resident
+    pool.acquire([other])
+    assert pool.location(victim) == "device"
+    assert pool.location(other) == "device"
+    with pytest.raises(PoolOverflow):
+        pool.acquire(sids)
+    with pytest.raises(KeyError):
+        pool.location("nope")
+    pool.flush()
+    assert not pool.host_pages and pool.resident == set(sids)
+    for sid in sids:  # f32 host round trip is bit-exact
+        _assert_tree_equal(states[sid], want[sid], msg=sid)
+    totals = sup.totals()
+    assert totals["evictions"] == totals["recoveries"] > 0
+
+
+# ------------------------------------------------------ chaos under ticks ----
+
+
+def test_continuous_quarantine_leaves_survivors_bit_identical():
+    """The docs/serve_robustness.md contract under the scheduler: a
+    persistent launch fault pinned to tenant 'b' quarantines it while the
+    survivors — co-batched across arbitrary tick compositions, through
+    pool evictions — end bit-identical to a fault-free ROUND-BASED run."""
+    streams = _streams()
+    st_base, outs_base, _ = _serve("gcrn", streams)
+    fp = FaultPlan(specs=(FaultSpec(site="launch", tenant="b", index=0,
+                                    count=99),), seed=SEED)
+    st, outs, stats = _serve("gcrn", streams, scheduler="continuous",
+                             state_pool_pages=2, supervision="isolate",
+                             fault_plan=fp)
+    assert isinstance(stats.tenants["b"].error, InjectedFault)
+    assert len(outs["b"]) < LENS["b"]
+    for sid in ("a", "c"):
+        assert stats.tenants[sid].ok
+        for got, base in zip(outs[sid], outs_base[sid]):
+            np.testing.assert_array_equal(got, base)
+        _assert_tree_equal(st[sid], st_base[sid], msg=sid)
+    _assert_no_serve_threads()
+
+
+def test_continuous_transient_fault_retried_from_checkpoint():
+    """A transient launch fault under the scheduler is replayed from the
+    rolled-back checkpoint: nobody is quarantined and the evolving
+    weights advance exactly once per served snapshot (final state equals
+    the fault-free run EXACTLY)."""
+    streams = _streams()
+    st_base, outs_base, _ = _serve("evolve", streams)
+    fp = FaultPlan(specs=(FaultSpec(site="launch", index=0, count=1),),
+                   seed=SEED)
+    st, outs, stats = _serve("evolve", streams, scheduler="continuous",
+                             state_pool_pages=2, supervision="isolate",
+                             max_retries=2, retry_backoff_ms=1.0,
+                             fault_plan=fp)
+    assert not stats.tenant_errors
+    assert stats.retries >= 1 and stats.rollbacks >= 1
+    _assert_same_serve(streams, st_base, outs_base, st, outs)
+
+
+# ------------------------------------------- bugfix sweep regressions ----
+
+
+def test_measured_cost_missing_bucket_falls_back_per_miss():
+    """Satellite bugfix: a bucket absent from the measured calibration
+    table must cost out via the static proxy for THAT bucket — never a
+    bare KeyError mid-serve — and the miss is warned about and recorded
+    in ``ServeStats.calibration_fallback``."""
+    srv = _server("gcrn", promote_buckets=2.0, promotion_guard="measured")
+    params, _ = _init(srv, ["a"])
+    srv._bucket_ms = {BUCKETS[0]: 0.5}  # calibration "ran" but is partial
+    cost = srv._promotion_cost(params)
+    assert cost(BUCKETS[0]) == 0.5
+    with pytest.warns(RuntimeWarning, match="missing from the measured"):
+        got = cost(BUCKETS[1])
+    assert got == bucket_cost(BUCKETS[1])
+    assert "missing" in srv._calib_error
+    # the recorded reason surfaces on the run's stats
+    st, outs, stats = srv.run_multi(params, {"a": srv.model.init_state(
+        params, mode=srv.mode)}, {"a": _make_snaps(0, 3)})
+    assert "missing" in stats.calibration_fallback
+
+
+def test_calibration_never_leaks_into_stats():
+    """Satellite bugfix: measured-guard calibration launches are warm-up,
+    not serving — every ServeStats counter and the output stream must be
+    IDENTICAL between ``promotion_guard="measured"`` and ``"static"`` on
+    a fault-free run."""
+    streams = _streams()
+    runs = {}
+    for guard in ("static", "measured"):
+        st, outs, stats = _serve("gcrn", streams, promote_buckets=100.0,
+                                 promotion_guard=guard)
+        runs[guard] = (st, outs, stats)
+    st_s, outs_s, stats_s = runs["static"]
+    st_m, outs_m, stats_m = runs["measured"]
+    assert stats_m.calibration_fallback is None  # calibration succeeded
+    _assert_same_serve(streams, st_s, outs_s, st_m, outs_m)
+    for f in ("launches", "live_snapshots", "padded_snapshots",
+              "promoted_chunks", "retries", "rollbacks",
+              "degraded_launches", "timeouts", "ticks", "prefill_chunks"):
+        assert getattr(stats_s, f) == getattr(stats_m, f), f
+    assert len(stats_s.per_snapshot_ms) == len(stats_m.per_snapshot_ms)
+
+
+def test_calibration_never_leaks_into_fault_windows():
+    """An occurrence-indexed launch fault must fire on the same REAL
+    launch whether or not calibration ran: calibration launches are
+    exempt from launch-site occurrence counting, and (the concurrency
+    half of the fix) host-site probes from producer threads are counted
+    even while the calibration window's ``_fault_exempt`` flag is up."""
+    streams = _streams()
+    outcomes = {}
+    for guard in ("static", "measured"):
+        fp = FaultPlan(specs=(FaultSpec(site="launch", tenant="b", index=0,
+                                        count=99),), seed=SEED)
+        st, outs, stats = _serve("gcrn", streams, scheduler="continuous",
+                                 promote_buckets=100.0,
+                                 promotion_guard=guard,
+                                 supervision="isolate", fault_plan=fp)
+        assert isinstance(stats.tenants["b"].error, InjectedFault)
+        outcomes[guard] = {sid: len(outs[sid]) for sid in streams}
+    assert outcomes["static"] == outcomes["measured"]
+    # concurrency half, pinned directly: _probe ignores _fault_exempt
+    srv = _server("gcrn", supervision="isolate", fault_plan=FaultPlan(
+        specs=(FaultSpec(site="preprocess", tenant="a", index=0),),
+        seed=SEED))
+    srv._fault_exempt = True  # a calibration window is open on another thread
+    with pytest.raises(InjectedFault):
+        srv._probe("preprocess", tenant="a")
+
+
+# ------------------------------------------------------ plan validation ----
+
+
+def test_plan_validates_scheduler_fields():
+    cfg = FAMILIES["gcrn"]
+    plan = api.plan(cfg, level="v3", scheduler="continuous",
+                    state_pool_pages=4, prefill_chunk=2)
+    assert plan.scheduler == "continuous"
+    with pytest.raises(ValueError, match="scheduler"):
+        api.plan(cfg, level="v3", scheduler="sometimes")
+    with pytest.raises(ValueError, match="continuous"):
+        api.plan(cfg, level="v2", scheduler="continuous")
+    with pytest.raises(ValueError, match="state_pool_pages"):
+        api.plan(cfg, level="v3", state_pool_pages=4)  # needs continuous
+    with pytest.raises(ValueError, match="state_pool_pages"):
+        api.plan(cfg, level="v3", scheduler="continuous", state_pool_pages=0)
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        api.plan(cfg, level="v3", prefill_chunk=2)  # needs continuous
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        api.plan(cfg, level="v3", scheduler="continuous", stream_chunk=4,
+                 prefill_chunk=8)  # > stream_chunk
