@@ -59,12 +59,19 @@ FAMILY_LEVELS = {
     "gcrn": ("baseline", "o1", "v2", "v3"),
     "stacked": ("baseline", "o1", "v1", "v2", "v3"),
     "evolve": ("baseline", "o1", "v1", "v3"),
+    # temporal-contract families (PR 8): the event-stream and static
+    # specs have no historical module-overlap/fusion ladders — baseline
+    # (per-step XLA) or the stream engine.
+    "tgn": ("baseline", "v3"),
+    "static_gcn": ("baseline", "v3"),
 }
 
 _FAMILY_OF_TYPE = {
     "integrated": "gcrn",
     "stacked": "stacked",
     "weights_evolved": "evolve",
+    "event_memory": "tgn",
+    "static": "static_gcn",
 }
 
 # TPU tiling alignment for the node/state tile knobs (sublane granularity;
@@ -93,6 +100,11 @@ class StreamPlan:
 
     family: str                       # stream-engine registry key
     level: str = "v3"                 # dataflow level (ablation ladder)
+    # time semantics, DERIVED from the family's cell spec (None = fill in
+    # at construction): "dense" snapshot stream | "event" ragged event
+    # stream | "static" T=1 no-recurrence. Passing a value that
+    # contradicts the registry raises — the plan cannot lie about time.
+    temporal: Optional[str] = None
     tn: int = 128                     # node-tile rows (grid J axis)
     td: Optional[int] = None          # state-feature block (grid D axis)
     batch: int = 1                    # B independent streams per launch
@@ -144,6 +156,17 @@ def _validate(p: StreamPlan) -> None:
         raise ValueError(
             f"dataflow level {p.level!r} is not defined for family "
             f"{p.family!r}; supported: {FAMILY_LEVELS[p.family]}")
+    temporal = _ops.family_temporal(p.family)
+    if p.temporal is None:
+        object.__setattr__(p, "temporal", temporal)  # frozen: fill-in
+    elif p.temporal != temporal:
+        raise ValueError(
+            f"temporal={p.temporal!r} contradicts family {p.family!r}, "
+            f"whose cell spec declares {temporal!r} time semantics")
+    if p.temporal == "static" and p.state_pool_pages is not None:
+        raise ValueError(
+            "state_pool_pages pages RECURRENT tenant state; family "
+            f"{p.family!r} is static (stateless) — nothing to page")
     if not (isinstance(p.tn, int) and p.tn > 0 and p.tn % _TILE_ALIGN == 0):
         raise ValueError(f"tn={p.tn!r}: node tile must be a positive "
                          f"multiple of {_TILE_ALIGN}")
@@ -256,6 +279,7 @@ def _validate(p: StreamPlan) -> None:
 
 
 def plan(cfg: Optional[DGNNConfig] = None, *, family: Optional[str] = None,
+         temporal: Optional[str] = None,
          level: Optional[str] = None, tn: int = 128, td=_UNSET,
          batch: int = 1, lengths=None, device: Optional[DeviceSpec] = None,
          n_pad: int = 640, e_pad: int = 4096, k_max: int = 64,
@@ -285,7 +309,8 @@ def plan(cfg: Optional[DGNNConfig] = None, *, family: Optional[str] = None,
     if family is None:
         raise ValueError("plan() needs a DGNNConfig or a family name")
     return StreamPlan(
-        family=family, level=level if level is not None else "v3", tn=tn,
+        family=family, temporal=temporal,
+        level=level if level is not None else "v3", tn=tn,
         td=None if td is _UNSET else td, batch=batch,
         lengths=None if lengths is None else tuple(int(t) for t in lengths),
         device=device if device is not None else DeviceSpec(),

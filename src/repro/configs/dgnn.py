@@ -12,10 +12,15 @@ from dataclasses import dataclass
 @dataclass(frozen=True)
 class DGNNConfig:
     name: str
-    dgnn_type: str         # "stacked" | "integrated" | "weights_evolved"
+    # "stacked" | "integrated" | "weights_evolved" (dense snapshot
+    # streams) | "static" (T=1, no recurrence) | "event_memory" (ragged
+    # timestamped event streams) — api.family_for maps each onto its
+    # stream-engine registry family, whose cell spec declares the
+    # matching temporal contract.
+    dgnn_type: str
     gnn: str               # "gcn"
-    rnn: str               # "gru" | "lstm"
-    dataflow: str          # preferred engine: "v1" | "v2"
+    rnn: str               # "gru" | "lstm" | "none"
+    dataflow: str          # preferred engine: "v1" | "v2" | "v3"
     in_dim: int = 64       # raw node-feature dim
     hidden: int = 128      # GNN/RNN hidden width
     n_gnn_layers: int = 2
@@ -57,6 +62,29 @@ STACKED = DGNNConfig(
     dataflow="v1",
 )
 
+# degenerate static family (GenGNN-style, no recurrence): T=1 snapshots
+# fold onto the engine's batch axis — the serve express lane's workload.
+STATIC_GCN = DGNNConfig(
+    name="static-gcn",
+    dgnn_type="static",
+    gnn="gcn",
+    rnn="none",
+    dataflow="v3",
+)
+
+# event-driven temporal GNN (TGN/TGAT lineage): timestamped event
+# batches over a global node-memory store. NOT in DGNN_CONFIGS — the
+# snapshot-stream harness has no timestamps; tests build event streams
+# through graph/events.py (tests/test_temporal.py).
+TGN = DGNNConfig(
+    name="tgn",
+    dgnn_type="event_memory",
+    gnn="tgn",
+    rnn="gru",
+    dataflow="v3",
+    edge_dim=0,
+)
+
 
 @dataclass(frozen=True)
 class DatasetConfig:
@@ -74,5 +102,5 @@ class DatasetConfig:
 BC_ALPHA = DatasetConfig("bc-alpha", 107, 232, 578, 1686, 137, seed=1)
 UCI = DatasetConfig("uci", 118, 269, 501, 1534, 192, seed=2)
 
-DGNN_CONFIGS = {c.name: c for c in (EVOLVEGCN, GCRN_M2, STACKED)}
+DGNN_CONFIGS = {c.name: c for c in (EVOLVEGCN, GCRN_M2, STACKED, STATIC_GCN)}
 DATASETS = {d.name: d for d in (BC_ALPHA, UCI)}

@@ -66,10 +66,12 @@ import jax.numpy as jnp
 
 from repro.configs.dgnn import DGNNConfig
 from repro.core.evolvegcn import EvolveGCN
+from repro.core.gcn import StaticGCN
 from repro.core.gcrn import GCRN
 from repro.core.stacked import StackedDGNN
+from repro.core.tgn import TGNModel
 
-Model = Any  # EvolveGCN | GCRN | StackedDGNN
+Model = Any  # EvolveGCN | GCRN | StackedDGNN | StaticGCN | TGNModel
 
 
 def build_model(cfg: DGNNConfig, impl: str = "xla", n_global: int = 4096) -> Model:
@@ -79,6 +81,10 @@ def build_model(cfg: DGNNConfig, impl: str = "xla", n_global: int = 4096) -> Mod
         return GCRN(cfg, impl=impl, n_global=n_global)
     if cfg.dgnn_type == "stacked":
         return StackedDGNN(cfg, impl=impl, n_global=n_global)
+    if cfg.dgnn_type == "static":
+        return StaticGCN(cfg, impl=impl, n_global=n_global)
+    if cfg.dgnn_type == "event_memory":
+        return TGNModel(cfg, impl=impl, n_global=n_global)
     raise ValueError(cfg.dgnn_type)
 
 
@@ -150,7 +156,10 @@ def run_plan_batched(model: Model, params, states0, snaps_BT, plan,
     batch-capabilities: ``lengths`` (ragged per-stream T, masked in-launch)
     and ``device`` (DeviceSpec sharding of the B grid axis). Other levels
     vmap the per-stream engine (equal T only)."""
-    B = jax.tree.leaves(states0)[0].shape[0]
+    # static families carry an EMPTY state pytree — the batch size then
+    # comes from the snapshot leaves instead.
+    leaves = jax.tree.leaves(states0) or jax.tree.leaves(snaps_BT)
+    B = leaves[0].shape[0]
     if B != plan.batch:
         raise ValueError(f"plan.batch={plan.batch} but the state batch "
                          f"is {B}")
@@ -183,6 +192,12 @@ def _shim_plan(model: Model, mode: str, batch: int = 1):
 def run_stream(model: Model, params, state0, snaps_T, mode: str = "baseline"):
     """Deprecated: build a repro.api.StreamPlan instead (this shim does,
     then executes it). Returns (final_state, outputs (T, n_pad, out_dim))."""
+    import warnings
+
+    warnings.warn(
+        "core.dataflow.run_stream is deprecated: build a typed plan "
+        "(repro.api.plan / BoosterSession.run) instead",
+        DeprecationWarning, stacklevel=2)
     return run_plan(model, params, state0, snaps_T, _shim_plan(model, mode))
 
 
@@ -190,8 +205,15 @@ def run_batched(model: Model, params, states0, snaps_TB, mode: str = "baseline")
     """Deprecated: build a repro.api.StreamPlan instead (this shim does,
     then executes it). Batched streams in the historical (T, B, ...)
     layout; see ``run_plan_batched`` for the (B, T, ...) plan executor."""
-    B = jax.tree.leaves(states0)[0].shape[0]
+    import warnings
+
+    warnings.warn(
+        "core.dataflow.run_batched is deprecated: build a typed plan "
+        "(repro.api.plan / BoosterSession.run_batched) instead",
+        DeprecationWarning, stacklevel=2)
     snaps_BT = jax.tree.map(lambda a: jnp.swapaxes(a, 0, 1), snaps_TB)
+    leaves = jax.tree.leaves(states0) or jax.tree.leaves(snaps_BT)
+    B = leaves[0].shape[0]
     state, outs_BT = run_plan_batched(model, params, states0, snaps_BT,
                                       _shim_plan(model, mode, batch=B))
     return state, jnp.swapaxes(outs_BT, 0, 1)

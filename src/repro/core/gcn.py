@@ -87,3 +87,119 @@ def gcn_forward_weights(layers: list[dict], weights: list[jax.Array],
         q = dict(p, w=w)
         x = gcn_layer(q, snap, x, act=None if last else jax.nn.relu, impl=impl)
     return x
+
+
+class StaticGCN:
+    """The "static" temporal contract's model: a plain multi-layer GCN,
+    no recurrence, zero state (GenGNN-style non-temporal traffic).
+
+    A "stream" of static snapshots is just a batch of independent graphs:
+    ``step_stream`` folds the T axis onto the engine's batch axis (every
+    slot T=1 — the static cell spec rejects anything else) and
+    ``step_stream_batched`` folds (B, T) onto (B*T, 1), converting the
+    plan's ragged ``lengths`` into per-slot 0/1 liveness. Every dataflow
+    level computes the identical forward — the point of the family is the
+    serve engine's EXPRESS lane: stateless chunks co-batch into one
+    launch with no checkpoint/rollback overhead (serve/engine.py).
+    """
+
+    # cell spec this model dispatches to in the stream-engine registry
+    stream_family = "static_gcn"
+
+    def __init__(self, cfg, impl: str = "xla", n_global: int = 4096):
+        assert cfg.dgnn_type == "static"
+        self.cfg = cfg
+        self.impl = impl
+        self.n_global = n_global
+
+    def init(self, rng) -> dict:
+        cfg = self.cfg
+        keys = jax.random.split(rng, cfg.n_gnn_layers)
+        layers = []
+        din = cfg.in_dim
+        for l in range(cfg.n_gnn_layers):
+            dout = cfg.out_dim if l == cfg.n_gnn_layers - 1 else cfg.hidden
+            layers.append(init_gcn_layer(keys[l], din, dout,
+                                         cfg.edge_dim if l == 0 else 0))
+            din = dout
+        return {"gcn": layers}
+
+    def init_state(self, params: dict, mode: str = "baseline") -> dict:
+        return {}  # stateless: the engine skips init/copy-forward/drain
+
+    def step(self, params: dict, state: dict, snap: PaddedSnapshot, *,
+             mode: str = "baseline") -> tuple[dict, jax.Array]:
+        return state, gcn_forward(params["gcn"], snap, snap.node_feat,
+                                  impl=self.impl)
+
+    # ------------------------------------------------- stream engine ----
+
+    def _edge_aggs(self, params: dict, snaps):
+        """Per-layer pre-aggregated edge-message term (additive in the
+        ELL aggregation, so it factors out of the kernel); zero for
+        layers without edge weights (only layer 0 projects edges)."""
+        if params["gcn"][0].get("w_edge") is None:
+            return None
+        eidx = snaps.neigh_eidx
+        lead = eidx.shape[:-2]
+        n, k = eidx.shape[-2:]
+        flat = eidx.reshape(*lead, n * k, 1)
+        aggs = []
+        for p in params["gcn"]:
+            we = p.get("w_edge")
+            if we is None:
+                aggs.append(jnp.zeros((*lead, n, p["w"].shape[0]),
+                                      jnp.float32))
+                continue
+            emsg = snaps.edge_feat @ we
+            g = jnp.take_along_axis(emsg, flat, axis=-2)
+            g = g.reshape(*lead, n, k, emsg.shape[-1])
+            aggs.append((g * snaps.neigh_coef[..., None]).sum(axis=-2))
+        return aggs
+
+    def _stream_args(self, params: dict, snaps):
+        return (snaps.neigh_idx, snaps.neigh_coef, snaps.node_feat,
+                snaps.node_mask, [p["w"] for p in params["gcn"]],
+                [p["b"] for p in params["gcn"]],
+                self._edge_aggs(params, snaps))
+
+    def step_stream(self, params: dict, state: dict,
+                    snaps_T: PaddedSnapshot, *, tn=128, td="cfg"
+                    ) -> tuple[dict, jax.Array]:
+        """V3: T independent snapshots fold onto the engine's batch axis
+        (one launch, T batch slots of a single T=1 step each)."""
+        from repro.kernels import ops as kops
+
+        td = self.cfg.stream_td if td == "cfg" else td
+        snaps_B1 = jax.tree.map(lambda a: jnp.asarray(a)[:, None], snaps_T)
+        (outs,) = kops.stream_steps_batched(
+            self.stream_family, *self._stream_args(params, snaps_B1),
+            tn=tn, td=td)
+        return state, outs[:, 0]
+
+    def step_stream_batched(self, params: dict, state: dict,
+                            snaps_BT: PaddedSnapshot, *, tn=128, td="cfg",
+                            lengths=None, device=None, force_ref=False
+                            ) -> tuple[dict, jax.Array]:
+        """Batched V3: (B, T) independent snapshots fold onto (B*T, 1);
+        ragged ``lengths`` (per-stream T) become per-slot 0/1 liveness.
+        ``state`` passes through untouched (empty per slot)."""
+        from repro.kernels import ops as kops
+
+        td = self.cfg.stream_td if td == "cfg" else td
+        leaf = jax.tree.leaves(snaps_BT)[0]
+        B, T = leaf.shape[0], leaf.shape[1]
+        folded = jax.tree.map(
+            lambda a: jnp.asarray(a).reshape((B * T, 1) + a.shape[2:]),
+            snaps_BT)
+        slot_lens = None
+        if lengths is not None:
+            lens = jnp.asarray(lengths, jnp.int32)
+            t_axis = jnp.arange(T, dtype=jnp.int32)
+            slot_lens = (t_axis[None, :] < lens[:, None]).astype(
+                jnp.int32).reshape(B * T)
+        (outs,) = kops.stream_steps_batched(
+            self.stream_family, *self._stream_args(params, folded),
+            tn=tn, td=td, lengths=slot_lens, device=device,
+            force_ref=force_ref)
+        return state, outs.reshape((B, T) + outs.shape[2:])

@@ -1,5 +1,6 @@
 from repro.graph.coo import COOSnapshot, TemporalGraph, slice_snapshots, snapshot_stats
 from repro.graph.csr import LocalSnapshot, max_in_degree, renumber_and_normalize, to_ell
+from repro.graph.events import PaddedEventBlock, pad_event_block, unpad_event_block
 from repro.graph.padding import (
     DEFAULT_BUCKETS,
     PaddedSnapshot,
@@ -20,6 +21,7 @@ from repro.graph.synthetic import generate_temporal_graph
 __all__ = [
     "COOSnapshot", "TemporalGraph", "slice_snapshots", "snapshot_stats",
     "LocalSnapshot", "renumber_and_normalize", "to_ell", "max_in_degree",
+    "PaddedEventBlock", "pad_event_block", "unpad_event_block",
     "PaddedSnapshot", "pad_snapshot", "stack_streams", "choose_bucket",
     "choose_bucket_batch", "unpad_snapshot", "empty_like_padded",
     "empty_padded", "bucket_cost", "promote_bucket_groups",

@@ -329,6 +329,93 @@ def _evolve_launch(batched, neigh_idx, neigh_coef, node_feat, node_mask,
     return _evolve_unpack(outs, wT, n, dims, dims[-1][1], batched=True)
 
 
+# ----------------------------------------- temporal-contract launchers ----
+
+def _tgn_launch(batched, neigh_idx, neigh_coef, neigh_ts, node_feat,
+                renumber, node_mask, mem0, freq, w_in, wx, wh, b, *,
+                tn: int, td):
+    """Pad/pack + engine launch for the event-stream (TGN) family.
+
+    The T axis sequences EVENT BATCHES (graph/events.pad_event_block):
+    ``neigh_ts`` carries per-event-lane timestamps in the slot dense
+    families use for edge indices — same (..., n, k) shape, validated
+    here, zero on dead lanes (their coef is 0, so the time encoding of a
+    padded event contributes exactly zero)."""
+    if neigh_ts.shape != neigh_idx.shape:
+        raise ValueError(
+            f"tgn event timestamps must match the ELL lane shape: "
+            f"ts {neigh_ts.shape} vs idx {neigh_idx.shape}")
+    if not jnp.issubdtype(jnp.asarray(neigh_ts).dtype, jnp.floating):
+        raise ValueError(
+            f"tgn event timestamps must be floating, got "
+            f"{jnp.asarray(neigh_ts).dtype}")
+    if not batched:
+        outs, memT = _tgn_launch(
+            True, neigh_idx[None], neigh_coef[None], neigh_ts[None],
+            node_feat[None], renumber[None], node_mask[None], mem0[None],
+            freq, w_in, wx, wh, b, tn=tn, td=td)
+        return outs[0], memT[0]
+    # ts rides the eidx slot of the shared padder (same node-axis layout)
+    n, idx, coef, ts, x, ren, mask = _pad_stream(
+        neigh_idx, neigh_coef, neigh_ts, node_feat, renumber, node_mask, tn)
+    gidx, rowg = _stream_index_tables(ren, idx, mem0.shape[1])
+    h = mem0.shape[-1]
+    outs, memT = _stream.stream_call(
+        "tgn", gidx, coef, ts, x, rowg, mask, mem0, freq, w_in, wx, wh, b,
+        tn=tn, td=td, interpret=_interpret())
+    return outs[:, :, :n, :h], memT[..., :h]
+
+
+def _static_pack(neigh_idx, neigh_coef, node_feat, node_mask, weights,
+                 b_gcn, edge_aggs, tn: int, td):
+    """Padding/packing for the static (no-recurrence) family: the same
+    common-square ``dmax`` layout as the weights-evolved pack, minus the
+    GRU params and the live flag — weights are shared params, not
+    per-stream state."""
+    n = neigh_idx.shape[-2]
+    n2 = _pad_rows(n, tn)
+    dims = [(w.shape[-2], w.shape[-1]) for w in weights]
+    dmax = max(max(d) for d in dims)
+    if td is not None:
+        dmax = ((dmax + td - 1) // td) * td
+    idx = _pad_to(neigh_idx, n2, -2)
+    coef = _pad_to(neigh_coef, n2, -2)
+    x = _pad_to(_pad_to(node_feat, n2, -2), dmax, -1)
+    mask = _pad_to(node_mask, n2, -1)
+    w = _stack_padded(weights, dmax, batched=False)    # (L, dmax, dmax)
+    bg = jnp.stack([_pad_to(bb, dmax, 0) for bb in b_gcn])
+    if edge_aggs is None:
+        eagg = None  # static has_edge=False specialization in the kernel
+    else:
+        eagg = jnp.stack(
+            [_pad_to(_pad_to(ea, n2, -2), dmax, -1) for ea in edge_aggs],
+            axis=-3)
+    return n, dims, idx, coef, x, mask, w, bg, eagg
+
+
+def _static_launch(batched, neigh_idx, neigh_coef, node_feat, node_mask,
+                   weights, b_gcn, edge_aggs=None, *, tn: int, td):
+    """Pad/pack + engine launch for the static (no-recurrence) family.
+
+    T must be 1 on the engine path (the kernel raises otherwise):
+    independent snapshots fold onto the batch axis, which is what makes
+    the serve express lane a plain co-batched launch with no state
+    checkpointing. Returns a 1-tuple ``(outs,)`` — zero final states."""
+    if not batched:
+        ea = None if edge_aggs is None else [a[None] for a in edge_aggs]
+        (outs,) = _static_launch(
+            True, neigh_idx[None], neigh_coef[None], node_feat[None],
+            node_mask[None], weights, b_gcn, ea, tn=tn, td=td)
+        return (outs[0],)
+    n, dims, idx, coef, x, mask, w, bg, eagg = _static_pack(
+        neigh_idx, neigh_coef, node_feat, node_mask, weights, b_gcn,
+        edge_aggs, tn, td)
+    (outs,) = _stream.stream_call(
+        "static_gcn", idx, coef, x, mask, w, bg, eagg,
+        tn=tn, td=td, interpret=_interpret())
+    return (outs[..., :n, :dims[-1][1]],)
+
+
 # ------------------------------------------------- unified stream entry ----
 # family name -> ((solo oracle, batched oracle), engine launcher,
 # batched-arg index set, ragged-axis index map). The oracle column is the
@@ -348,12 +435,30 @@ _STREAM_DISPATCH = {
     "evolve": ((_ref.evolve_stream_ref, _ref.evolve_stream_batched_ref),
                _evolve_launch, frozenset(range(6)) | {10},
                dict(coef=1, mask=3, ren=None, live=4)),
+    "tgn": ((_ref.tgn_stream_ref, _ref.tgn_stream_batched_ref),
+            _tgn_launch, frozenset(range(7)),
+            dict(coef=1, mask=5, ren=4, live=None)),
+    "static_gcn": ((_ref.static_gcn_stream_ref,
+                    _ref.static_gcn_stream_batched_ref),
+                   _static_launch, frozenset(range(4)) | {6},
+                   dict(coef=1, mask=3, ren=None, live=None)),
 }
 
 
 def stream_families() -> tuple:
     """Families servable by the stream engine (== stream_fused.REGISTRY)."""
     return tuple(sorted(_STREAM_DISPATCH))
+
+
+def family_temporal(family: str) -> str:
+    """The family's declared time semantics ("dense" | "event" |
+    "static") from its registry cell spec — the single source of truth
+    the plan layer and the serve engine read instead of assuming
+    dense-T."""
+    if family not in _stream.REGISTRY:
+        raise KeyError(f"unknown stream-engine family {family!r}; "
+                       f"registered: {stream_families()}")
+    return _stream.REGISTRY[family].temporal
 
 
 def _apply_lengths(family: str, args: tuple, lengths) -> tuple:
@@ -445,6 +550,13 @@ def stream_steps(family: str, *args, tn: int = 128, td=None,
                 wx, wh, b, edge_msg=None) -> (outs, hT)
       evolve   (idx, coef, x, mask, live, weights, b_gcn, gru_wx, gru_wh,
                 gru_b, edge_aggs=None) -> (outs, weights_T)
+      tgn      (idx, coef, ts, x, renumber, mask, mem0, freq, w_in,
+                wx, wh, b) -> (outs, memT)            [temporal="event":
+                the T axis sequences ragged event batches, ts carries
+                per-event-lane timestamps]
+      static_gcn (idx, coef, x, mask, weights, b_gcn, edge_aggs=None)
+                -> (outs,)                            [temporal="static":
+                T must be 1; fold snapshots onto the batch axis]
     """
     return _stream_dispatch(family, False, args, kwargs, tn=tn, td=td,
                             force_ref=force_ref)

@@ -227,3 +227,92 @@ def evolve_stream_batched_ref(neigh_idx, neigh_coef, node_feat, node_mask,
         i, c, x, m, lv, ws, b_gcn, gru_wx, gru_wh, gru_b, ea)
     return jax.vmap(fn)(neigh_idx, neigh_coef, node_feat, node_mask, live,
                         tuple(weights0), tuple(edge_aggs))
+
+
+def tgn_stream_ref(neigh_idx, neigh_coef, neigh_ts, node_feat, renumber,
+                   node_mask, mem0, freq, w_in, wx, wh, b):
+    """TGN event-stream oracle: (T, n, ...) padded event batches
+    (graph/events.pad_event_block), node-memory store as the carry.
+
+    Per event batch: every touched node aggregates its event partners'
+    t-1 memory and the sinusoidal time encoding cos(ts * freq) of its
+    events (coef-weighted, so dead lanes contribute exactly zero), feeds
+    the GRU against its own t-1 memory row, and scatters the new memory
+    back at its renumber row only — untouched global rows carry over.
+
+    Returns (per-batch memory outputs (T, n, H), final memory store).
+    """
+    xs = dict(idx=neigh_idx, coef=neigh_coef, ts=neigh_ts, x=node_feat,
+              ren=renumber, mask=node_mask)
+
+    def body(store, s):
+        mem = _gather_rows(store, s["ren"], s["mask"])
+        agg_m = (mem[s["idx"]] * s["coef"][..., None]).sum(axis=1)
+        enc = jnp.cos(s["ts"][..., None] * freq[None, None, :])
+        agg_e = (enc * s["coef"][..., None]).sum(axis=1)
+        inp = s["x"] @ w_in + agg_m + agg_e
+        m_new = fused_gru(inp, mem, wx, wh, b) * s["mask"][:, None]
+        return _scatter_rows(store, s["ren"], m_new), m_new
+
+    memT, outs = jax.lax.scan(body, mem0, xs)
+    return outs, memT
+
+
+def tgn_stream_batched_ref(neigh_idx, neigh_coef, neigh_ts, node_feat,
+                           renumber, node_mask, mem0, freq, w_in,
+                           wx, wh, b):
+    """B independent TGN event streams: vmap of the single-stream oracle
+    (frequencies, input projection and GRU params shared across streams)."""
+    fn = lambda i, c, t, x, r, m, m0: tgn_stream_ref(
+        i, c, t, x, r, m, m0, freq, w_in, wx, wh, b)
+    return jax.vmap(fn)(neigh_idx, neigh_coef, neigh_ts, node_feat,
+                        renumber, node_mask, mem0)
+
+
+def static_gcn_stream_ref(neigh_idx, neigh_coef, node_feat, node_mask,
+                          weights, b_gcn, edge_aggs=None):
+    """Static-GCN oracle: (T, n, ...) INDEPENDENT snapshots (no carry,
+    no recurrence) through the L-layer GCN — agg @ W_l + b_l, ReLU
+    between layers, masked every layer, last layer linear. T is 1 on the
+    engine path (static families fold snapshots onto the batch axis);
+    the oracle accepts any T since the steps are independent.
+
+    Returns (per-snapshot outputs (T, n, out_dim),) — a 1-tuple, to keep
+    the (outs, *final_states) dispatch shape with zero states.
+    """
+    L = len(weights)
+    xs = dict(idx=neigh_idx, coef=neigh_coef, x=node_feat, mask=node_mask)
+    if edge_aggs is not None:
+        for i, ea in enumerate(edge_aggs):
+            xs[f"ea{i}"] = ea
+
+    def step(s):
+        x = s["x"]
+        m = s["mask"][:, None]
+        for i in range(L):
+            agg = (x[s["idx"]] * s["coef"][..., None]).sum(axis=1)
+            ea = s.get(f"ea{i}")
+            if ea is not None:
+                agg = agg + ea
+            h = agg @ weights[i] + b_gcn[i]
+            if i < L - 1:
+                h = jax.nn.relu(h)
+            x = h * m
+        return x
+
+    return (jax.vmap(step)(xs),)
+
+
+def static_gcn_stream_batched_ref(neigh_idx, neigh_coef, node_feat,
+                                  node_mask, weights, b_gcn,
+                                  edge_aggs=None):
+    """B batches of independent static snapshots: vmap of the solo oracle
+    (weights shared across the batch — params, not state)."""
+    if edge_aggs is None:
+        fn = lambda i, c, x, m: static_gcn_stream_ref(
+            i, c, x, m, weights, b_gcn)
+        return jax.vmap(fn)(neigh_idx, neigh_coef, node_feat, node_mask)
+    fn = lambda i, c, x, m, ea: static_gcn_stream_ref(
+        i, c, x, m, weights, b_gcn, ea)
+    return jax.vmap(fn)(neigh_idx, neigh_coef, node_feat, node_mask,
+                        tuple(edge_aggs))

@@ -145,6 +145,20 @@ class StateDef:
     kind: str
 
 
+#: the temporal contracts a family may declare (CellSpec.temporal):
+#:   "dense"   dense snapshot stream — T sequences a per-step recurrence
+#:             (ragged streams masked in-launch via ``lengths``);
+#:   "event"   ragged event stream — T sequences event BATCHES, per-event
+#:             timestamps drive the time encoding, state updates touch
+#:             only the event endpoints (``lengths`` generalizes from
+#:             ragged-T to ragged per-event batches);
+#:   "static"  no recurrence at all — T must be 1, the engine's state
+#:             init/drain and evolve hooks are vacuous (zero StateDefs),
+#:             and independent snapshots fold onto the B axis (the serve
+#:             engine's express lane).
+TEMPORAL_MODES = ("dense", "event", "static")
+
+
 @dataclass(frozen=True)
 class CellSpec:
     """A DGNN family expressed against the stream engine.
@@ -152,12 +166,21 @@ class CellSpec:
     ``build(*arrays, tn, td)`` assembles the launch (inputs, block specs,
     scratch, meta) and binds the family's ``cell`` (per-program body) and
     optional ``evolve`` (between-snapshot hook, live-gated by the engine).
+
+    ``temporal`` declares the family's time semantics (one of
+    ``TEMPORAL_MODES``) — the engine derives its per-mode behavior from
+    this declaration instead of assuming a dense snapshot stream: a
+    "static" family must carry zero StateDefs and no evolve hook (checked
+    at registration and again at launch), an "event" family's T axis
+    counts event batches, and only "dense"/"event" families own recurrent
+    state the serve engine must checkpoint.
     """
 
     name: str
     resident: str                 # what stays on-chip across T (for docs)
     states: tuple[StateDef, ...]
     build: Callable
+    temporal: str = "dense"
 
 
 @dataclass(frozen=True)
@@ -175,6 +198,7 @@ class _Meta:
     states: tuple[_StateMeta, ...]
     live_idx: Optional[int]       # input index of the (B, T) live flag
     td: int
+    temporal: str = "dense"       # must equal the CellSpec's declaration
 
 
 @dataclass
@@ -348,7 +372,18 @@ def stream_call(family: str, *args, tn: int = 128, td: Optional[int] = None,
     resident). Callers go through kernels/ops.py, which owns padding,
     oracle routing, and output slicing.
     """
-    launch = REGISTRY[family].build(*args, tn=tn, td=td)
+    spec = REGISTRY[family]
+    launch = spec.build(*args, tn=tn, td=td)
+    if launch.meta.temporal != spec.temporal:
+        raise ValueError(
+            f"family {family!r} built a launch declaring temporal="
+            f"{launch.meta.temporal!r} but its cell spec declares "
+            f"{spec.temporal!r}")
+    if spec.temporal == "static" and (launch.meta.states
+                                      or launch.evolve is not None):
+        raise ValueError(
+            f"static family {family!r} must launch with zero state "
+            "tensors and no evolve hook")
     kernel = functools.partial(_stream_engine_kernel, launch.cell,
                                launch.evolve, launch.meta)
     return pl.pallas_call(
@@ -796,6 +831,278 @@ def _evolve_build(neigh_idx, neigh_coef, node_feat, node_mask, live,
 
 
 # ------------------------------------------------------------------------
+# TGN (event-driven temporal GNN): the "event" temporal contract. The T
+# grid axis sequences EVENT BATCHES, not snapshots — each step is a ragged
+# batch of timestamped events laid out as ELL rows over the touched nodes
+# (graph/events.pad_event_block), so ``lengths`` generalizes from ragged-T
+# snapshot streams to ragged event streams. Per event batch, every touched
+# node aggregates its event partners' t-1 memory plus a sinusoidal TIME
+# ENCODING of the per-event timestamps (cos(t * freq_d), learnable per-dim
+# frequencies — the TGAT/TGN functional form), feeds a GRU, and updates
+# ONLY its own node-memory row (untouched rows carry over through the
+# ping-pong copy-forward; padding rows scatter-drop). Dead (coef-0) event
+# lanes contribute exactly zero to both aggregations, whatever timestamp
+# they carry — the property tests pin this.
+
+def _tgn_cell(cached, eng, ins, outs, scr):
+    (gidx_ref, coef_ref, ts_ref, x_ref, rowg_ref, mask_ref, _m0,
+     freq_ref, win_ref, wx_ref, wh_ref, b_ref) = ins
+    out_ref = outs[0]
+
+    gidx, coef, ts = gidx_ref[0, 0], coef_ref[0, 0], ts_ref[0, 0]
+    rowg = rowg_ref[0, 0]
+    mask = mask_ref[0, 0][:, None]
+    tn = gidx.shape[0]
+    rows = pl.ds(eng.j * tn, tn)
+    n_global = scr[0].shape[0]
+    row_safe = jnp.where(rowg < n_global, rowg, 0)
+
+    def _compute():
+        store = eng.state_read(scr, 0)       # full-width t-1 memory
+        agg_m = _agg_store(gidx, coef, store)
+        # sinusoidal time encoding per event lane; padded freq columns
+        # give cos(0)=1 but only ever multiply zero-padded wx rows
+        enc = jnp.cos(ts[..., None] * freq_ref[0][None, None, :])
+        agg_e = (enc * coef[..., None]).sum(axis=1)
+        x_tile = jax.lax.dynamic_slice_in_dim(x_ref[0, 0], eng.j * tn, tn,
+                                              axis=0)
+        inp = x_tile @ win_ref[...] + agg_m + agg_e
+        mem_own = jnp.take(store, row_safe, axis=0) * mask
+        return inp, mem_own
+
+    if cached:  # D > 1: compute once per (t, j); d > 0 re-reads
+        cinp, cmem = scr[2], scr[3]
+
+        @pl.when(eng.first_dblock)
+        def _fill_caches():
+            cinp[rows], cmem[rows] = _compute()
+
+        inp, mem_own = cinp[rows], cmem[rows]
+    else:       # single d block: inline, no scratch round-trip
+        inp, mem_own = _compute()
+
+    td = eng.td
+    gx = inp @ wx_ref[0] + b_ref[0][None, :]
+    gh = mem_own @ wh_ref[0]
+    rx, zx, nx = gx[:, :td], gx[:, td:2 * td], gx[:, 2 * td:]
+    rh, zh, nh = gh[:, :td], gh[:, td:2 * td], gh[:, 2 * td:]
+    r = jax.nn.sigmoid(rx + rh)
+    z = jax.nn.sigmoid(zx + zh)
+    nn = jnp.tanh(nx + r * nh)
+    m_new = ((1.0 - z) * nn + z * eng.dslice(mem_own)) * mask
+
+    eng.state_scatter(scr, 0, rowg, m_new)
+    out_ref[0, 0] = m_new
+
+
+def _tgn_build(neigh_gidx, neigh_coef, neigh_ts, node_feat, row_gidx,
+               node_mask, mem0, freq, w_in, wx, wh, b, *,
+               tn: int, td: Optional[int]):
+    """Event-stream launch: (B, T, n, k) ELL event batches with per-lane
+    timestamps; the node-memory store (B, G, h) is the single pingpong
+    state, entering and leaving the chip once per stream."""
+    B, T, n, k = neigh_gidx.shape
+    din, h = node_feat.shape[3], mem0.shape[2]
+    G = mem0.shape[1]
+    assert n % tn == 0
+    td = h if td is None else td
+    d_pad = _round_up(h, td)
+    D = d_pad // td
+    grid = (B, T, 1, D, n // tn)
+
+    mem0p = _pad_dim(mem0, d_pad, -1)
+    freq_p = _pad_dim(freq, d_pad, 0)[None]           # (1, d_pad): 2-D ref
+    win_p = _pad_dim(w_in, d_pad, -1)
+    wxp = _pack_gate_blocks(_pad_dim(wx, d_pad, 0), 3, td)  # (D, d_pad, 3td)
+    whp = _pack_gate_blocks(_pad_dim(wh, d_pad, 0), 3, td)  # (D, d_pad, 3td)
+    bp = _pack_gate_bias(b, 3, td)                          # (D, 3td)
+
+    tile = lambda bi, t, l, d, j: (bi, t, j, 0)
+    step = lambda bi, t, l, d, j: (bi, t, 0, 0)
+    row = lambda bi, t, l, d, j: (bi, t, j)
+    state_in = lambda bi, t, l, d, j: (bi, 0, 0)
+    state_out = lambda bi, t, l, d, j: (bi, 0, d)
+    out_tile = lambda bi, t, l, d, j: (bi, t, j, d)
+    res2 = lambda bi, t, l, d, j: (0, 0)
+    dblk = lambda bi, t, l, d, j: (d, 0, 0)
+    dblk1 = lambda bi, t, l, d, j: (d, 0)
+
+    meta = _Meta(
+        n_in=12, n_out=2,
+        states=(_StateMeta("pingpong", in_idx=6, out_idx=1, scr_idx=0),),
+        live_idx=None, td=td, temporal="event")
+    return _Launch(
+        grid=grid,
+        inputs=(neigh_gidx, neigh_coef, neigh_ts, node_feat, row_gidx,
+                node_mask, mem0p, freq_p, win_p, wxp, whp, bp),
+        in_specs=[
+            pl.BlockSpec((1, 1, tn, k), tile),        # partner gidx (global)
+            pl.BlockSpec((1, 1, tn, k), tile),        # event coef (1/deg)
+            pl.BlockSpec((1, 1, tn, k), tile),        # event timestamps
+            pl.BlockSpec((1, 1, n, din), step),       # touched-node features
+            pl.BlockSpec((1, 1, tn), row),            # row_gidx
+            pl.BlockSpec((1, 1, tn), row),            # node_mask
+            pl.BlockSpec((1, G, d_pad), state_in),    # mem0, per stream
+            pl.BlockSpec((1, d_pad), res2),           # time-enc frequencies
+            pl.BlockSpec((din, d_pad), res2),         # input projection
+            pl.BlockSpec((1, d_pad, 3 * td), dblk),   # wx gate tile, per d
+            pl.BlockSpec((1, d_pad, 3 * td), dblk),   # wh gate tile, per d
+            pl.BlockSpec((1, 3 * td), dblk1),         # bias gate tile
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, tn, td), out_tile),   # per-batch mem outputs
+            pl.BlockSpec((1, G, td), state_out),      # final memory, per (b, d)
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, n, d_pad), node_feat.dtype),
+            jax.ShapeDtypeStruct((B, G, d_pad), mem0.dtype),
+        ],
+        scratch=[
+            pltpu.VMEM((G, d_pad), mem0.dtype),       # mem ping
+            pltpu.VMEM((G, d_pad), mem0.dtype),       # mem pong
+        ] + ([
+            pltpu.VMEM((n, d_pad), node_feat.dtype),  # GRU-input cache
+            pltpu.VMEM((n, d_pad), mem0.dtype),       # own-row mem cache
+        ] if D > 1 else []),
+        meta=meta,
+        cell=functools.partial(_tgn_cell, D > 1),
+        evolve=None,
+    )
+
+
+# ------------------------------------------------------------------------
+# Static GCN (GenGNN-style): the "static" temporal contract — no
+# recurrence, zero StateDefs, no evolve hook; the engine's state
+# init/copy-forward/drain loops are vacuously empty. T must be 1:
+# independent snapshots fold onto the B axis instead (the serve express
+# lane), so a "stream" of static graphs is just a batch. The L grid axis
+# sequences the multi-layer GCN over the evolve-style activation ping-pong
+# scratch, but the per-layer weights come straight from INPUT refs
+# (BlockSpec-indexed by (l, d)) — nothing is resident across steps.
+
+def _static_cell(has_edge, cached, eng, ins, outs, scr):
+    (idx_ref, coef_ref, x_ref, mask_ref, w_ref, bg_ref, eagg_ref) = ins
+    out_ref = outs[0]
+    xa, xb = scr[0], scr[1]
+    l, j = eng.l, eng.j
+    d_pad = xa.shape[1]
+
+    # layer-0 activations are the snapshot's node features
+    @pl.when(jnp.logical_and(l == 0, jnp.logical_and(eng.first_dblock,
+                                                     j == 0)))
+    def _init_x():
+        xa[...] = x_ref[0, 0]
+
+    leven = (l % 2) == 0  # even layers read A / write B, odd the reverse
+    idx, coef = idx_ref[0, 0], coef_ref[0, 0]
+    mask = mask_ref[0, 0][:, None]
+    tn, k = idx.shape
+    rows = pl.ds(j * tn, tn)
+
+    def _aggregate():
+        x_prev = jnp.where(leven, xa[...], xb[...])
+        g = jnp.take(x_prev, idx.reshape(-1),
+                     axis=0).reshape(tn, k, d_pad)
+        out = (g * coef[..., None]).sum(axis=1)
+        return out + eagg_ref[0, 0, 0] if has_edge else out
+
+    if cached:  # D > 1: aggregate once per (l, j); d > 0 re-reads
+        cagg = scr[2]
+
+        @pl.when(eng.first_dblock)
+        def _fill_cache():
+            cagg[rows] = _aggregate()
+
+        agg = cagg[rows]
+    else:       # single d block: inline, no scratch round-trip
+        agg = _aggregate()
+
+    h = agg @ w_ref[0] + bg_ref[0][None, :]
+    h = jnp.where(l == eng.n_layers - 1, h, jnp.maximum(h, 0.0)) * mask
+
+    @pl.when(jnp.logical_not(leven))
+    def _wr_a():
+        xa[rows, eng.blk] = h
+
+    @pl.when(leven)
+    def _wr_b():
+        xb[rows, eng.blk] = h
+
+    # model output = last layer's (masked, linear) activations
+    @pl.when(l == eng.n_layers - 1)
+    def _out():
+        out_ref[0, 0] = h
+
+
+def _static_build(neigh_idx, neigh_coef, node_feat, node_mask,
+                  weights, b_gcn, edge_agg=None, *,
+                  tn: int, td: Optional[int]):
+    """Inputs pre-padded to the common square d_pad by kernels/ops.py:
+    node_feat (B, 1, n, d_pad); weights (L, d_pad, d_pad) stacked per
+    layer, SHARED across the batch (params, not state)."""
+    B, T, n, k = neigh_idx.shape
+    if T != 1:
+        raise ValueError(
+            f"static family runs with T == 1, got T={T}: a static-GCN "
+            "'stream' has no recurrence — fold independent snapshots onto "
+            "the batch axis instead (core.gcn.StaticGCN.step_stream does)")
+    L, d_pad = weights.shape[0], weights.shape[1]
+    assert n % tn == 0
+    td = d_pad if td is None else td
+    assert d_pad % td == 0
+    D = d_pad // td
+    grid = (B, 1, L, D, n // tn)
+
+    tile = lambda bi, t, l, d, j: (bi, t, j, 0)
+    step = lambda bi, t, l, d, j: (bi, t, 0, 0)
+    row = lambda bi, t, l, d, j: (bi, t, j)
+    out_tile = lambda bi, t, l, d, j: (bi, t, j, d)
+    layer_wblk = lambda bi, t, l, d, j: (l, 0, d)
+    layer_blk = lambda bi, t, l, d, j: (l, d)
+
+    has_edge = edge_agg is not None
+    if has_edge:
+        eagg_map = lambda bi, t, l, d, j: (bi, t, l, j, 0)
+    else:
+        # one pinned (revisited) dummy block; the kernel never reads it.
+        edge_agg = jnp.zeros((1, 1, 1, tn, d_pad), node_feat.dtype)
+        eagg_map = lambda bi, t, l, d, j: (0, 0, 0, 0, 0)
+
+    meta = _Meta(
+        n_in=7, n_out=1, states=(),
+        live_idx=None, td=td, temporal="static")
+    return _Launch(
+        grid=grid,
+        inputs=(neigh_idx, neigh_coef, node_feat, node_mask,
+                weights, b_gcn, edge_agg),
+        in_specs=[
+            pl.BlockSpec((1, 1, tn, k), tile),            # neigh_idx (local)
+            pl.BlockSpec((1, 1, tn, k), tile),            # neigh_coef
+            pl.BlockSpec((1, 1, n, d_pad), step),         # node_feat
+            pl.BlockSpec((1, 1, tn), row),                # node_mask
+            pl.BlockSpec((1, d_pad, td), layer_wblk),     # W_l column block
+            pl.BlockSpec((1, td), layer_blk),             # GCN bias tile
+            pl.BlockSpec((1, 1, 1, tn, d_pad), eagg_map),  # edge agg
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, tn, td), out_tile),       # per-snapshot outs
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, 1, n, d_pad), node_feat.dtype),
+        ],
+        scratch=[
+            pltpu.VMEM((n, d_pad), node_feat.dtype),   # activation ping
+            pltpu.VMEM((n, d_pad), node_feat.dtype),   # activation pong
+        ] + ([
+            pltpu.VMEM((n, d_pad), node_feat.dtype),   # aggregation cache
+        ] if D > 1 else []),
+        meta=meta,
+        cell=functools.partial(_static_cell, has_edge, D > 1),
+        evolve=None,
+    )
+
+
+# ------------------------------------------------------------------------
 # The registry: every DGNN family the stream engine serves. Adding a
 # family = registering a cell spec here (CI runs the registry tests for
 # every entry, so an untested spec fails the build).
@@ -805,15 +1112,52 @@ REGISTRY: dict[str, CellSpec] = {
         name="gcrn",
         resident="node-state store: h (ping-pong pair) + c (own-row)",
         states=(StateDef("h", "pingpong"), StateDef("c", "row")),
-        build=_gcrn_build),
+        build=_gcrn_build,
+        temporal="dense"),
     "stacked": CellSpec(
         name="stacked",
         resident="node-state store: h (own-row)",
         states=(StateDef("h", "row"),),
-        build=_stacked_build),
+        build=_stacked_build,
+        temporal="dense"),
     "evolve": CellSpec(
         name="evolve",
         resident="per-layer evolving weights W_l (matrix-GRU in-kernel)",
         states=(StateDef("weights", "weights"),),
-        build=_evolve_build),
+        build=_evolve_build,
+        temporal="dense"),
+    "tgn": CellSpec(
+        name="tgn",
+        resident="node-memory store: mem (ping-pong pair)",
+        states=(StateDef("mem", "pingpong"),),
+        build=_tgn_build,
+        temporal="event"),
+    "static_gcn": CellSpec(
+        name="static_gcn",
+        resident="none (stateless; activation ping-pong scratch only)",
+        states=(),
+        build=_static_build,
+        temporal="static"),
 }
+
+
+def _validate_registry() -> None:
+    """Structural invariants on the declarative temporal contract,
+    checked once at import: a spec that lies about its mode fails before
+    any launch does."""
+    for name, spec in REGISTRY.items():
+        if spec.temporal not in TEMPORAL_MODES:
+            raise ValueError(
+                f"family {name!r} declares unknown temporal mode "
+                f"{spec.temporal!r}; expected one of {TEMPORAL_MODES}")
+        if spec.temporal == "static" and spec.states:
+            raise ValueError(
+                f"static family {name!r} must declare zero StateDefs, "
+                f"got {[s.name for s in spec.states]}")
+        if spec.temporal != "static" and not spec.states:
+            raise ValueError(
+                f"{spec.temporal} family {name!r} declares no StateDefs: "
+                "recurrence without state is a contract violation")
+
+
+_validate_registry()

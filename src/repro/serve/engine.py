@@ -136,6 +136,12 @@ class ServeStats:
     padded_snapshots: int = 0
     promoted_chunks: int = 0  # chunks promoted to a larger bucket
     launches: int = 0         # stream-kernel launches (v3 paths)
+    # express-lane signals: static-family chunks are stateless, so they
+    # co-batch into dedicated launches with no checkpoint/rollback around
+    # them; ``launches_by_family`` splits ALL launches by stream family
+    # (express launches count under the express session's family too).
+    express_launches: int = 0
+    launches_by_family: dict = field(default_factory=dict)
     # fault-isolation / recovery signals (docs/serve_robustness.md)
     retries: int = 0            # failed chunk attempts that were replayed
     rollbacks: int = 0          # per-tenant state rollbacks
@@ -190,10 +196,15 @@ class SnapshotServer:
                  scheduler: str = "rounds",
                  state_pool_pages: Optional[int] = None,
                  prefill_chunk: Optional[int] = None, *,
-                 plan=None, session=None):
+                 plan=None, session=None, express=None):
         from repro import api
 
         if session is None:
+            warnings.warn(
+                "the SnapshotServer keyword surface (cfg + mode + padding "
+                "kwargs) is deprecated: build a typed plan and pass "
+                "SnapshotServer(session=BoosterSession(cfg, plan, ...))",
+                DeprecationWarning, stacklevel=2)
             if cfg is None:
                 raise ValueError("SnapshotServer needs a BoosterSession "
                                  "(session=) or a DGNNConfig")
@@ -266,6 +277,38 @@ class SnapshotServer:
             lambda p, s, sBT, lens: self.model.step_stream_batched(
                 p, s, sBT, tn=self.plan.tn, td=self.plan.td, lengths=lens,
                 force_ref=True))
+        # ------------------------------------------------ express lane ----
+        # a second, STATIC-family BoosterSession: its tenants are
+        # stateless, so their snapshots co-batch — each one an independent
+        # T=1 slot of a dedicated launch with no checkpoint/rollback
+        # around it (see ``run_multi``'s ``express_streams``).
+        self.express = express
+        if express is not None:
+            if express.plan.temporal != "static":
+                raise ValueError(
+                    "express= takes a BoosterSession of a STATIC-temporal "
+                    f"family; {express.model.stream_family!r} declares "
+                    f"temporal={express.plan.temporal!r}")
+            if express.plan.level != "v3":
+                raise ValueError("the express lane is a stream-engine "
+                                 "path: the express plan must be level "
+                                 f"'v3', got {express.plan.level!r}")
+            if express.plan.device.n_devices > 1:
+                raise ValueError("the express lane does not shard its "
+                                 "launches (see the session sharding note "
+                                 "above)")
+            if express.plan.buckets is not None:
+                raise ValueError(
+                    "the express lane co-batches every static slot into "
+                    "ONE shape; give the express plan a fixed bucket "
+                    "(buckets=None)")
+            self._express_feat = (express.feat_table
+                                  if express.feat_table is not None
+                                  else self.feat_table)
+            xp = express.plan
+            self._express_step = jax.jit(
+                lambda p, sBT, lens: express.model.step_stream_batched(
+                    p, {}, sBT, tn=xp.tn, td=xp.td, lengths=lens)[1])
 
     def init(self, rng):
         return self.session.init(rng)
@@ -409,6 +452,11 @@ class SnapshotServer:
 
     # -------------------------------------------------- supervised launch ----
 
+    def _count_launch(self, ctr: dict, family: str) -> None:
+        ctr["launches"] += 1
+        bf = ctr.setdefault("by_family", {})
+        bf[family] = bf.get(family, 0) + 1
+
     def _stage_group(self, params, states: dict, group: list,
                      force_ref: bool = False) -> tuple:
         """Launch one batched V3 group WITHOUT committing anything: build
@@ -524,13 +572,14 @@ class SnapshotServer:
         gate) serves correct-but-slower results. A member that fails every
         rung is quarantined (isolate) or raises (strict) with the LAST
         error as cause."""
+        static = self.plan.temporal == "static"
         for member in members:
             sid = member[0]
             err = cause
             for force_ref in (False, True):
-                ckpt = sup.checkpoint(states, [sid])
+                ckpt = None if static else sup.checkpoint(states, [sid])
                 try:
-                    ctr["launches"] += 1
+                    self._count_launch(ctr, self.model.stream_family)
                     staged = self._stage_group(params, states, [member],
                                                force_ref=force_ref)
                     self._commit_group(states, [member], staged, outs, lat,
@@ -540,7 +589,8 @@ class SnapshotServer:
                     err = self._attribution(exc)
                     if isinstance(err, LaunchTimeout):
                         ctr["timeouts"] += 1
-                    sup.rollback(states, ckpt)
+                    if ckpt is not None:
+                        sup.rollback(states, ckpt)
             else:
                 sup.quarantine(sid, err,
                                site=getattr(err, "site", "launch"))
@@ -564,11 +614,16 @@ class SnapshotServer:
         """
         members = [m for m in group if sup.ok(m[0])]
         attempt = 0
+        # the static temporal contract has NOTHING to checkpoint — tenant
+        # state is empty and never advances — so the express-lane promise
+        # (no checkpoint/rollback overhead around stateless launches)
+        # holds for a static-family session on the regular path too.
+        static = self.plan.temporal == "static"
         while members:
             sids = [sid for sid, _, _ in members]
-            ckpt = sup.checkpoint(states, sids)
+            ckpt = None if static else sup.checkpoint(states, sids)
             try:
-                ctr["launches"] += 1
+                self._count_launch(ctr, self.model.stream_family)
                 staged = self._stage_group(params, states, members)
                 self._commit_group(states, members, staged, outs, lat, ctr,
                                    sup)
@@ -577,7 +632,8 @@ class SnapshotServer:
                 err = self._attribution(exc)
                 if isinstance(err, LaunchTimeout):
                     ctr["timeouts"] += 1
-                sup.rollback(states, ckpt)
+                if ckpt is not None:
+                    sup.rollback(states, ckpt)
                 attempt += 1
                 if attempt <= self._policy.max_retries:
                     sup.note_retry(sids, attempt)
@@ -625,6 +681,8 @@ class SnapshotServer:
             lat, pre_ms, total,
             live_snapshots=ctr["live"], padded_snapshots=ctr["padded"],
             promoted_chunks=ctr["promoted"], launches=ctr["launches"],
+            express_launches=ctr.get("express", 0),
+            launches_by_family=dict(ctr.get("by_family", {})),
             retries=totals.get("retries", 0),
             rollbacks=totals.get("rollbacks", 0),
             degraded_launches=totals.get("degraded_launches", 0),
@@ -889,7 +947,143 @@ class SnapshotServer:
             th.start()
         return qs, pre_ms, stop, threads
 
-    def run_multi(self, params, states: dict, streams: dict) -> tuple:
+    # ---------------------------------------------------- express lane ----
+
+    def _spawn_express_producers(self, streams: dict, stop, pre_ms) -> tuple:
+        """Producer threads for the stateless express tenants. Always
+        fixed-bucket (the lane co-batches every slot into one shape, so
+        padding happens host-side, fully overlapped). Items mirror the
+        recurrent producers' ``(payload, dims)`` shape so both feed the
+        same admission code; ``stop`` is the shared shutdown event."""
+        xp = self.express.plan
+        sids = sorted(streams)
+        qs = {sid: queue.Queue(maxsize=max(self.queue_depth,
+                                           self.stream_chunk))
+              for sid in sids}
+
+        def _put(q, item):
+            while not stop.is_set():
+                try:
+                    q.put(item, timeout=0.05)
+                    return True
+                except queue.Full:
+                    continue
+            return False
+
+        def producer(sid):
+            try:
+                for s in streams[sid]:
+                    t0 = time.perf_counter()
+                    self._probe("preprocess", tenant=sid)
+                    validate_snapshot(s, self._express_feat.shape[0],
+                                      tenant=sid)
+                    ls = renumber_and_normalize(s)
+                    ps = pad_snapshot(ls, self._express_feat, xp.n_pad,
+                                      xp.e_pad, xp.k_max)
+                    pre_ms.append((time.perf_counter() - t0) * 1e3)
+                    if not _put(qs[sid], (ps, None)):
+                        return
+                _put(qs[sid], None)
+            except BaseException as exc:  # propagate, don't hang the consumer
+                _put(qs[sid], exc)
+
+        threads = [threading.Thread(target=producer, args=(sid,), daemon=True,
+                                    name=f"dgnn-serve-express-{sid}")
+                   for sid in sids]
+        for th in threads:
+            th.start()
+        return qs, threads
+
+    def _run_express_group(self, params_x, group: list, outs: dict,
+                           lat: list, ctr: dict,
+                           sup: TenantSupervisor) -> None:
+        """ONE express-lane launch: ``group`` is [(sid, [PaddedSnapshot,
+        ...]), ...] — every snapshot of every member becomes an
+        independent T=1 slot on the BATCH axis of a single static-family
+        stream launch (B pow2-padded with dead length-0 slots). The
+        tenants are stateless, so no checkpoint is taken and nothing is
+        rolled back; failures follow the usual retry → attribute →
+        quarantine path minus the state machinery and the degradation
+        ladder (there is no cheaper rung below a stateless launch)."""
+        members = [m for m in group if sup.ok(m[0])]
+        attempt = 0
+        while members:
+            slots = [(sid, ps) for sid, chunk in members for ps in chunk]
+            sids = sorted({sid for sid, _ in slots})
+            b_real = len(slots)
+            b_target = pow2_target(b_real)
+            per_slot = [stack_time([ps]) for _, ps in slots]
+            per_slot.extend([per_slot[0]] * (b_target - b_real))
+            lengths = np.asarray([1] * b_real + [0] * (b_target - b_real),
+                                 np.int32)
+            key = ("express", b_target)
+            warmed = key in self._warmed
+            self._launch_ctx = tuple(sids)
+            try:
+                self._count_launch(ctr, self.express.model.stream_family)
+                ctr["express"] = ctr.get("express", 0) + 1
+                t0 = time.perf_counter()
+                out_BT = self._express_step(params_x,
+                                            stack_streams(per_slot),
+                                            jnp.asarray(lengths, jnp.int32))
+                jax.block_until_ready(out_BT)
+                dt_ms = (time.perf_counter() - t0) * 1e3
+                self._warmed.add(key)
+                timeout = self._policy.timeout_ms
+                if timeout is not None and warmed and dt_ms > timeout:
+                    raise LaunchTimeout(
+                        f"express launch took {dt_ms:.1f}ms > "
+                        f"launch_timeout_ms={timeout} (B={b_target}); "
+                        "result discarded", site="launch")
+                out_np = np.asarray(out_BT)
+                now_ms = (time.perf_counter() - self._t0_run) * 1e3
+                for b, (sid, _) in enumerate(slots):
+                    outs[sid].append(out_np[b, 0])
+                    self._commit_ms.setdefault(sid, []).append(now_ms)
+                lat.extend([dt_ms / b_real] * b_real)
+                ctr["live"] += b_real
+                ctr["padded"] += b_target - b_real
+                return
+            except Exception as exc:
+                err = self._attribution(exc)
+                if isinstance(err, LaunchTimeout):
+                    ctr["timeouts"] += 1
+                attempt += 1
+                if attempt <= self._policy.max_retries:
+                    sup.note_retry(sids, attempt)
+                    continue
+                tenant = getattr(err, "tenant", None)
+                if tenant is not None and tenant in sids:
+                    sup.quarantine(tenant, err,
+                                   site=getattr(err, "site", "launch"))
+                    members = [m for m in members if m[0] != tenant]
+                    attempt = 0
+                    continue
+                for sid in sids:
+                    sup.quarantine(sid, err,
+                                   site=getattr(err, "site", "launch"))
+                return
+            finally:
+                self._launch_ctx = ()
+
+    def _check_express_args(self, streams: dict, express_streams) -> list:
+        """Validate the run_multi express arguments; returns the express
+        sids (empty when the lane is unused)."""
+        if not express_streams:
+            return []
+        if self.express is None:
+            raise ValueError("express_streams= needs the express lane "
+                             "configured: SnapshotServer(..., express="
+                             "<static BoosterSession>)")
+        clash = set(express_streams) & set(streams)
+        if clash:
+            raise ValueError(f"stream ids {sorted(map(repr, clash))} appear "
+                             "in both streams and express_streams")
+        return sorted(express_streams)
+
+    def run_multi(self, params, states: dict, streams: dict, *,
+                  express_streams: Optional[dict] = None,
+                  express_params=None) -> tuple:
         """Serve many independent client streams concurrently.
 
         ``streams``: {stream_id: iterable of COOSnapshot}; ``states``:
@@ -918,30 +1112,80 @@ class SnapshotServer:
         outputs stop at the last committed chunk — and the surviving
         tenants are unaffected; the strict default re-raises the first
         failure after a clean shutdown.
+
+        EXPRESS LANE: with the server built over a second STATIC-family
+        session (``SnapshotServer(..., express=<static BoosterSession>)``),
+        ``express_streams`` ({sid: iterable of COOSnapshot}, disjoint from
+        ``streams``) are served through it with ``express_params``. Static
+        tenants are stateless — every snapshot is an independent T=1 slot —
+        so each round/tick co-batches ALL ready express snapshots into one
+        dedicated launch with no checkpoint/rollback around it, counted in
+        ``ServeStats.express_launches`` / ``launches_by_family``. Express
+        outputs land in the same outputs dict, in stream order.
         """
+        x_sids = self._check_express_args(streams, express_streams)
         if self.plan.scheduler == "continuous":
             from repro.serve.scheduler import ContinuousScheduler
 
-            return ContinuousScheduler(self).run(params, states, streams)
-        return self._run_multi_rounds(params, states, streams)
+            return ContinuousScheduler(self).run(
+                params, states, streams, express_streams=express_streams,
+                express_params=express_params)
+        return self._run_multi_rounds(params, states, streams,
+                                      express_streams if x_sids else None,
+                                      express_params)
 
-    def _run_multi_rounds(self, params, states: dict, streams: dict) -> tuple:
+    def _run_multi_rounds(self, params, states: dict, streams: dict,
+                          express_streams: Optional[dict] = None,
+                          express_params=None) -> tuple:
         """The round-based multi-tenant device loop (plan.scheduler ==
         "rounds"); see ``run_multi`` for the contract."""
         sids = sorted(streams)
+        x_sids = sorted(express_streams or {})
         t_start = time.perf_counter()
         self._t0_run, self._commit_ms = t_start, {}
         qs, pre_ms, stop, threads = self._spawn_producers(streams)
-        outs: dict = {sid: [] for sid in sids}
+        xqs: dict = {}
+        if x_sids:
+            xqs, x_threads = self._spawn_express_producers(
+                express_streams, stop, pre_ms)
+            threads = threads + x_threads
+        outs: dict = {sid: [] for sid in sids + x_sids}
         lat: list = []
         ctr = {"live": 0, "padded": 0, "promoted": 0, "launches": 0,
                "timeouts": 0, "degraded": 0}
-        sup = TenantSupervisor(sids, self._policy, outputs=outs)
+        sup = TenantSupervisor(sids + x_sids, self._policy, outputs=outs)
         active = set(sids)
+        x_active = set(x_sids)
         batched = self._use_stream_batched()
         try:
             with self._fault_window():
-                while active:
+                while active or x_active:
+                    # express round: every express tenant's next chunk of
+                    # T=1 slots, co-batched into ONE stateless launch
+                    x_group: list = []
+                    for sid in sorted(x_active):
+                        chunk = []
+                        while len(chunk) < self.stream_chunk:
+                            item = xqs[sid].get()
+                            if item is None:
+                                x_active.discard(sid)
+                                break
+                            if isinstance(item, BaseException):
+                                x_active.discard(sid)
+                                chunk = []
+                                sup.quarantine(sid, item,
+                                               site=getattr(item, "site",
+                                                            None))
+                                break
+                            chunk.append(item[0])
+                        if chunk:
+                            x_group.append((sid, chunk))
+                    if x_group:
+                        self._run_express_group(express_params, x_group,
+                                                outs, lat, ctr, sup)
+                        x_active -= set(sup.quarantined)
+                    if not active:
+                        continue
                     # one round: pull the next chunk of every active stream
                     chunks = {}
                     for sid in sorted(active):
@@ -1028,6 +1272,7 @@ class SnapshotServer:
                     # scheduled (their producers are drained at shutdown)
                     active -= set(sup.quarantined)
         finally:
-            self._shutdown(stop, list(qs.values()), threads)
+            self._shutdown(stop, list(qs.values()) + list(xqs.values()),
+                           threads)
         total = (time.perf_counter() - t_start) * 1e3
         return states, outs, self._make_stats(lat, pre_ms, total, ctr, sup)

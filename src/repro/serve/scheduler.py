@@ -100,28 +100,43 @@ class ContinuousScheduler:
 
     # --------------------------------------------------------------- run ----
 
-    def run(self, params, states: dict, streams: dict) -> tuple:
+    def run(self, params, states: dict, streams: dict, *,
+            express_streams=None, express_params=None) -> tuple:
         """Serve ``streams`` to completion; same contract and return shape
         as the round-based ``run_multi`` (and bit-identical outputs/final
-        states per tenant)."""
+        states per tenant).
+
+        Express tenants (``express_streams``, static family — see
+        ``run_multi``) join the SAME tick loop: their backlogs admit and
+        drain like everyone else's, but they bypass the state-pool
+        working-set cap (stateless tenants hold no pages) and each tick's
+        ready express slots co-batch into one dedicated stateless launch.
+        """
         srv = self.srv
         if not srv._use_stream_batched():
             raise ValueError("the continuous scheduler requires the v3 "
                              "stream engine (plan validation enforces this)")
         sids = sorted(streams)
+        x_sids = sorted(express_streams or {})
+        x_set = set(x_sids)
         t_start = time.perf_counter()
         srv._t0_run, srv._commit_ms = t_start, {}
         qs, pre_ms, stop, threads = srv._spawn_producers(streams)
-        outs: dict = {sid: [] for sid in sids}
+        if x_sids:
+            xqs, x_threads = srv._spawn_express_producers(
+                express_streams, stop, pre_ms)
+            qs = {**qs, **xqs}
+            threads = threads + x_threads
+        outs: dict = {sid: [] for sid in sids + x_sids}
         lat: list = []
         ctr = {"live": 0, "padded": 0, "promoted": 0, "launches": 0,
                "timeouts": 0, "degraded": 0, "ticks": 0, "prefill": 0}
-        sup = TenantSupervisor(sids, srv._policy, outputs=outs)
+        sup = TenantSupervisor(sids + x_sids, srv._policy, outputs=outs)
         pool = TenantStatePool(states, srv.state_pool_pages, sup)
-        backlog: dict = {sid: deque() for sid in sids}
+        backlog: dict = {sid: deque() for sid in sids + x_sids}
         eof: set = set()
-        last_tick = {sid: 0 for sid in sids}
-        active = set(sids)
+        last_tick = {sid: 0 for sid in sids + x_sids}
+        active = set(sids) | x_set
         tick_no = 0
         try:
             with srv._fault_window():
@@ -139,12 +154,28 @@ class ContinuousScheduler:
                             time.sleep(_IDLE_SLEEP_S)
                         continue
                     # fairness under pool pressure: least-recently-
-                    # scheduled first, working set capped at the pool size
+                    # scheduled first. Only RECURRENT tenants compete for
+                    # the state-pool working set — stateless express
+                    # tenants hold no pages, so they bypass the cap and
+                    # ride every tick they have slots ready.
                     ready.sort(key=lambda s: (last_tick[s], repr(s)))
+                    x_ready = [s for s in ready if s in x_set]
+                    ready = [s for s in ready if s not in x_set]
                     if srv.state_pool_pages is not None:
                         ready = ready[:srv.state_pool_pages]
                     tick_no += 1
                     ctr["ticks"] += 1
+                    x_group: list = []
+                    for sid in x_ready:
+                        chunk: list = []
+                        while backlog[sid] and len(chunk) < srv.stream_chunk:
+                            ps, _ = backlog[sid].popleft()
+                            chunk.append(ps)
+                        x_group.append((sid, chunk))
+                        last_tick[sid] = tick_no
+                    if x_group:
+                        srv._run_express_group(express_params, x_group,
+                                               outs, lat, ctr, sup)
                     chunks: dict = {}
                     for sid in ready:
                         prefill = (srv.prefill_chunk is not None

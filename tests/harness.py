@@ -363,6 +363,43 @@ def stream_kernel_case(family: str, seed: int = 0, T: int = 3, B=None,
                for i in range(len(dims))]
         return ((*S, wsB, bg, gwx, gwh, gb),
                 _ref.evolve_stream_batched_ref, max(max(d) for d in dims))
+    if family == "tgn":
+        # event temporal contract: the eidx slot of the ELL layout carries
+        # per-event float TIMESTAMPS instead of edge ids. random_ell_stream
+        # already guarantees the event contract the kernel assumes (every
+        # nonzero-coef lane references a masked-in row).
+        din, h, G, e = 12, 24, 2 * n + 9, 4 * n
+        S = (random_ell_stream(seed, T, n, k, e, din, G) if B is None
+             else random_ell_stream_batch(seed, B, T, n, k, e, din, G))
+        idx, coef, _eidx, x, ren, mask = S
+        ts = np.random.default_rng(seed + 7).uniform(
+            0.0, 8.0, idx.shape).astype(np.float32)
+        lead = () if B is None else (B,)
+        args = (idx, coef, ts, x, ren, mask,
+                rand(seed + 1, lead + (G, h), 0.5),       # mem0
+                np.abs(rand(seed + 2, (h,), 0.5)) + 0.05,  # freq
+                rand(seed + 3, (din, h), 0.2),             # w_in
+                rand(seed + 4, (h, 3 * h), 0.2),           # gru wx
+                rand(seed + 5, (h, 3 * h), 0.2),           # gru wh
+                rand(seed + 6, (3 * h,), 0.1))             # gru b
+        oracle = (_ref.tgn_stream_ref if B is None
+                  else _ref.tgn_stream_batched_ref)
+        return args, oracle, h
+    if family == "static_gcn":
+        # static temporal contract: T == 1 by construction (the cell spec
+        # rejects anything else — independent snapshots fold onto the
+        # batch axis), so the case ignores the T argument.
+        dims = [(12, 16), (16, 8)]
+        din, e, G = dims[0][0], 4 * n, 2 * n + 9
+        S = (random_ell_stream(seed, 1, n, k, e, din, G) if B is None
+             else random_ell_stream_batch(seed, B, 1, n, k, e, din, G))
+        idx, coef, _eidx, x, _ren, mask = S
+        ws = [rand(seed + 10 + i, d, 0.3) for i, d in enumerate(dims)]
+        bs = [rand(seed + 20 + i, (d[1],), 0.1) for i, d in enumerate(dims)]
+        args = (idx, coef, x, mask, ws, bs, None)
+        oracle = (_ref.static_gcn_stream_ref if B is None
+                  else _ref.static_gcn_stream_batched_ref)
+        return args, oracle, max(max(d) for d in dims)
     raise KeyError(
         f"no kernel-level differential case for stream family {family!r}: "
         "a cell spec was registered in kernels/stream_fused.REGISTRY "

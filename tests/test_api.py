@@ -291,4 +291,4 @@ def test_device_spec_sharded_launch_identical():
                                        atol=1e-5)
             print('OK', family)
     """)
-    assert out.count("OK") == 3
+    assert out.count("OK") == 5

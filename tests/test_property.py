@@ -179,16 +179,17 @@ def test_quantize_roundtrip_bound(vals):
 
 
 @settings(max_examples=8, deadline=None)
-@given(st.sampled_from(("gcrn", "stacked", "evolve")),
+@given(st.sampled_from(("gcrn", "stacked", "evolve", "tgn", "static_gcn")),
        st.sampled_from((4, 8, 12)), st.integers(0, 2**16))
 def test_dblock_tiling_roundtrips_state(family, td, seed):
     """D-axis blocking is a pure layout change: for ANY block size td the
     blocked stream engine returns the SAME per-step outputs and final
     recurrent state as the unblocked (fully resident) kernel — the state
     round-trips the (n_global, td) column tiling identically. The harness
-    case widths (d = 24 for node states, dmax = 16 for evolve) make every
-    sampled td a genuine multi-block layout; td=12 additionally exercises
-    a d_pad > d remainder block."""
+    case widths (d = 24 for node states, dmax = 16 for evolve/static)
+    make every sampled td a genuine multi-block layout; td=12
+    additionally exercises a d_pad > d remainder block. Covers all THREE
+    temporal contracts (dense, event, static) through the one engine."""
     from repro.kernels import ops
 
     args, _, _ = harness.stream_kernel_case(family, seed=seed, T=2, n=32,
@@ -199,6 +200,99 @@ def test_dblock_tiling_roundtrips_state(family, td, seed):
     flat_w, _ = jax.tree.flatten(want)
     for g, w in zip(flat_g, flat_w):
         np.testing.assert_allclose(np.asarray(g), np.asarray(w), atol=1e-6)
+
+
+@st.composite
+def event_batches(draw):
+    """Random timestamped event batches (u, v, t) over a small global id
+    space, self-loop free (the event contract rejects them)."""
+    G = draw(st.integers(4, 64))
+    e = draw(st.integers(1, 40))
+    rng = np.random.default_rng(draw(st.integers(0, 2**31)))
+    src = rng.integers(0, G, e)
+    dst = rng.integers(0, G, e)
+    keep = src != dst
+    if not keep.any():
+        src, dst = np.array([0]), np.array([1])
+        keep = np.array([True])
+    src, dst = src[keep].astype(np.int32), dst[keep].astype(np.int32)
+    ts = rng.uniform(0.0, 50.0, src.size).astype(np.float32)
+    return G, src, dst, ts
+
+
+@given(event_batches(), st.integers(0, 8), st.integers(0, 4))
+def test_event_pad_unpad_roundtrip(batch, dn, dk):
+    """pad_event_block -> unpad_event_block recovers the exact event
+    multiset (canonical src < dst form) for ANY fitting bucket: the
+    symmetric lanes the padding adds collapse back to one event each,
+    and no padding lane survives the round trip."""
+    from repro.graph.events import pad_event_block, unpad_event_block
+
+    G, src, dst, ts = batch
+    touched = np.unique(np.concatenate([src, dst]))
+    deg = int(np.bincount(np.concatenate([src, dst]), minlength=G).max())
+    feat_table = np.random.default_rng(0).normal(
+        size=(G, 5)).astype(np.float32)
+    blk = pad_event_block(src, dst, ts, feat_table,
+                          n_pad=touched.size + dn, k_max=deg + dk)
+    want = sorted((int(min(u, v)), int(max(u, v)), np.float32(t))
+                  for u, v, t in zip(src, dst, ts))
+    got_s, got_d, got_t = unpad_event_block(blk)
+    ws, wd, wt = zip(*want)
+    np.testing.assert_array_equal(got_s, np.asarray(ws, np.int32))
+    np.testing.assert_array_equal(got_d, np.asarray(wd, np.int32))
+    np.testing.assert_array_equal(got_t, np.asarray(wt, np.float32))
+    # padding invariants: dead lanes coef 0, dead rows mask 0 / ren -1
+    coef = np.asarray(blk.neigh_coef)
+    n = int(blk.n_nodes)
+    assert (coef[n:] == 0).all()
+    assert (np.asarray(blk.node_mask)[n:] == 0).all()
+    assert (np.asarray(blk.renumber)[n:] == -1).all()
+
+
+@given(event_batches(), st.integers(0, 2**31))
+def test_dead_event_time_encoding_contributes_zero(batch, seed):
+    """A padded (coef-0) event lane contributes EXACTLY zero to the time
+    encoding and memory aggregation: overwriting every dead lane's
+    timestamp with garbage leaves the TGN oracle's outputs and final
+    memory bit-identical. This is the event contract's half of the
+    sink-row convention — dead data is killed by coef, not by being
+    zero."""
+    import dataclasses as _dc
+
+    from repro.graph.events import pad_event_block
+    from repro.kernels.ref import tgn_stream_ref
+
+    G, src, dst, ts = batch
+    touched = np.unique(np.concatenate([src, dst]))
+    deg = int(np.bincount(np.concatenate([src, dst]), minlength=G).max())
+    rng = np.random.default_rng(seed)
+    h, din = 6, 5
+    feat_table = rng.normal(size=(G, din)).astype(np.float32)
+    blk = pad_event_block(src, dst, ts, feat_table,
+                          n_pad=touched.size + 2, k_max=deg + 1)
+    coef = np.asarray(blk.neigh_coef)
+    garbage = rng.uniform(-1e3, 1e3, coef.shape).astype(np.float32)
+    tampered = _dc.replace(
+        blk, neigh_ts=np.where(coef == 0, garbage,
+                               np.asarray(blk.neigh_ts)))
+    args = (rng.normal(size=(G, h)).astype(np.float32) * 0.5,   # mem0
+            np.abs(rng.normal(size=h)).astype(np.float32),       # freq
+            rng.normal(size=(din, h)).astype(np.float32) * 0.2,  # w_in
+            rng.normal(size=(h, 3 * h)).astype(np.float32) * 0.2,
+            rng.normal(size=(h, 3 * h)).astype(np.float32) * 0.2,
+            rng.normal(size=3 * h).astype(np.float32) * 0.1)
+
+    def run(b):
+        sT = jax.tree.map(lambda a: np.asarray(a)[None],
+                          (b.neigh_idx, b.neigh_coef, b.neigh_ts,
+                           b.node_feat, b.renumber, b.node_mask))
+        return tgn_stream_ref(*sT, *args)
+
+    o1, m1 = run(blk)
+    o2, m2 = run(tampered)
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+    np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))
 
 
 @given(st.integers(0, 2**31))

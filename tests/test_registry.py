@@ -95,7 +95,8 @@ def test_no_family_named_stream_kernels_outside_registry():
     the registry module (oracles in ref.py are ``*_stream*_ref`` — the XLA
     production path — and stay)."""
     pat = re.compile(
-        r"^def\s+_?\w*(gcrn|stacked|evolve|dgnn)\w*_stream\w*\(", re.M)
+        r"^def\s+_?\w*(gcrn|stacked|evolve|dgnn|tgn|static)\w*_stream\w*\(",
+        re.M)
     offenders = []
     for f in _src_files():
         if f.name == "stream_fused.py":

@@ -1,0 +1,370 @@
+"""The generalized temporal contract: one stream engine, three time
+semantics (kernels/stream_fused.TEMPORAL_MODES).
+
+  dense    snapshot streams, recurrent state advances every step — the
+           original gcrn/stacked/evolve families (covered by
+           test_differential.py / test_registry.py);
+  event    ragged timestamped event batches over a global node-memory
+           store (family "tgn", graph/events.py);
+  static   T=1, no recurrence, zero StateDefs (family "static_gcn") —
+           the serve engine's express lane.
+
+This file pins the two NEW contracts end to end: model-level baseline ≡
+v3 differentials (solo, batched, ragged), plan-layer temporal validation,
+the deprecated-surface warnings, and the serve express lane under both
+schedulers — including the slow-lane ~64-tenant mixed-traffic smoke.
+"""
+import dataclasses
+import threading
+import warnings as _warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro import api
+from repro.configs.dgnn import GCRN_M2, STATIC_GCN, TGN, DatasetConfig
+from repro.core import build_model, run_batched, run_stream
+from repro.core.tgn import TGNModel
+from repro.graph import (
+    generate_temporal_graph,
+    pad_event_block,
+    pad_snapshot,
+    renumber_and_normalize,
+    slice_snapshots,
+)
+from repro.kernels import ops as kops
+from repro.serve.engine import SnapshotServer
+
+# ---------------------------------------------------- event streams ----
+
+G_GLOBAL = 40
+
+
+def random_event_stream(seed: int, T: int, feat_table, n_pad=16, k_max=8):
+    """T random event batches over the global id space, padded into one
+    shared (n_pad, k_max) bucket and stacked on a leading T axis."""
+    rng = np.random.default_rng(seed)
+    blocks = []
+    for _ in range(T):
+        e = int(rng.integers(2, 7))
+        src = rng.integers(0, G_GLOBAL, e)
+        dst = (src + rng.integers(1, G_GLOBAL, e)) % G_GLOBAL
+        ts = rng.uniform(0.0, 10.0, e).astype(np.float32)
+        blocks.append(pad_event_block(src, dst, ts, feat_table,
+                                      n_pad=n_pad, k_max=k_max))
+    return blocks, jax.tree.map(lambda *xs: np.stack(xs), *blocks)
+
+
+@pytest.fixture(scope="module")
+def tgn_case():
+    cfg = dataclasses.replace(TGN, in_dim=5, hidden=8, out_dim=8)
+    model = TGNModel(cfg, n_global=G_GLOBAL)
+    rng = np.random.default_rng(0)
+    feat_table = rng.normal(size=(G_GLOBAL, cfg.in_dim)).astype(np.float32)
+    params = model.init(jax.random.PRNGKey(1))
+    return model, params, feat_table
+
+
+@pytest.mark.parametrize("td", [None, 4])
+def test_tgn_stream_matches_baseline_scan(tgn_case, td):
+    """The whole event-batch stream through ONE engine launch (node
+    memory VMEM-resident across batches) == the per-batch baseline scan,
+    outputs and final global memory."""
+    model, params, ft = tgn_case
+    blocks, blocks_T = random_event_stream(7, T=5, feat_table=ft)
+    state = model.init_state(params)
+    outs = []
+    for blk in blocks:
+        state, o = model.step(params, state, blk, mode="baseline")
+        outs.append(np.asarray(o))
+    sv3, ov3 = model.step_stream(params, model.init_state(params),
+                                 blocks_T, tn=16, td=td)
+    np.testing.assert_allclose(np.asarray(ov3), np.stack(outs), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(sv3["mem"]),
+                               np.asarray(state["mem"]), atol=2e-5)
+
+
+def test_tgn_batched_ragged_matches_solo(tgn_case):
+    """B independent event streams in ONE batched launch, RAGGED over the
+    number of event batches (``lengths`` generalized from ragged-T
+    snapshots): each live row == its solo run truncated to its length;
+    dead tail batches never touch the memory store."""
+    model, params, ft = tgn_case
+    B, T = 3, 4
+    lengths = np.asarray([4, 2, 1], np.int32)
+    streams = [random_event_stream(97 * b + 1, T=T, feat_table=ft)
+               for b in range(B)]
+    blocks_BT = jax.tree.map(lambda *xs: np.stack(xs),
+                             *[sT for _, sT in streams])
+    states0 = jax.tree.map(
+        lambda a: np.broadcast_to(a[None], (B,) + a.shape),
+        model.init_state(params))
+    stB, oB = model.step_stream_batched(params, states0, blocks_BT, tn=16,
+                                        lengths=lengths)
+    oB = np.asarray(oB)
+    for b in range(B):
+        L = int(lengths[b])
+        solo_T = jax.tree.map(lambda a, L=L: a[:L], streams[b][1])
+        st, o = model.step_stream(params, model.init_state(params),
+                                  solo_T, tn=16)
+        np.testing.assert_allclose(oB[b, :L], np.asarray(o), atol=2e-5)
+        np.testing.assert_allclose(np.asarray(stB["mem"])[b],
+                                   np.asarray(st["mem"]), atol=2e-5,
+                                   err_msg=f"row {b} memory leaked from "
+                                           "dead tail batches")
+
+
+def test_tgn_launch_validates_timestamps(tgn_case):
+    model, params, ft = tgn_case
+    _, blocks_T = random_event_stream(3, T=2, feat_table=ft)
+    bad = dataclasses.replace(
+        blocks_T, neigh_ts=np.asarray(blocks_T.neigh_ts, np.int32))
+    with pytest.raises(ValueError, match="floating"):
+        model.step_stream(params, model.init_state(params), bad, tn=16)
+
+
+# ----------------------------------------------------- static family ----
+
+_TINY = DatasetConfig("tiny-temporal", avg_nodes=20, avg_edges=40,
+                      max_nodes=48, max_edges=192, snapshots=10, seed=3)
+_BUCKET = (64, 512, 64)
+
+
+@pytest.fixture(scope="module")
+def static_case():
+    tg, ft = generate_temporal_graph(_TINY, feat_dim=8)
+    snaps = slice_snapshots(tg, 1.0)
+    cfg = dataclasses.replace(STATIC_GCN, in_dim=8, hidden=16, out_dim=8,
+                              edge_dim=8, n_gnn_layers=2)
+    model = build_model(cfg, n_global=tg.n_global_nodes)
+    params = model.init(jax.random.PRNGKey(2))
+    pads = [pad_snapshot(renumber_and_normalize(s), ft, *_BUCKET)
+            for s in snaps]
+    return tg, ft, snaps, pads, model, params
+
+
+def test_static_stream_matches_per_snapshot_forward(static_case):
+    """T independent snapshots fold onto the engine batch axis: one
+    static_gcn launch == the per-snapshot XLA GCN forward."""
+    from repro.core.dataflow import stack_time
+
+    _, _, _, pads, model, params = static_case
+    sT = stack_time(pads[:5])
+    _, outs = model.step_stream(params, {}, sT, tn=32)
+    for t, ps in enumerate(pads[:5]):
+        _, want = model.step(params, {}, ps)
+        np.testing.assert_allclose(np.asarray(outs)[t], np.asarray(want),
+                                   atol=2e-4)
+
+
+def test_static_batched_ragged_dead_slots_zero(static_case):
+    """(B, T) folds onto (B*T, 1); ragged ``lengths`` become per-slot
+    liveness and a DEAD slot's output is exactly zero (the mask kills the
+    bias term too)."""
+    from repro.core.dataflow import stack_time
+
+    _, _, _, pads, model, params = static_case
+    B, T = 2, 3
+    sBT = jax.tree.map(lambda *xs: np.stack(xs),
+                       *[stack_time(pads[b * T:(b + 1) * T])
+                         for b in range(B)])
+    lengths = np.asarray([3, 1], np.int32)
+    _, oB = model.step_stream_batched(params, {}, sBT, tn=32,
+                                      lengths=lengths)
+    oB = np.asarray(oB)
+    for b in range(B):
+        for t in range(T):
+            _, want = model.step(params, {}, jax.tree.map(
+                lambda a: a[b, t], sBT))
+            if t < int(lengths[b]):
+                np.testing.assert_allclose(oB[b, t], np.asarray(want),
+                                           atol=2e-4)
+            else:
+                np.testing.assert_array_equal(oB[b, t],
+                                              np.zeros_like(oB[b, t]))
+
+
+def test_static_kernel_rejects_multi_step_streams(static_case):
+    """The static cell spec's temporal contract is T == 1 — a T>1 stream
+    must be folded onto the batch axis by the caller, never silently
+    scanned."""
+    from repro.core.dataflow import stack_time
+
+    _, _, _, pads, model, params = static_case
+    sT = stack_time(pads[:2])
+    with pytest.raises(ValueError, match="fold independent snapshots"):
+        kops.stream_steps("static_gcn", sT.neigh_idx, sT.neigh_coef,
+                          sT.node_feat, sT.node_mask,
+                          [p["w"] for p in params["gcn"]],
+                          [p["b"] for p in params["gcn"]], None, tn=32)
+
+
+# ------------------------------------------------- plan temporal layer ----
+
+def test_plan_temporal_derived_from_family():
+    assert api.plan(family="gcrn").temporal == "dense"
+    assert api.plan(family="tgn", level="v3").temporal == "event"
+    p = api.plan(STATIC_GCN)
+    assert p.temporal == "static"
+    assert p.as_dict()["temporal"] == "static"
+
+
+def test_plan_temporal_contradiction_raises():
+    with pytest.raises(ValueError, match="contradicts"):
+        api.plan(family="tgn", level="v3", temporal="dense")
+    with pytest.raises(ValueError, match="contradicts"):
+        api.plan(family="static_gcn", level="v3", temporal="event")
+
+
+def test_plan_static_rejects_state_pool():
+    with pytest.raises(ValueError, match="state_pool_pages"):
+        api.plan(family="static_gcn", level="v3", scheduler="continuous",
+                 state_pool_pages=4)
+
+
+def test_family_temporal_single_source_of_truth():
+    from repro.kernels.stream_fused import REGISTRY
+
+    for fam, spec in REGISTRY.items():
+        assert kops.family_temporal(fam) == spec.temporal
+    with pytest.raises(KeyError):
+        kops.family_temporal("gat")
+
+
+# --------------------------------------------- deprecated-surface pins ----
+
+def test_deprecated_shims_warn(static_case, tgn_case):
+    tg, ft, snaps, pads, model, params = static_case
+    from repro.core.dataflow import stack_time
+
+    sT = stack_time(pads[:1])
+    with pytest.warns(DeprecationWarning, match="run_stream is deprecated"):
+        run_stream(model, params, {}, sT, mode="baseline")
+    sTB = jax.tree.map(lambda a: np.stack([a, a], axis=1), sT)
+    with pytest.warns(DeprecationWarning, match="run_batched is deprecated"):
+        run_batched(model, params, {}, sTB, mode="baseline")
+    cfg = dataclasses.replace(GCRN_M2, in_dim=8, hidden=16, out_dim=8,
+                              edge_dim=8, dataflow="v3")
+    with pytest.warns(DeprecationWarning, match="keyword surface"):
+        SnapshotServer(cfg, ft, n_global=tg.n_global_nodes,
+                       n_pad=_BUCKET[0], e_pad=_BUCKET[1], k_max=_BUCKET[2])
+    # the typed session surface stays silent
+    plan = api.plan(cfg, level="v3", n_pad=_BUCKET[0], e_pad=_BUCKET[1],
+                    k_max=_BUCKET[2])
+    sess = api.BoosterSession(cfg, plan, n_global=tg.n_global_nodes,
+                              feat_table=ft)
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error", DeprecationWarning)
+        SnapshotServer(session=sess)
+
+
+# ------------------------------------------------- serve express lane ----
+
+def _mixed_server(tg, ft, scheduler):
+    gcfg = dataclasses.replace(GCRN_M2, in_dim=8, hidden=16, out_dim=8,
+                               edge_dim=8, dataflow="v3")
+    scfg = dataclasses.replace(STATIC_GCN, in_dim=8, hidden=16, out_dim=8,
+                               edge_dim=8)
+    gplan = api.plan(gcfg, level="v3", n_pad=_BUCKET[0], e_pad=_BUCKET[1],
+                     k_max=_BUCKET[2], stream_chunk=4,
+                     supervision="isolate", scheduler=scheduler,
+                     state_pool_pages=2 if scheduler == "continuous"
+                     else None)
+    gsess = api.BoosterSession(gcfg, gplan, n_global=tg.n_global_nodes,
+                               feat_table=ft)
+    splan = api.plan(scfg, level="v3", n_pad=_BUCKET[0], e_pad=_BUCKET[1],
+                     k_max=_BUCKET[2])
+    ssess = api.BoosterSession(scfg, splan, n_global=tg.n_global_nodes,
+                               feat_table=ft)
+    return SnapshotServer(session=gsess, express=ssess), ssess
+
+
+@pytest.mark.parametrize("scheduler", ["rounds", "continuous"])
+def test_serve_express_coexists_with_recurrent(static_case, scheduler):
+    """run_multi with a static express tenant co-existing with recurrent
+    tenants: express outputs == solo static forwards, recurrent outputs
+    unchanged vs a no-express serve, and the launch split is visible in
+    ServeStats (express_launches / launches_by_family)."""
+    tg, ft, snaps, pads, _, _ = static_case
+    srv, ssess = _mixed_server(tg, ft, scheduler)
+    params, _ = srv.init(jax.random.PRNGKey(0))
+    xparams = ssess.model.init(jax.random.PRNGKey(1))
+    streams = {"a": snaps[:6], "b": snaps[2:9]}
+    states = {sid: srv.model.init_state(params, mode="v3")
+              for sid in streams}
+    xstreams = {"x1": snaps[:5], "x2": snaps[1:8]}
+    fstates, outs, stats = srv.run_multi(
+        params, states, streams, express_streams=xstreams,
+        express_params=xparams)
+    # express rows: stateless solo forwards, in stream order
+    for sid, ss in xstreams.items():
+        assert len(outs[sid]) == len(ss)
+        for o, s in zip(outs[sid], ss):
+            ps = pad_snapshot(renumber_and_normalize(s), ft, *_BUCKET)
+            _, want = ssess.model.step(xparams, {}, ps)
+            np.testing.assert_allclose(o, np.asarray(want), atol=2e-4,
+                                       err_msg=f"{scheduler} {sid}")
+    # recurrent rows: identical to serving without the express lane
+    for sid, ss in streams.items():
+        st = srv.model.init_state(params, mode="v3")
+        _, solo, _ = srv.run(params, st, ss)
+        assert len(outs[sid]) == len(solo)
+        for a, b in zip(outs[sid], solo):
+            np.testing.assert_allclose(a, b, atol=2e-4)
+    assert stats.express_launches > 0
+    assert (stats.launches_by_family.get("static_gcn", 0)
+            == stats.express_launches)
+    assert stats.launches_by_family.get("gcrn", 0) > 0
+    assert stats.launches == sum(stats.launches_by_family.values())
+
+
+def test_express_lane_validation(static_case):
+    tg, ft, snaps, _, _, _ = static_case
+    srv, ssess = _mixed_server(tg, ft, "rounds")
+    params, _ = srv.init(jax.random.PRNGKey(0))
+    xparams = ssess.model.init(jax.random.PRNGKey(1))
+    st = {"a": srv.model.init_state(params, mode="v3")}
+    with pytest.raises(ValueError, match="both streams and express"):
+        srv.run_multi(params, st, {"a": snaps[:2]},
+                      express_streams={"a": snaps[:2]},
+                      express_params=xparams)
+    with pytest.raises(ValueError, match="STATIC-temporal"):
+        SnapshotServer(session=srv.session, express=srv.session)
+    no_express = SnapshotServer(session=srv.session)
+    with pytest.raises(ValueError, match="needs the express lane"):
+        no_express.run_multi(params, {}, {}, express_streams={"x": snaps[:1]},
+                             express_params=xparams)
+
+
+@pytest.mark.slow
+def test_serve_scale_mixed_traffic_no_thread_leak(static_case):
+    """~64 tenants (16 recurrent + 48 static express) through the
+    continuous scheduler: every tenant fully served, per-family launch
+    counters consistent, and every producer thread joined at exit (no
+    thread leak across the run)."""
+    tg, ft, snaps, _, _, _ = static_case
+    srv, ssess = _mixed_server(tg, ft, "continuous")
+    params, _ = srv.init(jax.random.PRNGKey(0))
+    xparams = ssess.model.init(jax.random.PRNGKey(1))
+    n_rec, n_exp = 16, 48
+    streams = {f"r{i:02d}": snaps[i % 4:i % 4 + 2] for i in range(n_rec)}
+    states = {sid: srv.model.init_state(params, mode="v3")
+              for sid in streams}
+    xstreams = {f"x{i:02d}": snaps[i % 6:i % 6 + 1] for i in range(n_exp)}
+    before = threading.active_count()
+    fstates, outs, stats = srv.run_multi(
+        params, states, streams, express_streams=xstreams,
+        express_params=xparams)
+    for th in threading.enumerate():
+        assert not th.name.startswith(("dgnn-serve-producer",
+                                       "dgnn-serve-express")), th.name
+    assert threading.active_count() <= before
+    assert all(len(outs[sid]) == len(streams[sid]) for sid in streams)
+    assert all(len(outs[sid]) == len(xstreams[sid]) for sid in xstreams)
+    assert stats.express_launches > 0
+    assert (stats.launches_by_family.get("static_gcn", 0)
+            == stats.express_launches)
+    assert stats.launches == sum(stats.launches_by_family.values())
+    assert stats.ticks > 0
+    assert not stats.tenant_errors
