@@ -3,6 +3,7 @@ from __future__ import annotations
 
 import json
 import pathlib
+import re
 import time
 
 import jax
@@ -93,24 +94,41 @@ def parse_notes(notes: str) -> dict:
     return out
 
 
+def _row_key(name: str, plan: dict | None) -> str:
+    """Ledger merge key. Un-planned rows key by name. Planned rows key by
+    PLAN SIGNATURE plus the name with run-varying counters (``T8``,
+    ``B4`` suffixen) stripped: a re-run of the same config under a
+    different sweep length/batch count REPLACES its old row instead of
+    accumulating a sibling duplicate, while rows whose plans genuinely
+    differ (td, buffer_depth, batch, ...) stay distinct."""
+    if plan is None:
+        return str(name)
+    base = re.sub(r"(?<=[_/])([TB])\d+", r"\1", str(name))
+    return base + "::" + json.dumps(plan, sort_keys=True)
+
+
 def write_stream_bench(rows, plans: dict | None = None,
                        path: pathlib.Path | None = None) -> dict:
     """Merge benchmark rows into the BENCH_streams.json ledger.
 
     ``rows`` are the (name, us_per_call, notes) triples the suites print;
     ``plans`` maps row name -> StreamPlan.as_dict() for rows executed
-    through the plan API. Existing records for other names are preserved
-    (kernel_bench and fig6 both write here), so the file accumulates the
-    full stream-perf picture per commit."""
+    through the plan API. Existing records for other configs are
+    preserved (kernel_bench and fig6 both write here), so the file
+    accumulates the full stream-perf picture per commit; records for the
+    SAME config (see ``_row_key``) are replaced, not duplicated."""
     path = BENCH_STREAMS_PATH if path is None else pathlib.Path(path)
     ledger = {}
     if path.exists():
-        ledger = {r["name"]: r for r in json.loads(path.read_text())["rows"]}
+        for r in json.loads(path.read_text())["rows"]:
+            ledger[_row_key(r["name"], r.get("plan"))] = r
     for name, us, notes in rows:
         rec = {"name": name, "us_per_call": float(us), **parse_notes(notes)}
-        if plans and name in plans:
-            rec["plan"] = plans[name]
-        ledger[name] = rec
-    payload = {"rows": [ledger[k] for k in sorted(ledger)]}
+        plan = plans.get(name) if plans else None
+        if plan is not None:
+            rec["plan"] = plan
+        ledger[_row_key(name, plan)] = rec
+    ordered = sorted(ledger.values(), key=lambda r: r["name"])
+    payload = {"rows": ordered}
     path.write_text(json.dumps(payload, indent=1, sort_keys=True) + "\n")
     return payload

@@ -143,6 +143,33 @@ def run_batched_sweep(name: str = "gcrn-m2", t_steps: int = 6,
                          f"dispatches=1_vs_{B},"
                          f"snaps_live={live},snaps_padded={padded},"
                          f"speedup_vs_{B}x_sequential={t_seq / t_bat:.2f}x"))
+        # hbm_paged mirror of kernel_bench.run_paged_depth_sweep: the
+        # largest-B batched launch with the recurrent store HBM-resident,
+        # swept over the DMA ring depth (bit-identical outputs by the
+        # paging contract; the CPU rows route to the oracle like every
+        # other fig6 row, so the plan fields are the payload here).
+        B = streams[-1]
+        td = p1.td if p1.td is not None else cfg.hidden // 2
+        for depth in (1, 2, 4):
+            pP = api.plan(cfg, level="v3", batch=B, td=td,
+                          state_residency="hbm_paged", buffer_depth=depth)
+            pag = jax.jit(
+                lambda p, s, x, pP=pP: run_plan_batched(model, p, s, x,
+                                                        pP)[1])
+            jax.block_until_ready(pag(params, states, sBT))
+            tp = []
+            for _ in range(iters):
+                t0 = _time.perf_counter()
+                jax.block_until_ready(pag(params, states, sBT))
+                tp.append(_time.perf_counter() - t0)
+            t_pag = float(np.median(tp)) * 1e3
+            name_P = f"fig6/batched_v3_hbm_paged/{name}/B{B}_d{depth}"
+            PLANS[name_P] = pP.as_dict()
+            total = B * t_steps
+            rows.append((name_P, t_pag * 1e3,
+                         f"throughput={total / (t_pag / 1e3):.0f}_snap/s,"
+                         f"buffer_depth={depth},td={td},"
+                         f"snaps_live={live},snaps_padded={padded}"))
     finally:
         ops.set_force_ref(False)
     return rows

@@ -58,10 +58,11 @@ def vmem_state_block_bytes(n_global: int, hidden: int,
     """Bytes of ONE (n_global, td) state window under D-axis blocking.
 
     td=None is the fully resident layout ((n_global, hidden) per buffer).
-    The window is the PAGING UNIT an HBM-resident store would DMA per d
-    block (the ROADMAP follow-up) — NOT today's allocation: the interpret
-    build still stacks all windows in one VMEM scratch, so current VMEM
-    use does not shrink with td.
+    The window is the PAGING UNIT of ``state_residency="hbm_paged"``:
+    each DMA ring slot stages exactly one such window from the
+    HBM-resident store (``run_paged_depth_sweep`` sweeps the ring depth),
+    so under paging VMEM holds only ``O(depth)`` windows instead of the
+    full store.
     """
     return n_global * (hidden if td is None else td) * 4
 
@@ -113,11 +114,28 @@ def run() -> list[tuple[str, float, str]]:
     t2 = time_step_fn(f2, x, h, wx, wh, b)
     rows.append(("kernel/fused_gru_xla_ref", t2 * 1e3, "gates=3-in-1 matmul"))
     rows.extend(run_stream_vs_per_step())
+    rows.extend(run_paged_depth_sweep())
     rows.extend(run_evolve_stream_vs_per_step())
     rows.extend(run_batched_streams())
     rows.extend(run_evolve_batched_streams())
     rows.extend(run_serve_schedulers())
     return rows
+
+
+def _gcrn_stream_fixture(t_steps: int, hidden: int):
+    """Shared GCRN bench case: the bc-alpha stream plus random gate
+    weights and zero h/c stores (reused by the per-step-vs-V3 rows and
+    the hbm_paged ring-depth sweep so their timings are comparable)."""
+    tg, ft, snaps, sT = load_stream(BC_ALPHA, limit=t_steps)
+    G = tg.n_global_nodes
+    rngs = np.random.default_rng(3)
+    din = sT.node_feat.shape[2]
+    wx = jnp.asarray(rngs.normal(size=(din, 4 * hidden)) * 0.1, jnp.float32)
+    wh = jnp.asarray(rngs.normal(size=(hidden, 4 * hidden)) * 0.1, jnp.float32)
+    b = jnp.zeros((4 * hidden,), jnp.float32)
+    h0 = jnp.zeros((G, hidden), jnp.float32)
+    c0 = jnp.zeros((G, hidden), jnp.float32)
+    return sT, G, wx, wh, b, h0, c0
 
 
 def run_stream_vs_per_step(t_steps: int = 8, hidden: int = 128
@@ -134,15 +152,7 @@ def run_stream_vs_per_step(t_steps: int = 8, hidden: int = 128
 
     plan_res = api.plan(family="gcrn", level="v3")
     plan_blk = api.plan(family="gcrn", level="v3", td=hidden // 2)
-    tg, ft, snaps, sT = load_stream(BC_ALPHA, limit=t_steps)
-    G = tg.n_global_nodes
-    rngs = np.random.default_rng(3)
-    din = sT.node_feat.shape[2]
-    wx = jnp.asarray(rngs.normal(size=(din, 4 * hidden)) * 0.1, jnp.float32)
-    wh = jnp.asarray(rngs.normal(size=(hidden, 4 * hidden)) * 0.1, jnp.float32)
-    b = jnp.zeros((4 * hidden,), jnp.float32)
-    h0 = jnp.zeros((G, hidden), jnp.float32)
-    c0 = jnp.zeros((G, hidden), jnp.float32)
+    sT, G, wx, wh, b, h0, c0 = _gcrn_stream_fixture(t_steps, hidden)
 
     def v2_scan(h_store, c_store):
         def body(carry, s):
@@ -183,9 +193,10 @@ def run_stream_vs_per_step(t_steps: int = 8, hidden: int = 128
                  f"snaps_live={live},snaps_padded={padded}"))
     # D-blocked layout: same stream, state addressed through (G, td)
     # column windows — the VMEM-oversized-store configuration. Identical
-    # outputs (the engine's round-trip contract). The window size is the
-    # PAGING UNIT of the planned HBM-resident store, not a VMEM saving
-    # today (the interpret build stacks all windows in one allocation).
+    # outputs (the engine's round-trip contract). The window is the
+    # paging unit state_residency="hbm_paged" DMA-stages per ring slot
+    # (run_paged_depth_sweep); resident, all windows share one VMEM
+    # scratch allocation.
     td = hidden // 2
     t_v3b = time_step_fn(jax.jit(lambda hh, cc: v3_stream(hh, cc,
                                                           plan=plan_blk)),
@@ -196,6 +207,43 @@ def run_stream_vs_per_step(t_steps: int = 8, hidden: int = 128
                  f"dblock_paging_window_bytes={vmem_state_block_bytes(G, hidden, td)},"
                  f"resident_state_bytes={vmem_state_block_bytes(G, hidden)},"
                  f"snaps_live={live},snaps_padded={padded}"))
+    return rows
+
+
+def run_paged_depth_sweep(t_steps: int = 8, hidden: int = 128,
+                          iters: int = 3) -> list[tuple[str, float, str]]:
+    """HBM-paged residency × DMA ring depth (1 / 2 / 4) on the same GCRN
+    stream as ``run_stream_vs_per_step``, bit-identical outputs by the
+    paging contract (tests/test_paged.py).
+
+    depth 1 is the synchronous baseline (each window's copy blocks
+    compute), 2 double-buffers (window d+1 stages while d computes), 4
+    quad-buffers. CPU wall time measures the interpreter, not DMA
+    overlap; the structural numbers are per-window DMA bytes (the ring
+    slot's staging transfer), windows per step, ring VMEM footprint, and
+    the resident store bytes paging evicts from VMEM.
+    """
+    td = hidden // 2
+    sT, G, wx, wh, b, h0, c0 = _gcrn_stream_fixture(t_steps, hidden)
+    window = vmem_state_block_bytes(G, hidden, td)
+    n_win = -(-hidden // td)
+    rows = []
+    for depth in (1, 2, 4):
+        plan = api.plan(family="gcrn", level="v3", td=td,
+                        state_residency="hbm_paged", buffer_depth=depth)
+        fn = jax.jit(lambda hh, cc, p=plan: api.run_arrays(
+            p, sT.neigh_idx, sT.neigh_coef, sT.neigh_eidx, sT.node_feat,
+            sT.renumber, sT.node_mask, hh, cc, wx, wh, b))
+        t = time_step_fn(fn, h0, c0, iters=iters)
+        rows.append((
+            _planned(f"kernel/gcrn_v3_hbm_paged_d{depth}_td{td}_T{t_steps}",
+                     plan), t * 1e3,
+            f"dma_window_bytes={window},"
+            f"windows_per_step={n_win},"
+            f"ring_vmem_bytes={depth * window},"
+            f"staging_vmem_bytes={2 * window},"
+            f"resident_store_bytes_evicted="
+            f"{3 * vmem_state_block_bytes(G, hidden)}"))
     return rows
 
 

@@ -49,6 +49,7 @@ import numpy as np
 
 from repro.configs.dgnn import DGNNConfig
 from repro.kernels import ops as _ops
+from repro.kernels import stream_fused as _stream
 from repro.launch.mesh import DeviceSpec
 
 # dataflow levels each registered family supports (the paper's ablation
@@ -107,6 +108,12 @@ class StreamPlan:
     temporal: Optional[str] = None
     tn: int = 128                     # node-tile rows (grid J axis)
     td: Optional[int] = None          # state-feature block (grid D axis)
+    # state residency: "vmem" keeps the recurrent store in VMEM scratch
+    # across the stream; "hbm_paged" leaves it in HBM and DMA-stages the
+    # (n_global, td) windows through a buffer_depth-deep ring (bit-identical
+    # outputs; lifts the n_global x hidden VMEM cap). v3 only; needs td.
+    state_residency: str = "vmem"
+    buffer_depth: Optional[int] = None  # DMA ring depth (1 | 2 | 4)
     batch: int = 1                    # B independent streams per launch
     lengths: Optional[tuple] = None   # per-stream ragged T (len == batch)
     device: DeviceSpec = field(default_factory=DeviceSpec)
@@ -175,6 +182,35 @@ def _validate(p: StreamPlan) -> None:
         raise ValueError(f"td={p.td!r}: state-feature block must be None "
                          f"(fully resident) or a positive multiple of "
                          f"{_TILE_ALIGN}")
+    if p.state_residency not in _stream.RESIDENCY_MODES:
+        raise ValueError(
+            f"state_residency={p.state_residency!r}: expected one of "
+            f"{_stream.RESIDENCY_MODES}")
+    if p.state_residency == "hbm_paged":
+        if p.temporal == "static":
+            raise ValueError(
+                "state_residency='hbm_paged' is undefined for static "
+                f"family {p.family!r}: zero StateDefs — there is no "
+                "recurrent store to page")
+        if p.level != "v3":
+            raise ValueError(
+                "state_residency='hbm_paged' is a stream-engine (v3) "
+                f"capability; level={p.level!r} has no resident store")
+        if p.td is None:
+            raise ValueError(
+                "state_residency='hbm_paged' requires td blocking: td is "
+                "the (n_global, td) paging window the DMA ring stages "
+                "(td=None keeps the store fully VMEM-resident)")
+    if p.buffer_depth is not None:
+        if p.state_residency != "hbm_paged":
+            raise ValueError(
+                f"buffer_depth={p.buffer_depth!r} requires "
+                "state_residency='hbm_paged': the DMA staging ring only "
+                "exists for an HBM-paged store")
+        if p.buffer_depth not in _stream.BUFFER_DEPTHS:
+            raise ValueError(
+                f"buffer_depth must be one of {_stream.BUFFER_DEPTHS}, "
+                f"got {p.buffer_depth!r}")
     if not (isinstance(p.batch, int) and p.batch >= 1):
         raise ValueError(f"batch={p.batch!r}: need an int >= 1")
     if p.lengths is not None:
@@ -281,6 +317,7 @@ def _validate(p: StreamPlan) -> None:
 def plan(cfg: Optional[DGNNConfig] = None, *, family: Optional[str] = None,
          temporal: Optional[str] = None,
          level: Optional[str] = None, tn: int = 128, td=_UNSET,
+         state_residency: str = "vmem", buffer_depth=None,
          batch: int = 1, lengths=None, device: Optional[DeviceSpec] = None,
          n_pad: int = 640, e_pad: int = 4096, k_max: int = 64,
          buckets=None, stream_chunk: int = 8, queue_depth: int = 2,
@@ -311,7 +348,9 @@ def plan(cfg: Optional[DGNNConfig] = None, *, family: Optional[str] = None,
     return StreamPlan(
         family=family, temporal=temporal,
         level=level if level is not None else "v3", tn=tn,
-        td=None if td is _UNSET else td, batch=batch,
+        td=None if td is _UNSET else td,
+        state_residency=state_residency, buffer_depth=buffer_depth,
+        batch=batch,
         lengths=None if lengths is None else tuple(int(t) for t in lengths),
         device=device if device is not None else DeviceSpec(),
         n_pad=n_pad, e_pad=e_pad, k_max=k_max,
@@ -337,8 +376,11 @@ def run_arrays(p: StreamPlan, *args, force_ref: bool = False):
     if p.batch > 1 or p.lengths is not None:
         return _ops.stream_steps_batched(
             p.family, *args, tn=p.tn, td=p.td, lengths=p.lengths_array(),
-            device=p.device, force_ref=force_ref)
+            device=p.device, state_residency=p.state_residency,
+            buffer_depth=p.buffer_depth, force_ref=force_ref)
     return _ops.stream_steps(p.family, *args, tn=p.tn, td=p.td,
+                             state_residency=p.state_residency,
+                             buffer_depth=p.buffer_depth,
                              force_ref=force_ref)
 
 

@@ -138,7 +138,9 @@ def run_plan(model: Model, params, state0, snaps_T, plan):
         # every family has a time-fused stream engine: node-state-resident
         # for GCRN/stacked, weights-resident for EvolveGCN.
         return model.step_stream(params, state0, snaps_T, tn=plan.tn,
-                                 td=plan.td)
+                                 td=plan.td,
+                                 state_residency=plan.state_residency,
+                                 buffer_depth=plan.buffer_depth)
     return _scan_steps(model, params, state0, snaps_T, plan.level)
 
 
@@ -168,7 +170,9 @@ def run_plan_batched(model: Model, params, states0, snaps_BT, plan,
         lens = None if lengths is None else jnp.asarray(lengths, jnp.int32)
         return model.step_stream_batched(params, states0, snaps_BT,
                                          tn=plan.tn, td=plan.td,
-                                         lengths=lens, device=plan.device)
+                                         lengths=lens, device=plan.device,
+                                         state_residency=plan.state_residency,
+                                         buffer_depth=plan.buffer_depth)
     if lengths is not None:
         raise ValueError("ragged lengths need the stream engine "
                          f"(level='v3'); level={plan.level!r}")

@@ -132,6 +132,7 @@ class EvolveGCN:
     def _run_stream_kernel(self, params: dict, state: dict,
                            snaps: PaddedSnapshot, batched: bool,
                            tn=128, td="cfg", lengths=None, device=None,
+                           state_residency="vmem", buffer_depth=None,
                            force_ref=False) -> tuple[dict, jax.Array]:
         """Shared plumbing for the (batched) stream-engine dispatch:
         live flags (n_nodes > 0 — no-op padding snapshots must not evolve
@@ -150,25 +151,34 @@ class EvolveGCN:
         if batched:
             outs, wT = kops.stream_steps_batched(
                 self.stream_family, *args, tn=tn, td=td, lengths=lengths,
-                device=device, force_ref=force_ref)
+                device=device,
+                state_residency=state_residency, buffer_depth=buffer_depth,
+                force_ref=force_ref)
         else:
             outs, wT = kops.stream_steps(self.stream_family, *args,
-                                         tn=tn, td=td, force_ref=force_ref)
+                                         tn=tn, td=td,
+                                         state_residency=state_residency,
+                                         buffer_depth=buffer_depth,
+                                         force_ref=force_ref)
         return {"weights": list(wT)}, outs
 
     def step_stream(self, params: dict, state: dict, snaps_T: PaddedSnapshot,
-                    *, tn=128, td="cfg") -> tuple[dict, jax.Array]:
+                    *, tn=128, td="cfg", state_residency="vmem",
+                    buffer_depth=None) -> tuple[dict, jax.Array]:
         """V3: run a whole (T, ...) snapshot stream through the
         weights-resident kernel; the evolving W_l stay in VMEM across
         steps and the matrix-GRU evolution runs in-kernel between
         snapshots."""
         return self._run_stream_kernel(params, state, snaps_T, batched=False,
-                                       tn=tn, td=td)
+                                       tn=tn, td=td,
+                                       state_residency=state_residency,
+                                       buffer_depth=buffer_depth)
 
     def step_stream_batched(self, params: dict, state: dict,
                             snaps_BT: PaddedSnapshot, *, tn=128, td="cfg",
-                            lengths=None, device=None, force_ref=False
-                            ) -> tuple[dict, jax.Array]:
+                            lengths=None, device=None,
+                            state_residency="vmem", buffer_depth=None,
+                            force_ref=False) -> tuple[dict, jax.Array]:
         """Batched V3: B independent streams — (B, T, ...) leaves, weight
         state leaves (B, din_l, dout_l) — through ONE launch of the
         batched weights-resident kernel (GRU params shared, one resident
@@ -179,4 +189,7 @@ class EvolveGCN:
         engine's degraded-mode rung)."""
         return self._run_stream_kernel(params, state, snaps_BT, batched=True,
                                        tn=tn, td=td, lengths=lengths,
-                                       device=device, force_ref=force_ref)
+                                       device=device,
+                                       state_residency=state_residency,
+                                       buffer_depth=buffer_depth,
+                                       force_ref=force_ref)

@@ -157,6 +157,16 @@ class StaticGCN:
             aggs.append((g * snaps.neigh_coef[..., None]).sum(axis=-2))
         return aggs
 
+    @staticmethod
+    def _check_residency(state_residency, buffer_depth):
+        # accepted for interface parity with the stateful families, but a
+        # static family has no recurrent store to page
+        if state_residency != "vmem" or buffer_depth is not None:
+            raise ValueError(
+                "state_residency='hbm_paged' is undefined for static "
+                "family 'static_gcn': zero StateDefs — there is no "
+                "recurrent store to page")
+
     def _stream_args(self, params: dict, snaps):
         return (snaps.neigh_idx, snaps.neigh_coef, snaps.node_feat,
                 snaps.node_mask, [p["w"] for p in params["gcn"]],
@@ -164,12 +174,14 @@ class StaticGCN:
                 self._edge_aggs(params, snaps))
 
     def step_stream(self, params: dict, state: dict,
-                    snaps_T: PaddedSnapshot, *, tn=128, td="cfg"
+                    snaps_T: PaddedSnapshot, *, tn=128, td="cfg",
+                    state_residency="vmem", buffer_depth=None
                     ) -> tuple[dict, jax.Array]:
         """V3: T independent snapshots fold onto the engine's batch axis
         (one launch, T batch slots of a single T=1 step each)."""
         from repro.kernels import ops as kops
 
+        self._check_residency(state_residency, buffer_depth)
         td = self.cfg.stream_td if td == "cfg" else td
         snaps_B1 = jax.tree.map(lambda a: jnp.asarray(a)[:, None], snaps_T)
         (outs,) = kops.stream_steps_batched(
@@ -179,13 +191,15 @@ class StaticGCN:
 
     def step_stream_batched(self, params: dict, state: dict,
                             snaps_BT: PaddedSnapshot, *, tn=128, td="cfg",
-                            lengths=None, device=None, force_ref=False
-                            ) -> tuple[dict, jax.Array]:
+                            lengths=None, device=None,
+                            state_residency="vmem", buffer_depth=None,
+                            force_ref=False) -> tuple[dict, jax.Array]:
         """Batched V3: (B, T) independent snapshots fold onto (B*T, 1);
         ragged ``lengths`` (per-stream T) become per-slot 0/1 liveness.
         ``state`` passes through untouched (empty per slot)."""
         from repro.kernels import ops as kops
 
+        self._check_residency(state_residency, buffer_depth)
         td = self.cfg.stream_td if td == "cfg" else td
         leaf = jax.tree.leaves(snaps_BT)[0]
         B, T = leaf.shape[0], leaf.shape[1]

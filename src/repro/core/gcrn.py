@@ -121,6 +121,7 @@ class GCRN:
 
     def _stream(self, params: dict, state: dict, snaps, batched: bool,
                 tn=128, td="cfg", lengths=None, device=None,
+                state_residency="vmem", buffer_depth=None,
                 force_ref=False):
         """Shared plumbing for the (batched) stream-engine dispatch: the
         engine is selected by ``stream_family`` from the registry; the
@@ -139,10 +140,14 @@ class GCRN:
         if batched:
             outs_h, h_T, c_T = kops.stream_steps_batched(
                 self.stream_family, *args, tn=tn, td=td, lengths=lengths,
-                device=device, force_ref=force_ref)
+                device=device,
+                state_residency=state_residency, buffer_depth=buffer_depth,
+                force_ref=force_ref)
         else:
             outs_h, h_T, c_T = kops.stream_steps(self.stream_family, *args,
                                                  tn=tn, td=td,
+                                                 state_residency=state_residency,
+                                                 buffer_depth=buffer_depth,
                                                  force_ref=force_ref)
         out = outs_h @ params["head"]["w"] + params["head"]["b"]
         mask = snaps.node_mask
@@ -155,16 +160,20 @@ class GCRN:
         return {"h": h_T, "c": c_T}, out * mask[..., None]
 
     def step_stream(self, params: dict, state: dict, snaps_T: PaddedSnapshot,
-                    *, tn=128, td="cfg") -> tuple[dict, jax.Array]:
+                    *, tn=128, td="cfg", state_residency="vmem",
+                    buffer_depth=None) -> tuple[dict, jax.Array]:
         """V3: run a whole (T, ...) snapshot stream through the stream
-        engine; h/c stay in VMEM across steps (gather/scatter included)."""
+        engine; h/c stay resident across steps (gather/scatter included) —
+        in VMEM scratch, or HBM-paged when ``state_residency`` says so."""
         return self._stream(params, state, snaps_T, batched=False, tn=tn,
-                            td=td)
+                            td=td, state_residency=state_residency,
+                            buffer_depth=buffer_depth)
 
     def step_stream_batched(self, params: dict, state: dict,
                             snaps_BT: PaddedSnapshot, *, tn=128, td="cfg",
-                            lengths=None, device=None, force_ref=False
-                            ) -> tuple[dict, jax.Array]:
+                            lengths=None, device=None,
+                            state_residency="vmem", buffer_depth=None,
+                            force_ref=False) -> tuple[dict, jax.Array]:
         """Batched V3: B independent snapshot streams — (B, T, ...) leaves,
         state leaves (B, n_global, H) — through ONE launch of the batched
         stream engine (weights shared, one VMEM-resident store per
@@ -174,4 +183,6 @@ class GCRN:
         the XLA oracle path (the serve engine's degraded-mode rung)."""
         return self._stream(params, state, snaps_BT, batched=True, tn=tn,
                             td=td, lengths=lengths, device=device,
+                            state_residency=state_residency,
+                            buffer_depth=buffer_depth,
                             force_ref=force_ref)

@@ -102,6 +102,7 @@ class StackedDGNN:
 
     def _stream(self, params: dict, state: dict, snaps, batched: bool,
                 tn=128, td="cfg", lengths=None, device=None,
+                state_residency="vmem", buffer_depth=None,
                 force_ref=False):
         """Shared plumbing for the (batched) stream-engine dispatch.
 
@@ -133,23 +134,30 @@ class StackedDGNN:
         if batched:
             outs_h, h_T = kops.stream_steps_batched(
                 self.stream_family, *args, tn=tn, td=td, lengths=lengths,
-                device=device, force_ref=force_ref)
+                device=device,
+                state_residency=state_residency, buffer_depth=buffer_depth,
+                force_ref=force_ref)
         else:
             outs_h, h_T = kops.stream_steps(self.stream_family, *args,
                                             tn=tn, td=td,
+                                            state_residency=state_residency,
+                                            buffer_depth=buffer_depth,
                                             force_ref=force_ref)
         return {"h": h_T}, outs_h
 
     def step_stream(self, params: dict, state: dict, snaps_T: PaddedSnapshot,
-                    *, tn=128, td="cfg") -> tuple[dict, jax.Array]:
+                    *, tn=128, td="cfg", state_residency="vmem",
+                    buffer_depth=None) -> tuple[dict, jax.Array]:
         """V3: whole (T, ...) stream through the stream engine."""
         return self._stream(params, state, snaps_T, batched=False, tn=tn,
-                            td=td)
+                            td=td, state_residency=state_residency,
+                            buffer_depth=buffer_depth)
 
     def step_stream_batched(self, params: dict, state: dict,
                             snaps_BT: PaddedSnapshot, *, tn=128, td="cfg",
-                            lengths=None, device=None, force_ref=False
-                            ) -> tuple[dict, jax.Array]:
+                            lengths=None, device=None,
+                            state_residency="vmem", buffer_depth=None,
+                            force_ref=False) -> tuple[dict, jax.Array]:
         """Batched V3: B independent streams — (B, T, ...) leaves, state
         leaves (B, n_global, H) — through one launch of the batched stream
         engine. ``lengths`` runs the launch ragged over T; ``device``
@@ -157,4 +165,6 @@ class StackedDGNN:
         oracle path (the serve engine's degraded-mode rung)."""
         return self._stream(params, state, snaps_BT, batched=True, tn=tn,
                             td=td, lengths=lengths, device=device,
+                            state_residency=state_residency,
+                            buffer_depth=buffer_depth,
                             force_ref=force_ref)

@@ -96,6 +96,7 @@ class TGNModel:
 
     def _stream(self, params: dict, state: dict, blocks, batched: bool,
                 tn=128, td="cfg", lengths=None, device=None,
+                state_residency="vmem", buffer_depth=None,
                 force_ref=False):
         from repro.kernels import ops as kops
 
@@ -108,27 +109,36 @@ class TGNModel:
         if batched:
             outs, mem_T = kops.stream_steps_batched(
                 self.stream_family, *args, tn=tn, td=td, lengths=lengths,
-                device=device, force_ref=force_ref)
+                device=device,
+                state_residency=state_residency, buffer_depth=buffer_depth,
+                force_ref=force_ref)
         else:
             outs, mem_T = kops.stream_steps(self.stream_family, *args,
                                             tn=tn, td=td,
+                                            state_residency=state_residency,
+                                            buffer_depth=buffer_depth,
                                             force_ref=force_ref)
         return {"mem": mem_T}, outs
 
     def step_stream(self, params: dict, state: dict,
-                    blocks_T: PaddedEventBlock, *, tn=128, td="cfg"
+                    blocks_T: PaddedEventBlock, *, tn=128, td="cfg",
+                    state_residency="vmem", buffer_depth=None
                     ) -> tuple[dict, jax.Array]:
         """V3: the whole (T, ...) event-batch stream through the engine,
         the node-memory store VMEM-resident across batches."""
         return self._stream(params, state, blocks_T, batched=False, tn=tn,
-                            td=td)
+                            td=td, state_residency=state_residency,
+                            buffer_depth=buffer_depth)
 
     def step_stream_batched(self, params: dict, state: dict,
                             blocks_BT: PaddedEventBlock, *, tn=128,
                             td="cfg", lengths=None, device=None,
+                            state_residency="vmem", buffer_depth=None,
                             force_ref=False) -> tuple[dict, jax.Array]:
         """Batched V3: B independent event streams, ragged via
         ``lengths`` (now counting EVENT BATCHES, not snapshots)."""
         return self._stream(params, state, blocks_BT, batched=True, tn=tn,
                             td=td, lengths=lengths, device=device,
+                            state_residency=state_residency,
+                            buffer_depth=buffer_depth,
                             force_ref=force_ref)

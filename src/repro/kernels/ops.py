@@ -196,14 +196,15 @@ def _stream_index_tables(renumber, neigh_idx, n_global: int):
 
 def _gcrn_launch(batched, neigh_idx, neigh_coef, neigh_eidx, node_feat,
                  renumber, node_mask, h0, c0, wx, wh, b, edge_msg=None, *,
-                 tn: int, td):
+                 tn: int, td, residency: str = "vmem", depth: int = 2):
     """Pad/pack + engine launch for the integrated (GC-LSTM) family."""
     if not batched:
         em = None if edge_msg is None else edge_msg[None]
         outs, hT, cT = _gcrn_launch(
             True, neigh_idx[None], neigh_coef[None], neigh_eidx[None],
             node_feat[None], renumber[None], node_mask[None], h0[None],
-            c0[None], wx, wh, b, em, tn=tn, td=td)
+            c0[None], wx, wh, b, em, tn=tn, td=td, residency=residency,
+            depth=depth)
         return outs[0], hT[0], cT[0]
     n, idx, coef, eidx, x, ren, mask = _pad_stream(
         neigh_idx, neigh_coef, neigh_eidx, node_feat, renumber, node_mask, tn)
@@ -211,20 +212,23 @@ def _gcrn_launch(batched, neigh_idx, neigh_coef, neigh_eidx, node_feat,
     h = h0.shape[-1]
     outs, hT, cT = _stream.stream_call(
         "gcrn", idx, gidx, coef, eidx, x, rowg, mask, h0, c0, wx, wh, b,
-        edge_msg, tn=tn, td=td, interpret=_interpret())
+        edge_msg, tn=tn, td=td, interpret=_interpret(), residency=residency,
+        depth=depth)
     return outs[:, :, :n, :h], hT[..., :h], cT[..., :h]
 
 
 def _stacked_launch(batched, neigh_idx, neigh_coef, neigh_eidx, node_feat,
                     renumber, node_mask, h0, w_gcn, b_gcn, wx, wh, b,
-                    edge_msg=None, *, tn: int, td):
+                    edge_msg=None, *, tn: int, td,
+                    residency: str = "vmem", depth: int = 2):
     """Pad/pack + engine launch for the stacked (GCN -> GRU) family."""
     if not batched:
         em = None if edge_msg is None else edge_msg[None]
         outs, hT = _stacked_launch(
             True, neigh_idx[None], neigh_coef[None], neigh_eidx[None],
             node_feat[None], renumber[None], node_mask[None], h0[None],
-            w_gcn, b_gcn, wx, wh, b, em, tn=tn, td=td)
+            w_gcn, b_gcn, wx, wh, b, em, tn=tn, td=td,
+            residency=residency, depth=depth)
         return outs[0], hT[0]
     n, idx, coef, eidx, x, ren, mask = _pad_stream(
         neigh_idx, neigh_coef, neigh_eidx, node_feat, renumber, node_mask, tn)
@@ -232,7 +236,8 @@ def _stacked_launch(batched, neigh_idx, neigh_coef, neigh_eidx, node_feat,
     h = h0.shape[-1]
     outs, hT = _stream.stream_call(
         "stacked", idx, coef, eidx, x, rowg, mask, h0, w_gcn, b_gcn,
-        wx, wh, b, edge_msg, tn=tn, td=td, interpret=_interpret())
+        wx, wh, b, edge_msg, tn=tn, td=td, interpret=_interpret(),
+        residency=residency, depth=depth)
     return outs[:, :, :n, :h], hT[..., :h]
 
 
@@ -304,7 +309,8 @@ def _evolve_unpack(outs, wT, n: int, dims, out_dim: int, batched: bool):
 
 def _evolve_launch(batched, neigh_idx, neigh_coef, node_feat, node_mask,
                    live, weights, b_gcn, gru_wx, gru_wh, gru_b,
-                   edge_aggs=None, *, tn: int, td):
+                   edge_aggs=None, *, tn: int, td,
+                   residency: str = "vmem", depth: int = 2):
     """Pad/pack + engine launch for the weights-evolved family.
 
     ``weights``/``b_gcn``/``gru_*`` are per-layer lists (true, unpadded
@@ -318,14 +324,15 @@ def _evolve_launch(batched, neigh_idx, neigh_coef, node_feat, node_mask,
             True, neigh_idx[None], neigh_coef[None], node_feat[None],
             node_mask[None], jnp.asarray(live)[None],
             [w[None] for w in weights], b_gcn, gru_wx, gru_wh, gru_b, ea,
-            tn=tn, td=td)
+            tn=tn, td=td, residency=residency, depth=depth)
         return outs[0], tuple(w[0] for w in wT)
     n, dims, idx, coef, x, mask, w0, bg, eagg, gwx, gwh, gb = _evolve_pack(
         neigh_idx, neigh_coef, node_feat, node_mask, weights, b_gcn,
         gru_wx, gru_wh, gru_b, edge_aggs, tn, td, batched=True)
     outs, wT = _stream.stream_call(
         "evolve", idx, coef, x, mask, jnp.asarray(live, jnp.int32), w0, bg,
-        gwx, gwh, gb, eagg, tn=tn, td=td, interpret=_interpret())
+        gwx, gwh, gb, eagg, tn=tn, td=td, interpret=_interpret(),
+        residency=residency, depth=depth)
     return _evolve_unpack(outs, wT, n, dims, dims[-1][1], batched=True)
 
 
@@ -333,7 +340,7 @@ def _evolve_launch(batched, neigh_idx, neigh_coef, node_feat, node_mask,
 
 def _tgn_launch(batched, neigh_idx, neigh_coef, neigh_ts, node_feat,
                 renumber, node_mask, mem0, freq, w_in, wx, wh, b, *,
-                tn: int, td):
+                tn: int, td, residency: str = "vmem", depth: int = 2):
     """Pad/pack + engine launch for the event-stream (TGN) family.
 
     The T axis sequences EVENT BATCHES (graph/events.pad_event_block):
@@ -353,7 +360,8 @@ def _tgn_launch(batched, neigh_idx, neigh_coef, neigh_ts, node_feat,
         outs, memT = _tgn_launch(
             True, neigh_idx[None], neigh_coef[None], neigh_ts[None],
             node_feat[None], renumber[None], node_mask[None], mem0[None],
-            freq, w_in, wx, wh, b, tn=tn, td=td)
+            freq, w_in, wx, wh, b, tn=tn, td=td, residency=residency,
+            depth=depth)
         return outs[0], memT[0]
     # ts rides the eidx slot of the shared padder (same node-axis layout)
     n, idx, coef, ts, x, ren, mask = _pad_stream(
@@ -362,7 +370,8 @@ def _tgn_launch(batched, neigh_idx, neigh_coef, neigh_ts, node_feat,
     h = mem0.shape[-1]
     outs, memT = _stream.stream_call(
         "tgn", gidx, coef, ts, x, rowg, mask, mem0, freq, w_in, wx, wh, b,
-        tn=tn, td=td, interpret=_interpret())
+        tn=tn, td=td, interpret=_interpret(), residency=residency,
+        depth=depth)
     return outs[:, :, :n, :h], memT[..., :h]
 
 
@@ -394,7 +403,8 @@ def _static_pack(neigh_idx, neigh_coef, node_feat, node_mask, weights,
 
 
 def _static_launch(batched, neigh_idx, neigh_coef, node_feat, node_mask,
-                   weights, b_gcn, edge_aggs=None, *, tn: int, td):
+                   weights, b_gcn, edge_aggs=None, *, tn: int, td,
+                   residency: str = "vmem", depth: int = 2):
     """Pad/pack + engine launch for the static (no-recurrence) family.
 
     T must be 1 on the engine path (the kernel raises otherwise):
@@ -405,14 +415,16 @@ def _static_launch(batched, neigh_idx, neigh_coef, node_feat, node_mask,
         ea = None if edge_aggs is None else [a[None] for a in edge_aggs]
         (outs,) = _static_launch(
             True, neigh_idx[None], neigh_coef[None], node_feat[None],
-            node_mask[None], weights, b_gcn, ea, tn=tn, td=td)
+            node_mask[None], weights, b_gcn, ea, tn=tn, td=td,
+            residency=residency, depth=depth)
         return (outs[0],)
     n, dims, idx, coef, x, mask, w, bg, eagg = _static_pack(
         neigh_idx, neigh_coef, node_feat, node_mask, weights, b_gcn,
         edge_aggs, tn, td)
     (outs,) = _stream.stream_call(
         "static_gcn", idx, coef, x, mask, w, bg, eagg,
-        tn=tn, td=td, interpret=_interpret())
+        tn=tn, td=td, interpret=_interpret(), residency=residency,
+        depth=depth)
     return (outs[..., :n, :dims[-1][1]],)
 
 
@@ -509,7 +521,8 @@ def _shard_batch(family: str, run, args, device):
 
 
 def _stream_dispatch(family: str, batched: bool, args, kwargs, *, tn, td,
-                     force_ref, lengths=None, device=None):
+                     force_ref, lengths=None, device=None,
+                     residency: str = "vmem", depth: int = 2):
     if family not in _STREAM_DISPATCH:
         raise KeyError(f"unknown stream-engine family {family!r}; "
                        f"registered: {stream_families()}")
@@ -522,7 +535,8 @@ def _stream_dispatch(family: str, batched: bool, args, kwargs, *, tn, td,
         # engine launcher (and thus pallas_call) is unreachable from here.
         run = lambda *a: oracles[1 if batched else 0](*a, **kwargs)
     else:
-        run = lambda *a: launch(batched, *a, **kwargs, tn=tn, td=td)
+        run = lambda *a: launch(batched, *a, **kwargs, tn=tn, td=td,
+                                residency=residency, depth=depth)
     if _FAULT_HOOK is not None:
         run = _with_fault_probe(run, family, batched, ref)
     if batched and device is not None and device.n_devices > 1:
@@ -534,6 +548,7 @@ def _stream_dispatch(family: str, batched: bool, args, kwargs, *, tn, td,
 
 
 def stream_steps(family: str, *args, tn: int = 128, td=None,
+                 state_residency: str = "vmem", buffer_depth=None,
                  force_ref: bool = False, **kwargs):
     """Time-fused V3 stream (one stream): T snapshots through ONE launch of
     the generic stream engine, dispatched by ``family``
@@ -541,7 +556,12 @@ def stream_steps(family: str, *args, tn: int = 128, td=None,
     store, or EvolveGCN's evolving weights) crosses HBM exactly twice per
     stream instead of twice per step. ``td`` blocks the state feature axis
     for VMEM-oversized stores (None = fully resident); blocked and
-    unblocked layouts compute identical results.
+    unblocked layouts compute identical results. ``state_residency``
+    picks where the store LIVES across the stream: "vmem" (resident
+    scratch) or "hbm_paged" (HBM store aliased in-place, ``(n_global,
+    td)`` windows DMA-staged through a ``buffer_depth``-deep VMEM ring —
+    bit-identical outputs, requires ``td``; ``buffer_depth=None`` means
+    depth 2).
 
     Family argument lists (same order as the kernels/ref.py oracles):
       gcrn     (idx, coef, eidx, x, renumber, mask, h0, c0, wx, wh, b,
@@ -559,11 +579,13 @@ def stream_steps(family: str, *args, tn: int = 128, td=None,
                 T must be 1; fold snapshots onto the batch axis]
     """
     return _stream_dispatch(family, False, args, kwargs, tn=tn, td=td,
-                            force_ref=force_ref)
+                            force_ref=force_ref, residency=state_residency,
+                            depth=2 if buffer_depth is None else buffer_depth)
 
 
 def stream_steps_batched(family: str, *args, tn: int = 128, td=None,
                          lengths=None, device=None,
+                         state_residency: str = "vmem", buffer_depth=None,
                          force_ref: bool = False, **kwargs):
     """B independent time-fused streams in ONE engine launch (the batch is
     a leading grid dimension; weights shared, one resident state per
@@ -579,4 +601,5 @@ def stream_steps_batched(family: str, *args, tn: int = 128, td=None,
     so the sharded launch is bit-identical to the unsharded one."""
     return _stream_dispatch(family, True, args, kwargs, tn=tn, td=td,
                             force_ref=force_ref, lengths=lengths,
-                            device=device)
+                            device=device, residency=state_residency,
+                            depth=2 if buffer_depth is None else buffer_depth)

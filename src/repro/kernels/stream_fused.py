@@ -32,7 +32,7 @@ D-axis blocking (VMEM-oversized state stores)
 When the ``(n_global, hidden)`` state store exceeds VMEM, the hidden axis
 is blocked onto the ``d`` grid dimension (``td`` columns per block). Cell
 bodies address state exclusively through ``(n_global, td)`` column windows
-— the unit at which the store can page on hardware builds — and the gate
+— the paging unit of the HBM residency policy below — and the gate
 weights are re-packed host-side into per-block gate tiles
 ``(D, rows, n_gates*td)`` so each program's weight/gate working set is
 ``td``-sized. The blocking is exact, NOT a block-diagonal approximation:
@@ -45,6 +45,47 @@ COLUMN independently (columns are the GRU batch), so its per-(l, d-block)
 evolution is exact as well, and the documented padded-rows-stay-zero
 invariant holds per block. ``td=None`` (one block) reproduces the fully
 resident layout bit-for-bit.
+
+HBM-paged residency (``residency="hbm_paged"``)
+-----------------------------------------------
+D-axis blocking shrinks the *working window* but the full state store
+still occupies VMEM scratch, capping ``n_global × hidden`` at VMEM size.
+The ``hbm_paged`` residency policy makes the same move the FPGA lineage
+makes with DDR/HBM-resident state and multi-buffered streaming: paged
+stores stay in HBM for the whole stream — the state enters the kernel as
+an operand with ``memory_space=pltpu.ANY``, aliased in-place onto an
+output via ``input_output_aliases`` — and the engine stages exactly the
+``(n_global, td)`` column window each program needs through explicit
+``pltpu.make_async_copy`` DMA:
+
+  * **stage-in** (per step, at each (l, d) window's first tile): the read
+    view's window is DMA'd into a VMEM staging buffer; for ping-pong
+    states the read PLANE of an HBM A/B plane pair is selected by t's
+    parity, and the stage-in doubles as the copy-forward (untouched rows
+    ride staging into the write plane);
+  * **cell windows**: ``state_window``/``state_scatter``/``state_block``
+    resolve to the staging buffer — cell bodies are residency-agnostic;
+  * **ring-buffered full-width reads**: states declared ``full_read``
+    (the t-1 store feeding aggregations/gates) sweep ALL D windows
+    through a ``depth``-deep ring of staging buffers —
+    ``_Engine.paged_fill`` starts window w+depth's copy before computing
+    window w (depth 2 = double-buffered, 4 = quad) — and the per-window
+    fill writes the same cache columns the resident path fills, so the
+    float math is bit-identical;
+  * **write-back** (at the window's last tile, after the cell and the
+    live-gated evolve hook): the dirty staging window is DMA'd to the
+    write view (ping-pong: the opposite plane; row/weights: in place).
+
+Only the read ring is depth-buffered; stage-in and write-back are
+synchronous (start+wait) — the write must land before the next (d)
+window reuses the staging buffer. Per paged state the scratch cost is
+``(1 [+ depth if full_read]) × (n_global, td)`` staging plus DMA
+semaphores — independent of ``d_pad`` — instead of the full store, which
+is the unlock for stores larger than VMEM (``stream_call`` enforces the
+``VMEM_BUDGET_BYTES`` scratch budget). Requires ``td`` blocking;
+undefined for the "static" temporal contract (zero StateDefs — nothing
+to page). ``hbm_paged`` ≡ ``vmem`` bit-for-bit is pinned per family by
+tests/test_paged.py, solo + batched + ragged.
 
 Batch axis: a LEADING GRID DIMENSION, not ``jax.vmap`` — the vmap batching
 rule prepends its axis to the grid while forwarding ``compiler_params``
@@ -61,7 +102,7 @@ unblocked).
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Callable, Optional
 
 import jax
@@ -139,10 +180,17 @@ class StateDef:
                   buffer suffices.
       "weights"   per-layer evolving weight matrices ``(L, d_pad, d_pad)``
                   (EvolveGCN), drained per (l, d-block).
+
+    full_read: the cell body consumes the FULL-width t-1 view of this
+    state (aggregations / hidden-to-gate matmuls), not just the current
+    (d) window. Under ``hbm_paged`` residency such states sweep all D
+    windows through the depth-buffered DMA ring (``_Engine.paged_fill``)
+    into the family's cache scratch.
     """
 
     name: str
     kind: str
+    full_read: bool = False
 
 
 #: the temporal contracts a family may declare (CellSpec.temporal):
@@ -157,6 +205,27 @@ class StateDef:
 #:             and independent snapshots fold onto the B axis (the serve
 #:             engine's express lane).
 TEMPORAL_MODES = ("dense", "event", "static")
+
+#: state-residency policies (the plan's ``state_residency`` field):
+#:   "vmem"       resident: the full store lives in VMEM scratch across
+#:                the T axis (the original layout);
+#:   "hbm_paged"  paged: the store stays in HBM (ANY-memory-space operand
+#:                aliased in-place) and the engine DMA-stages the
+#:                ``(n_global, td)`` column windows through a small ring
+#:                of VMEM staging buffers (see the module docstring).
+RESIDENCY_MODES = ("vmem", "hbm_paged")
+
+#: legal DMA staging-ring depths under ``hbm_paged`` (the plan's
+#: ``buffer_depth``): 1 = synchronous per-window copies (the no-overlap
+#: baseline the benchmark sweep measures against), 2 = double-buffered
+#: (window d+1 copies in while window d computes), 4 = quad-buffered.
+BUFFER_DEPTHS = (1, 2, 4)
+
+#: VMEM scratch budget enforced at launch assembly: a resident layout
+#: whose scratch exceeds this must page (``residency="hbm_paged"``).
+#: Module-level so tests can tighten it to exercise the oversized-store
+#: path at CI-friendly sizes; 16 MiB is the per-core hardware figure.
+VMEM_BUDGET_BYTES = 16 * 1024 * 1024
 
 
 @dataclass(frozen=True)
@@ -188,7 +257,12 @@ class _StateMeta:
     kind: str
     in_idx: int     # position of the state's initial value in the inputs
     out_idx: int    # position of the drained final state in the outputs
-    scr_idx: int    # first scratch slot (pingpong uses scr_idx, scr_idx+1)
+    scr_idx: int    # resident: first scratch slot (pingpong uses scr_idx,
+                    # scr_idx+1); paged: the (G, td) staging slot
+    ring_idx: int = -1   # paged full_read states: (depth, G, td) DMA ring
+    sem_idx: int = -1    # paged states: DMA semaphore array (depth+1,) —
+                         # slots [0, depth) ring, slot depth stage-in/
+                         # write-back
 
 
 @dataclass(frozen=True)
@@ -199,6 +273,9 @@ class _Meta:
     live_idx: Optional[int]       # input index of the (B, T) live flag
     td: int
     temporal: str = "dense"       # must equal the CellSpec's declaration
+    paged: bool = False           # hbm_paged residency selected
+    depth: int = 1                # DMA staging-ring depth (paged only)
+    g_rows: int = 0               # state-store rows G (node families)
 
 
 @dataclass
@@ -212,14 +289,21 @@ class _Launch:
     meta: _Meta
     cell: Callable
     evolve: Optional[Callable]
+    aliases: dict = field(default_factory=dict)  # input→output aliasing
+                                                 # (paged in-place stores)
 
 
 class _Engine:
     """Per-program view of the engine grid handed to cell/evolve hooks."""
 
-    def __init__(self, meta: _Meta):
+    def __init__(self, meta: _Meta, outs=None, scr=None):
         self.meta = meta
         self.td = meta.td
+        self.paged = meta.paged
+        self.g_rows = meta.g_rows
+        self._outs = outs
+        self._scr = scr
+        self.b = pl.program_id(0)
         self.t = pl.program_id(1)
         self.l = pl.program_id(2)
         self.d = pl.program_id(3)
@@ -250,6 +334,10 @@ class _Engine:
 
     def state_read(self, scr, i: int):
         """Full-width t-1 view of state ``i`` (cache-fill at d == 0)."""
+        if self.paged:
+            raise RuntimeError(
+                "full-width state_read is unavailable under hbm_paged "
+                "residency — sweep the windows with paged_fill instead")
         sm = self.meta.states[i]
         if sm.kind == "pingpong":
             return jnp.where(self.even, scr[sm.scr_idx][...],
@@ -257,8 +345,12 @@ class _Engine:
         return scr[sm.scr_idx][...]
 
     def state_window(self, scr, i: int):
-        """This (d) column window of state ``i`` (t-1 view for pingpong)."""
+        """This (d) column window of state ``i`` (t-1 view for pingpong).
+        Paged: the staged window (stage-in'd from the HBM read view at the
+        window's first tile, so it holds the t-1 values)."""
         sm = self.meta.states[i]
+        if self.paged:
+            return scr[sm.scr_idx][...]
         if sm.kind == "pingpong":
             return jnp.where(self.even, scr[sm.scr_idx][:, self.blk],
                              scr[sm.scr_idx + 1][:, self.blk])
@@ -267,9 +359,15 @@ class _Engine:
     def state_scatter(self, scr, i: int, rowg, val):
         """Scatter this (d, tile) block of the new state; rowg == n_global
         marks padding rows (the sink convention) and mode="drop" discards
-        them. Pingpong states write the step's parity-selected buffer."""
+        them. Pingpong states write the step's parity-selected buffer;
+        paged states scatter into the staging window (written back to the
+        HBM write view at the window's last tile)."""
         sm = self.meta.states[i]
         blk = self.blk
+        if self.paged:
+            stg = scr[sm.scr_idx]
+            stg[...] = stg[...].at[rowg].set(val, mode="drop")
+            return
         if sm.kind == "pingpong":
             a_ref, b_ref = scr[sm.scr_idx], scr[sm.scr_idx + 1]
 
@@ -284,6 +382,106 @@ class _Engine:
             s_ref = scr[sm.scr_idx]
             s_ref[:, blk] = s_ref[:, blk].at[rowg].set(val, mode="drop")
 
+    def state_block(self, scr, i: int):
+        """Layer l's (d_pad, td) column block of a weights-kind state."""
+        sm = self.meta.states[i]
+        if self.paged:
+            return scr[sm.scr_idx][...]
+        return scr[sm.scr_idx][pl.ds(self.l, 1), :, self.blk][0]
+
+    def state_block_store(self, scr, i: int, val):
+        """Store layer l's evolved (d_pad, td) column block."""
+        sm = self.meta.states[i]
+        if self.paged:
+            scr[sm.scr_idx][...] = val
+        else:
+            scr[sm.scr_idx][pl.ds(self.l, 1), :, self.blk] = val[None]
+
+    # --------------------------------------------- paged DMA protocol ----
+    # The HBM-resident view of paged state i is its ALIASED OUTPUT ref
+    # (memory_space=ANY): reads and writes both go through it, so the
+    # store evolves in place across the stream. Plane layouts: pingpong
+    # (B, 2, G, d_pad) — plane t%2 is step t's read view, 1-(t%2) its
+    # write view (the A/B parity argument verbatim, lifted to HBM); row
+    # (B, 1, G, d_pad); weights (B, L, d_pad, d_pad).
+
+    def _hbm(self, i: int):
+        return self._outs[self.meta.states[i].out_idx]
+
+    def _read_view(self, i: int, wblk):
+        """HBM read view of state i's column window ``wblk`` (t-1)."""
+        sm = self.meta.states[i]
+        hbm = self._hbm(i)
+        if sm.kind == "pingpong":
+            return hbm.at[self.b, self.t % 2, :, wblk]
+        if sm.kind == "row":
+            return hbm.at[self.b, 0, :, wblk]
+        return hbm.at[self.b, self.l, :, wblk]
+
+    def _write_view(self, i: int):
+        """HBM write view of state i's CURRENT (d) window (step t)."""
+        sm = self.meta.states[i]
+        hbm = self._hbm(i)
+        if sm.kind == "pingpong":
+            return hbm.at[self.b, 1 - self.t % 2, :, self.blk]
+        if sm.kind == "row":
+            return hbm.at[self.b, 0, :, self.blk]
+        return hbm.at[self.b, self.l, :, self.blk]
+
+    def stage_in(self, i: int):
+        """Synchronous DMA of the current (d) window's t-1 values into
+        the staging buffer (the window's first tile). For pingpong states
+        this doubles as the copy-forward: rows the step does not scatter
+        ride staging into the write plane at write-back."""
+        sm = self.meta.states[i]
+        sem = self._scr[sm.sem_idx].at[self.meta.depth]
+        cp = pltpu.make_async_copy(self._read_view(i, self.blk),
+                                   self._scr[sm.scr_idx], sem)
+        cp.start()
+        cp.wait()
+
+    def write_back(self, i: int):
+        """Synchronous DMA of the dirty staging window to the HBM write
+        view (the window's last tile, after cell + evolve). Synchronous
+        on purpose: the next (d) window reuses the staging buffer."""
+        sm = self.meta.states[i]
+        sem = self._scr[sm.sem_idx].at[self.meta.depth]
+        cp = pltpu.make_async_copy(self._scr[sm.scr_idx],
+                                   self._write_view(i), sem)
+        cp.start()
+        cp.wait()
+
+    def paged_fill(self, i: int, fill):
+        """Ring-buffered sweep over ALL D column windows of paged state
+        i's t-1 (read) view: ``fill(w, wblk, window)`` runs per window w
+        with ``window`` the (G, td) staged value, while window w+depth's
+        DMA is already in flight (depth 2 = double-, 4 = quad-buffered;
+        depth 1 degenerates to synchronous per-window copies). The
+        per-window fill writes disjoint cache columns, so the float math
+        matches the resident full-width fill bit-for-bit."""
+        sm = self.meta.states[i]
+        ring = self._scr[sm.ring_idx]
+        sems = self._scr[sm.sem_idx]
+        depth = self.meta.depth
+        n_win = self.n_dblocks
+        dmas = {}
+
+        def _start(w):
+            slot = w % depth
+            dma = pltpu.make_async_copy(
+                self._read_view(i, pl.ds(w * self.td, self.td)),
+                ring.at[slot], sems.at[slot])
+            dma.start()
+            dmas[w] = dma
+
+        for w in range(min(depth, n_win)):
+            _start(w)
+        for w in range(n_win):
+            dmas.pop(w).wait()
+            fill(w, pl.ds(w * self.td, self.td), ring[w % depth])
+            if w + depth < n_win:
+                _start(w + depth)
+
 
 # ------------------------------------------------------------------------
 # THE stream-engine kernel body. The only Pallas kernel in this module:
@@ -293,40 +491,54 @@ def _stream_engine_kernel(cell, evolve, meta: _Meta, *refs):
     ins = refs[:meta.n_in]
     outs = refs[meta.n_in:meta.n_in + meta.n_out]
     scr = refs[meta.n_in + meta.n_out:]
-    eng = _Engine(meta)
+    eng = _Engine(meta, outs, scr)
 
-    # --- stream-boundary init (engine-owned): every stream re-initializes
-    # the scratch from its OWN state block at its first program, so streams
-    # reuse the buffers serially and each restarts the ping-pong at even
-    # parity. Weight states init per layer (each l has its own first
-    # program on the (d==0, j==0) plane).
-    for sm in meta.states:
-        in_ref = ins[sm.in_idx]
+    if meta.paged:
+        # --- paged stage-in (engine-owned): the state lives in HBM (the
+        # aliased ANY-space output ref), so there is no stream init and no
+        # resident copy-forward — at each (l, d) window's first tile the
+        # t-1 window is DMA'd into VMEM staging. For pingpong states the
+        # stage-in from the read plane IS the copy-forward (write-back
+        # pushes untouched rows into the write plane with the rest).
+        for i in range(len(meta.states)):
 
-        @pl.when(eng.stream_start)
-        def _init(sm=sm, in_ref=in_ref):
-            if sm.kind == "pingpong":
-                scr[sm.scr_idx][...] = in_ref[0]
-            elif sm.kind == "row":
-                scr[sm.scr_idx][...] = in_ref[0]
-            else:  # weights: full (d_pad, d_pad) block of layer l
-                scr[sm.scr_idx][pl.ds(eng.l, 1)] = in_ref[0]
+            @pl.when(eng.j == 0)
+            def _stage(i=i):
+                eng.stage_in(i)
+    else:
+        # --- stream-boundary init (engine-owned): every stream
+        # re-initializes the scratch from its OWN state block at its first
+        # program, so streams reuse the buffers serially and each restarts
+        # the ping-pong at even parity. Weight states init per layer (each
+        # l has its own first program on the (d==0, j==0) plane).
+        for sm in meta.states:
+            in_ref = ins[sm.in_idx]
 
-    # --- ping-pong copy-forward (engine-owned): at the start of each step
-    # copy the read window into the write window so rows this snapshot
-    # does not touch carry over; tiles then overwrite only their own rows.
-    for sm in meta.states:
-        if sm.kind != "pingpong":
-            continue
-        a_ref, b_ref = scr[sm.scr_idx], scr[sm.scr_idx + 1]
+            @pl.when(eng.stream_start)
+            def _init(sm=sm, in_ref=in_ref):
+                if sm.kind == "pingpong":
+                    scr[sm.scr_idx][...] = in_ref[0]
+                elif sm.kind == "row":
+                    scr[sm.scr_idx][...] = in_ref[0]
+                else:  # weights: full (d_pad, d_pad) block of layer l
+                    scr[sm.scr_idx][pl.ds(eng.l, 1)] = in_ref[0]
 
-        @pl.when(jnp.logical_and(eng.j == 0, eng.even))
-        def _fwd_ab(a_ref=a_ref, b_ref=b_ref):
-            b_ref[:, eng.blk] = a_ref[:, eng.blk]
+        # --- ping-pong copy-forward (engine-owned): at the start of each
+        # step copy the read window into the write window so rows this
+        # snapshot does not touch carry over; tiles then overwrite only
+        # their own rows.
+        for sm in meta.states:
+            if sm.kind != "pingpong":
+                continue
+            a_ref, b_ref = scr[sm.scr_idx], scr[sm.scr_idx + 1]
 
-        @pl.when(jnp.logical_and(eng.j == 0, jnp.logical_not(eng.even)))
-        def _fwd_ba(a_ref=a_ref, b_ref=b_ref):
-            a_ref[:, eng.blk] = b_ref[:, eng.blk]
+            @pl.when(jnp.logical_and(eng.j == 0, eng.even))
+            def _fwd_ab(a_ref=a_ref, b_ref=b_ref):
+                b_ref[:, eng.blk] = a_ref[:, eng.blk]
+
+            @pl.when(jnp.logical_and(eng.j == 0, jnp.logical_not(eng.even)))
+            def _fwd_ba(a_ref=a_ref, b_ref=b_ref):
+                a_ref[:, eng.blk] = b_ref[:, eng.blk]
 
     # --- the family's per-(t, l, d, j) cell body
     cell(eng, ins, outs, scr)
@@ -341,39 +553,141 @@ def _stream_engine_kernel(cell, evolve, meta: _Meta, *refs):
         def _evolve():
             evolve(eng, ins, scr)
 
-    # --- drain (engine-owned): this stream's last program of each (l, d)
-    # window writes the final state block (AFTER the final live step's
-    # update/evolution) back to HBM.
-    for sm in meta.states:
-        out_ref = outs[sm.out_idx]
+    if meta.paged:
+        # --- paged write-back (engine-owned): every (l, d) window's last
+        # tile DMAs the dirty staging window to the HBM write view (after
+        # the cell and the live-gated evolve hook). There is no separate
+        # drain — the store evolves in place; ``stream_call`` selects the
+        # final plane of pingpong pairs host-side from T's parity.
+        for i in range(len(meta.states)):
 
-        @pl.when(eng.stream_done)
-        def _drain(sm=sm, out_ref=out_ref):
-            if sm.kind == "pingpong":
-                a_ref, b_ref = scr[sm.scr_idx], scr[sm.scr_idx + 1]
-                out_ref[0] = jnp.where(eng.even, b_ref[:, eng.blk],
-                                       a_ref[:, eng.blk])
-            elif sm.kind == "row":
-                out_ref[0] = scr[sm.scr_idx][:, eng.blk]
-            else:
-                out_ref[0, 0] = scr[sm.scr_idx][pl.ds(eng.l, 1), :,
-                                                eng.blk][0]
+            @pl.when(eng.last_tile)
+            def _wb(i=i):
+                eng.write_back(i)
+    else:
+        # --- drain (engine-owned): this stream's last program of each
+        # (l, d) window writes the final state block (AFTER the final
+        # live step's update/evolution) back to HBM.
+        for sm in meta.states:
+            out_ref = outs[sm.out_idx]
+
+            @pl.when(eng.stream_done)
+            def _drain(sm=sm, out_ref=out_ref):
+                if sm.kind == "pingpong":
+                    a_ref, b_ref = scr[sm.scr_idx], scr[sm.scr_idx + 1]
+                    out_ref[0] = jnp.where(eng.even, b_ref[:, eng.blk],
+                                           a_ref[:, eng.blk])
+                elif sm.kind == "row":
+                    out_ref[0] = scr[sm.scr_idx][:, eng.blk]
+                else:
+                    out_ref[0, 0] = scr[sm.scr_idx][pl.ds(eng.l, 1), :,
+                                                    eng.blk][0]
+
+
+def launch_scratch_bytes(launch: _Launch) -> int:
+    """Total VMEM scratch bytes of an assembled launch (semaphore scratch
+    lives in semaphore memory and is excluded). The ground truth the
+    plan-time estimator ``stream_vmem_bytes`` is tested against."""
+    total = 0
+    for s in launch.scratch:
+        if getattr(s, "memory_space", None) != pltpu.VMEM:
+            continue
+        total += int(jnp.dtype(s.dtype).itemsize) * int(
+            functools.reduce(lambda a, b: a * b, s.shape, 1))
+    return total
+
+
+def stream_vmem_bytes(family: str, *, g_rows: int = 0, n_pad: int = 0,
+                      d_pad: int = 0, din: int = 0, dmid: int = 0,
+                      n_layers: int = 1, td: Optional[int] = None,
+                      residency: str = "vmem", depth: int = 2,
+                      itemsize: int = 4) -> int:
+    """Plan-time VMEM scratch estimate per family/residency/blocking —
+    the per-family scratch tables (docs/stream_engine.md) as a formula.
+    Bit-equal to ``launch_scratch_bytes`` of the assembled launch
+    (tests/test_paged.py pins this for every family and variant).
+
+    ``g_rows`` counts the state-store rows (n_global + sentinel) of node
+    families; ``n_pad`` the padded per-step node count; ``din``/``dmid``
+    the gcrn aggregation-input / stacked GCN-mid widths."""
+    paged = residency == "hbm_paged"
+    if paged and family == "static_gcn":
+        raise ValueError("static_gcn has no state to page")
+    t = td if td is not None else d_pad
+    n_win = -(-d_pad // t) if t else 1  # ceil
+    cached = n_win > 1
+    cells = 0
+    if family == "gcrn":
+        if paged:
+            cells = (2 + depth) * g_rows * t + n_pad * (din + d_pad)
+        else:
+            cells = 3 * g_rows * d_pad + (
+                n_pad * (din + d_pad) if cached else 0)
+    elif family == "stacked":
+        if paged:
+            cells = (1 + depth) * g_rows * t + n_pad * (dmid + d_pad)
+        else:
+            cells = g_rows * d_pad + (
+                n_pad * (dmid + d_pad) if cached else 0)
+    elif family == "evolve":
+        if paged:
+            cells = d_pad * t + 3 * n_pad * d_pad
+        else:
+            cells = (n_layers * d_pad * d_pad + 2 * n_pad * d_pad
+                     + (n_pad * d_pad if cached else 0))
+    elif family == "tgn":
+        if paged:
+            cells = (1 + depth) * g_rows * t + 2 * n_pad * d_pad
+        else:
+            cells = 2 * g_rows * d_pad + (
+                2 * n_pad * d_pad if cached else 0)
+    elif family == "static_gcn":
+        cells = 2 * n_pad * d_pad + (n_pad * d_pad if cached else 0)
+    else:
+        raise KeyError(family)
+    return cells * itemsize
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("family", "tn", "td", "interpret"))
+                   static_argnames=("family", "tn", "td", "interpret",
+                                    "residency", "depth"))
 def stream_call(family: str, *args, tn: int = 128, td: Optional[int] = None,
-                interpret: bool = False):
+                interpret: bool = False, residency: str = "vmem",
+                depth: int = 2):
     """Run a (B, T, ...) snapshot-stream batch through the stream engine.
 
     The single registry dispatch point: ``family`` selects a cell spec
     whose ``build`` assembles the launch; the engine kernel body is shared.
     ``td`` blocks the state feature axis (None = one block, fully
-    resident). Callers go through kernels/ops.py, which owns padding,
-    oracle routing, and output slicing.
+    resident); ``residency`` selects where the state store lives across
+    the stream ("vmem" resident scratch / "hbm_paged" DMA-staged windows,
+    ``depth``-deep read ring — see the module docstring). Callers go
+    through kernels/ops.py, which owns padding, oracle routing, and
+    output slicing.
     """
     spec = REGISTRY[family]
-    launch = spec.build(*args, tn=tn, td=td)
+    if residency not in RESIDENCY_MODES:
+        raise ValueError(
+            f"unknown state residency {residency!r}; expected one of "
+            f"{RESIDENCY_MODES}")
+    paged = residency == "hbm_paged"
+    if paged:
+        if spec.temporal == "static":
+            raise ValueError(
+                f"state_residency='hbm_paged' is undefined for static "
+                f"family {family!r}: zero StateDefs — there is no "
+                "recurrent store to page")
+        if td is None:
+            raise ValueError(
+                "state_residency='hbm_paged' requires td blocking: td "
+                "is the (n_global, td) paging window the DMA ring "
+                "stages (td=None keeps the store fully VMEM-resident)")
+        if depth not in BUFFER_DEPTHS:
+            raise ValueError(
+                f"buffer_depth must be one of {BUFFER_DEPTHS}, "
+                f"got {depth}")
+    launch = spec.build(*args, tn=tn, td=td, residency=residency,
+                        depth=depth)
     if launch.meta.temporal != spec.temporal:
         raise ValueError(
             f"family {family!r} built a launch declaring temporal="
@@ -384,19 +698,42 @@ def stream_call(family: str, *args, tn: int = 128, td: Optional[int] = None,
         raise ValueError(
             f"static family {family!r} must launch with zero state "
             "tensors and no evolve hook")
+    scratch_bytes = launch_scratch_bytes(launch)
+    if scratch_bytes > VMEM_BUDGET_BYTES:
+        hint = ("shrink td" if paged else
+                "page the state store with plan(state_residency="
+                "'hbm_paged', td=...)")
+        raise ValueError(
+            f"family {family!r} ({residency}, td={td}) needs "
+            f"{scratch_bytes} bytes of VMEM scratch, over the "
+            f"{VMEM_BUDGET_BYTES}-byte budget — {hint}")
     kernel = functools.partial(_stream_engine_kernel, launch.cell,
                                launch.evolve, launch.meta)
-    return pl.pallas_call(
+    res = pl.pallas_call(
         kernel,
         grid=launch.grid,
         in_specs=launch.in_specs,
         out_specs=launch.out_specs,
         out_shape=launch.out_shape,
         scratch_shapes=launch.scratch,
+        input_output_aliases=launch.aliases,
         compiler_params=pltpu.TPUCompilerParams(
             dimension_semantics=("arbitrary",) * len(launch.grid)),
         interpret=interpret,
     )(*launch.inputs)
+    if paged:
+        # node-state planes come back as (B, P, G, d_pad): select the
+        # plane the last step wrote (static in T) so callers see the
+        # resident output shapes; weights evolved in place, no planes.
+        res = list(res)
+        t_steps = launch.grid[1]
+        for sm in launch.meta.states:
+            if sm.kind == "pingpong":
+                res[sm.out_idx] = res[sm.out_idx][
+                    :, 1 if (t_steps - 1) % 2 == 0 else 0]
+            elif sm.kind == "row":
+                res[sm.out_idx] = res[sm.out_idx][:, 0]
+    return res
 
 
 # ------------------------------------------------------------------------
@@ -417,22 +754,32 @@ def _gcrn_cell(has_edge, cached, eng, ins, outs, scr):
     tn = idx.shape[0]
     rows = pl.ds(eng.j * tn, tn)
 
-    def _aggregate():
+    def _agg_x():
         x = x_ref[0, 0]
-        agg_x = (_agg_local_edge(idx, coef, eidx, x, emsg_ref[0, 0])
-                 if has_edge else _agg_local(idx, coef, x))
-        return agg_x, _agg_store(gidx, coef, eng.state_read(scr, 0))
+        return (_agg_local_edge(idx, coef, eidx, x, emsg_ref[0, 0])
+                if has_edge else _agg_local(idx, coef, x))
 
-    if cached:  # D > 1: aggregate once per (t, j); d > 0 re-reads
+    if cached:  # D > 1 or paged: aggregate once per (t, j); d > 0 re-reads
         cax, cah = scr[3], scr[4]
 
         @pl.when(eng.first_dblock)
         def _fill_caches():
-            cax[rows], cah[rows] = _aggregate()
+            cax[rows] = _agg_x()
+            if eng.paged:
+                # sweep the t-1 h store's windows through the DMA ring;
+                # the aggregation is columnwise, so per-window fills of
+                # disjoint cache columns equal the full-width fill
+                def _one(w, wblk, sval):
+                    cah[rows, wblk] = _agg_store(gidx, coef, sval)
+
+                eng.paged_fill(0, _one)
+            else:
+                cah[rows] = _agg_store(gidx, coef, eng.state_read(scr, 0))
 
         agg_x, agg_h = cax[rows], cah[rows]
     else:       # single d block: inline, no scratch round-trip
-        agg_x, agg_h = _aggregate()
+        agg_x = _agg_x()
+        agg_h = _agg_store(gidx, coef, eng.state_read(scr, 0))
 
     td = eng.td
     gates = agg_x @ wx_ref[0] + agg_h @ wh_ref[0] + b_ref[0][None, :]
@@ -441,7 +788,7 @@ def _gcrn_cell(has_edge, cached, eng, ins, outs, scr):
     g = gates[:, 2 * td:3 * td]
     o = gates[:, 3 * td:]
 
-    n_global = scr[2].shape[0]
+    n_global = eng.g_rows
     row_safe = jnp.where(rowg < n_global, rowg, 0)
     c_old = jnp.take(eng.state_window(scr, 1), row_safe, axis=0) * mask
     c_new = (jax.nn.sigmoid(f) * c_old + jax.nn.sigmoid(i) * jnp.tanh(g)) * mask
@@ -454,14 +801,17 @@ def _gcrn_cell(has_edge, cached, eng, ins, outs, scr):
 
 def _gcrn_build(neigh_idx, neigh_gidx, neigh_coef, neigh_eidx, node_feat,
                 row_gidx, node_mask, h0, c0, wx, wh, b, edge_msg=None, *,
-                tn: int, td: Optional[int]):
+                tn: int, td: Optional[int], residency: str = "vmem",
+                depth: int = 2):
     B, T, n, k = neigh_idx.shape
     din, h = node_feat.shape[3], h0.shape[2]
     G = h0.shape[1]
     assert n % tn == 0
+    paged = residency == "hbm_paged"
     td = h if td is None else td
     d_pad = _round_up(h, td)
     D = d_pad // td
+    cached = D > 1 or paged
     grid = (B, T, 1, D, n // tn)
 
     h0p = _pad_dim(h0, d_pad, -1)
@@ -484,15 +834,56 @@ def _gcrn_build(neigh_idx, neigh_gidx, neigh_coef, neigh_eidx, node_feat,
     dblk = lambda bi, t, l, d, j: (d, 0, 0)
     dblk1 = lambda bi, t, l, d, j: (d, 0)
 
+    if paged:
+        # HBM-resident stores: h as an A/B plane pair (stage-in reads the
+        # t%2 plane, write-back the other), c as a single plane; both
+        # aliased in-place onto their outputs. scr layout keeps the cache
+        # slots at the resident positions (3, 4).
+        h_in = jnp.stack([h0p, jnp.zeros_like(h0p)], axis=1)
+        c_in = c0p[:, None]
+        state_in_specs = [pl.BlockSpec(memory_space=pltpu.ANY)] * 2
+        state_out_specs = [pl.BlockSpec(memory_space=pltpu.ANY)] * 2
+        state_out_shape = [
+            jax.ShapeDtypeStruct((B, 2, G, d_pad), h0.dtype),
+            jax.ShapeDtypeStruct((B, 1, G, d_pad), c0.dtype),
+        ]
+        states = (_StateMeta("pingpong", in_idx=7, out_idx=1, scr_idx=0,
+                             ring_idx=2, sem_idx=5),
+                  _StateMeta("row", in_idx=8, out_idx=2, scr_idx=1,
+                             sem_idx=6))
+        state_scratch = [
+            pltpu.VMEM((G, td), h0.dtype),            # h staging window
+            pltpu.VMEM((G, td), c0.dtype),            # c staging window
+            pltpu.VMEM((depth, G, td), h0.dtype),     # h read ring
+        ]
+        sem_scratch = [pltpu.SemaphoreType.DMA((depth + 1,)),
+                       pltpu.SemaphoreType.DMA((depth + 1,))]
+        aliases = {7: 1, 8: 2}
+    else:
+        h_in, c_in = h0p, c0p
+        state_in_specs = [pl.BlockSpec((1, G, d_pad), state_in)] * 2
+        state_out_specs = [pl.BlockSpec((1, G, td), state_out)] * 2
+        state_out_shape = [
+            jax.ShapeDtypeStruct((B, G, d_pad), h0.dtype),
+            jax.ShapeDtypeStruct((B, G, d_pad), c0.dtype),
+        ]
+        states = (_StateMeta("pingpong", in_idx=7, out_idx=1, scr_idx=0),
+                  _StateMeta("row", in_idx=8, out_idx=2, scr_idx=2))
+        state_scratch = [
+            pltpu.VMEM((G, d_pad), h0.dtype),         # h ping
+            pltpu.VMEM((G, d_pad), h0.dtype),         # h pong
+            pltpu.VMEM((G, d_pad), c0.dtype),         # c (own-row)
+        ]
+        sem_scratch = []
+        aliases = {}
+
     meta = _Meta(
-        n_in=13, n_out=3,
-        states=(_StateMeta("pingpong", in_idx=7, out_idx=1, scr_idx=0),
-                _StateMeta("row", in_idx=8, out_idx=2, scr_idx=2)),
-        live_idx=None, td=td)
+        n_in=13, n_out=3, states=states,
+        live_idx=None, td=td, paged=paged, depth=depth, g_rows=G)
     return _Launch(
         grid=grid,
         inputs=(neigh_idx, neigh_gidx, neigh_coef, neigh_eidx, node_feat,
-                row_gidx, node_mask, h0p, c0p, wxp, whp, bp, edge_msg),
+                row_gidx, node_mask, h_in, c_in, wxp, whp, bp, edge_msg),
         in_specs=[
             pl.BlockSpec((1, 1, tn, k), tile),        # neigh_idx (local)
             pl.BlockSpec((1, 1, tn, k), tile),        # neigh_gidx (global)
@@ -501,8 +892,8 @@ def _gcrn_build(neigh_idx, neigh_gidx, neigh_coef, neigh_eidx, node_feat,
             pl.BlockSpec((1, 1, n, din), step),       # node_feat, per (b, t)
             pl.BlockSpec((1, 1, tn), row),            # row_gidx
             pl.BlockSpec((1, 1, tn), row),            # node_mask
-            pl.BlockSpec((1, G, d_pad), state_in),    # h0, per stream
-            pl.BlockSpec((1, G, d_pad), state_in),    # c0, per stream
+            state_in_specs[0],                        # h0 / h plane pair
+            state_in_specs[1],                        # c0 / c plane
             pl.BlockSpec((1, din, 4 * td), dblk),     # wx gate tile, per d
             pl.BlockSpec((1, d_pad, 4 * td), dblk),   # wh gate tile, per d
             pl.BlockSpec((1, 4 * td), dblk1),         # bias gate tile
@@ -510,25 +901,20 @@ def _gcrn_build(neigh_idx, neigh_gidx, neigh_coef, neigh_eidx, node_feat,
         ],
         out_specs=[
             pl.BlockSpec((1, 1, tn, td), out_tile),   # per-step h outputs
-            pl.BlockSpec((1, G, td), state_out),      # final h, per (b, d)
-            pl.BlockSpec((1, G, td), state_out),      # final c, per (b, d)
+            state_out_specs[0],                       # final h
+            state_out_specs[1],                       # final c
         ],
         out_shape=[
             jax.ShapeDtypeStruct((B, T, n, d_pad), node_feat.dtype),
-            jax.ShapeDtypeStruct((B, G, d_pad), h0.dtype),
-            jax.ShapeDtypeStruct((B, G, d_pad), c0.dtype),
-        ],
-        scratch=[
-            pltpu.VMEM((G, d_pad), h0.dtype),         # h ping
-            pltpu.VMEM((G, d_pad), h0.dtype),         # h pong
-            pltpu.VMEM((G, d_pad), c0.dtype),         # c (own-row)
-        ] + ([
+        ] + state_out_shape,
+        scratch=state_scratch + ([
             pltpu.VMEM((n, din), node_feat.dtype),    # agg_x cache
             pltpu.VMEM((n, d_pad), h0.dtype),         # agg_h cache
-        ] if D > 1 else []),
+        ] if cached else []) + sem_scratch,
         meta=meta,
-        cell=functools.partial(_gcrn_cell, has_edge, D > 1),
+        cell=functools.partial(_gcrn_cell, has_edge, cached),
         evolve=None,
+        aliases=aliases,
     )
 
 
@@ -549,27 +935,40 @@ def _stacked_cell(has_edge, cached, eng, ins, outs, scr):
     mask = mask_ref[0, 0][:, None]
     tn = idx.shape[0]
     rows = pl.ds(eng.j * tn, tn)
-    n_global = h_scr.shape[0]
+    n_global = eng.g_rows
     row_safe = jnp.where(rowg < n_global, rowg, 0)
 
-    def _transform():
+    def _node_transform():
         x = x_ref[0, 0]
         agg = (_agg_local_edge(idx, coef, eidx, x, emsg_ref[0, 0])
                if has_edge else _agg_local(idx, coef, x))
-        nt = agg @ wg_ref[...] + bg_ref[...][None, :]
-        # t-1 own rows, gathered BEFORE this step's first write to them
-        return nt, jnp.take(h_scr[...], row_safe, axis=0) * mask
+        return agg @ wg_ref[...] + bg_ref[...][None, :]
 
-    if cached:  # D > 1: once per (t, j); d > 0 re-reads
+    def _gather_rows(store):
+        # t-1 own rows, gathered BEFORE this step's first write to them
+        return jnp.take(store, row_safe, axis=0) * mask
+
+    if cached:  # D > 1 or paged: once per (t, j); d > 0 re-reads
         cnt, chold = scr[1], scr[2]
 
         @pl.when(eng.first_dblock)
         def _fill_caches():
-            cnt[rows], chold[rows] = _transform()
+            cnt[rows] = _node_transform()
+            if eng.paged:
+                # sweep the t-1 h store's windows through the DMA ring;
+                # the gather is columnwise, so per-window fills of
+                # disjoint cache columns equal the full-width fill
+                def _one(w, wblk, sval):
+                    chold[rows, wblk] = _gather_rows(sval)
+
+                eng.paged_fill(0, _one)
+            else:
+                chold[rows] = _gather_rows(h_scr[...])
 
         nt, h_old_full = cnt[rows], chold[rows]
     else:       # single d block: read-then-write in one program
-        nt, h_old_full = _transform()
+        nt = _node_transform()
+        h_old_full = _gather_rows(h_scr[...])
 
     td = eng.td
     gx = nt @ wx_ref[0] + b_ref[0][None, :]
@@ -588,15 +987,18 @@ def _stacked_cell(has_edge, cached, eng, ins, outs, scr):
 
 def _stacked_build(neigh_idx, neigh_coef, neigh_eidx, node_feat, row_gidx,
                    node_mask, h0, w_gcn, b_gcn, wx, wh, b, edge_msg=None, *,
-                   tn: int, td: Optional[int]):
+                   tn: int, td: Optional[int], residency: str = "vmem",
+                   depth: int = 2):
     B, T, n, k = neigh_idx.shape
     din, h = node_feat.shape[3], h0.shape[2]
     dmid = w_gcn.shape[1]
     G = h0.shape[1]
     assert n % tn == 0
+    paged = residency == "hbm_paged"
     td = h if td is None else td
     d_pad = _round_up(h, td)
     D = d_pad // td
+    cached = D > 1 or paged
     grid = (B, T, 1, D, n // tn)
 
     h0p = _pad_dim(h0, d_pad, -1)
@@ -620,14 +1022,37 @@ def _stacked_build(neigh_idx, neigh_coef, neigh_eidx, node_feat, row_gidx,
     dblk = lambda bi, t, l, d, j: (d, 0, 0)
     dblk1 = lambda bi, t, l, d, j: (d, 0)
 
+    if paged:
+        # HBM-resident own-row store as a single plane, aliased in-place
+        # onto its output; caches stay at the resident positions (1, 2).
+        h_in = h0p[:, None]
+        h_in_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+        h_out_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+        h_out_shape = jax.ShapeDtypeStruct((B, 1, G, d_pad), h0.dtype)
+        states = (_StateMeta("row", in_idx=6, out_idx=1, scr_idx=0,
+                             ring_idx=3, sem_idx=4),)
+        state_scratch = [pltpu.VMEM((G, td), h0.dtype)]   # h staging window
+        ring_scratch = [pltpu.VMEM((depth, G, td), h0.dtype)]  # h read ring
+        sem_scratch = [pltpu.SemaphoreType.DMA((depth + 1,))]
+        aliases = {6: 1}
+    else:
+        h_in = h0p
+        h_in_spec = pl.BlockSpec((1, G, d_pad), state_in)
+        h_out_spec = pl.BlockSpec((1, G, td), state_out)
+        h_out_shape = jax.ShapeDtypeStruct((B, G, d_pad), h0.dtype)
+        states = (_StateMeta("row", in_idx=6, out_idx=1, scr_idx=0),)
+        state_scratch = [pltpu.VMEM((G, d_pad), h0.dtype)]  # h (own-row)
+        ring_scratch = []
+        sem_scratch = []
+        aliases = {}
+
     meta = _Meta(
-        n_in=13, n_out=2,
-        states=(_StateMeta("row", in_idx=6, out_idx=1, scr_idx=0),),
-        live_idx=None, td=td)
+        n_in=13, n_out=2, states=states,
+        live_idx=None, td=td, paged=paged, depth=depth, g_rows=G)
     return _Launch(
         grid=grid,
         inputs=(neigh_idx, neigh_coef, neigh_eidx, node_feat, row_gidx,
-                node_mask, h0p, w_gcn, b_gcn, wxp, whp, bp, edge_msg),
+                node_mask, h_in, w_gcn, b_gcn, wxp, whp, bp, edge_msg),
         in_specs=[
             pl.BlockSpec((1, 1, tn, k), tile),
             pl.BlockSpec((1, 1, tn, k), tile),
@@ -635,7 +1060,7 @@ def _stacked_build(neigh_idx, neigh_coef, neigh_eidx, node_feat, row_gidx,
             pl.BlockSpec((1, 1, n, din), step),
             pl.BlockSpec((1, 1, tn), row),
             pl.BlockSpec((1, 1, tn), row),
-            pl.BlockSpec((1, G, d_pad), state_in),     # h0, per stream
+            h_in_spec,                                 # h0 / h plane
             pl.BlockSpec((din, dmid), res2),           # GCN weight (full)
             pl.BlockSpec((dmid,), res1),               # GCN bias
             pl.BlockSpec((1, dmid, 3 * td), dblk),     # wx gate tile, per d
@@ -645,21 +1070,20 @@ def _stacked_build(neigh_idx, neigh_coef, neigh_eidx, node_feat, row_gidx,
         ],
         out_specs=[
             pl.BlockSpec((1, 1, tn, td), out_tile),
-            pl.BlockSpec((1, G, td), state_out),
+            h_out_spec,
         ],
         out_shape=[
             jax.ShapeDtypeStruct((B, T, n, d_pad), node_feat.dtype),
-            jax.ShapeDtypeStruct((B, G, d_pad), h0.dtype),
+            h_out_shape,
         ],
-        scratch=[
-            pltpu.VMEM((G, d_pad), h0.dtype),          # h (own-row)
-        ] + ([
+        scratch=state_scratch + ([
             pltpu.VMEM((n, dmid), node_feat.dtype),    # node-transform cache
             pltpu.VMEM((n, d_pad), h0.dtype),          # t-1 h-row cache
-        ] if D > 1 else []),
+        ] if cached else []) + ring_scratch + sem_scratch,
         meta=meta,
-        cell=functools.partial(_stacked_cell, has_edge, D > 1),
+        cell=functools.partial(_stacked_cell, has_edge, cached),
         evolve=None,
+        aliases=aliases,
     )
 
 
@@ -680,7 +1104,7 @@ def _evolve_cell(has_edge, cached, eng, ins, outs, scr):
     (idx_ref, coef_ref, x_ref, mask_ref, _live, _w0, bg_ref, eagg_ref,
      _wx, _wh, _bp) = ins
     out_ref = outs[0]
-    w_scr, xa, xb = scr[0], scr[1], scr[2]
+    xa, xb = scr[1], scr[2]
     l, j = eng.l, eng.j
     d_pad = xa.shape[1]
 
@@ -715,7 +1139,7 @@ def _evolve_cell(has_edge, cached, eng, ins, outs, scr):
     else:       # single d block: inline, no scratch round-trip
         agg = _aggregate()
 
-    w_blk = w_scr[pl.ds(l, 1), :, eng.blk][0]           # (d_pad, td)
+    w_blk = eng.state_block(scr, 0)                     # (d_pad, td)
     h = agg @ w_blk + bg_ref[0][None, :]
     h = jnp.where(l == eng.n_layers - 1, h, jnp.maximum(h, 0.0)) * mask
 
@@ -740,8 +1164,7 @@ def _evolve_evolve(eng, ins, scr):
     the block evolves independently; gate blocks split at d_pad (params
     padded per gate block by ops._pad_matrix_gru_params)."""
     wx_ref, wh_ref, bp_ref = ins[8], ins[9], ins[10]
-    w_scr = scr[0]
-    wt = w_scr[pl.ds(eng.l, 1), :, eng.blk][0].T       # (td, d_pad)
+    wt = eng.state_block(scr, 0).T                     # (td, d_pad)
     d = wt.shape[1]
     gx = wt @ wx_ref[0] + bp_ref[0][None, :]
     gh = wt @ wh_ref[0]
@@ -750,12 +1173,13 @@ def _evolve_evolve(eng, ins, scr):
     r = jax.nn.sigmoid(rx + rh)
     z = jax.nn.sigmoid(zx + zh)
     nvec = jnp.tanh(nx + r * nh)
-    w_scr[pl.ds(eng.l, 1), :, eng.blk] = (((1.0 - z) * nvec + z * wt).T)[None]
+    eng.state_block_store(scr, 0, ((1.0 - z) * nvec + z * wt).T)
 
 
 def _evolve_build(neigh_idx, neigh_coef, node_feat, node_mask, live,
                   w0, b_gcn, gru_wx, gru_wh, gru_b, edge_agg=None, *,
-                  tn: int, td: Optional[int]):
+                  tn: int, td: Optional[int], residency: str = "vmem",
+                  depth: int = 2):
     """Inputs pre-padded to the common square d_pad (a td multiple) by
     kernels/ops.py: node_feat (B, T, n, d_pad); w0 (B, L, d_pad, d_pad) —
     each stream's primed evolving weights, entering and leaving the chip
@@ -764,9 +1188,11 @@ def _evolve_build(neigh_idx, neigh_coef, node_feat, node_mask, live,
     B, T, n, k = neigh_idx.shape
     L, d_pad = w0.shape[1], w0.shape[2]
     assert n % tn == 0
+    paged = residency == "hbm_paged"
     td = d_pad if td is None else td
     assert d_pad % td == 0
     D = d_pad // td
+    cached = D > 1 or paged
     grid = (B, T, L, D, n // tn)
 
     tile = lambda bi, t, l, d, j: (bi, t, j, 0)
@@ -788,10 +1214,30 @@ def _evolve_build(neigh_idx, neigh_coef, node_feat, node_mask, live,
         edge_agg = jnp.zeros((1, 1, 1, tn, d_pad), node_feat.dtype)
         eagg_map = lambda bi, t, l, d, j: (0, 0, 0, 0, 0)
 
+    if paged:
+        # HBM-resident evolving W, evolved IN PLACE in the aliased
+        # (B, L, d_pad, d_pad) output: stage-in pulls layer l's (d) column
+        # block into a (d_pad, td) staging window, the evolve hook updates
+        # staging, write-back pushes it home. No read ring: the cell only
+        # ever consumes its own (l, d) block, never the full width.
+        w_in_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+        w_out_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+        states = (_StateMeta("weights", in_idx=5, out_idx=1, scr_idx=0,
+                             sem_idx=4),)
+        state_scratch = [pltpu.VMEM((d_pad, td), w0.dtype)]  # W staging
+        sem_scratch = [pltpu.SemaphoreType.DMA((depth + 1,))]
+        aliases = {5: 1}
+    else:
+        w_in_spec = pl.BlockSpec((1, 1, d_pad, d_pad), w_in)
+        w_out_spec = pl.BlockSpec((1, 1, d_pad, td), w_out)
+        states = (_StateMeta("weights", in_idx=5, out_idx=1, scr_idx=0),)
+        state_scratch = [pltpu.VMEM((L, d_pad, d_pad), w0.dtype)]
+        sem_scratch = []
+        aliases = {}
+
     meta = _Meta(
-        n_in=11, n_out=2,
-        states=(_StateMeta("weights", in_idx=5, out_idx=1, scr_idx=0),),
-        live_idx=4, td=td)
+        n_in=11, n_out=2, states=states,
+        live_idx=4, td=td, paged=paged, depth=depth, g_rows=0)
     return _Launch(
         grid=grid,
         inputs=(neigh_idx, neigh_coef, node_feat, node_mask, live,
@@ -802,7 +1248,7 @@ def _evolve_build(neigh_idx, neigh_coef, node_feat, node_mask, live,
             pl.BlockSpec((1, 1, n, d_pad), step),         # node_feat
             pl.BlockSpec((1, 1, tn), row),                # node_mask
             pl.BlockSpec((1, 1), flag),                   # live flag
-            pl.BlockSpec((1, 1, d_pad, d_pad), w_in),     # W0, per (b, l)
+            w_in_spec,                                    # W0, per (b, l)
             pl.BlockSpec((1, td), layer_blk),             # GCN bias tile
             pl.BlockSpec((1, 1, 1, tn, d_pad), eagg_map),  # edge agg
             pl.BlockSpec((1, d_pad, 3 * d_pad), layer_res3),  # GRU wx
@@ -811,22 +1257,22 @@ def _evolve_build(neigh_idx, neigh_coef, node_feat, node_mask, live,
         ],
         out_specs=[
             pl.BlockSpec((1, 1, tn, td), out_tile),       # per-step outputs
-            pl.BlockSpec((1, 1, d_pad, td), w_out),       # final weights
+            w_out_spec,                                   # final weights
         ],
         out_shape=[
             jax.ShapeDtypeStruct((B, T, n, d_pad), node_feat.dtype),
             jax.ShapeDtypeStruct((B, L, d_pad, d_pad), w0.dtype),
         ],
-        scratch=[
-            pltpu.VMEM((L, d_pad, d_pad), w0.dtype),   # resident evolving W
+        scratch=state_scratch + [
             pltpu.VMEM((n, d_pad), node_feat.dtype),   # activation ping
             pltpu.VMEM((n, d_pad), node_feat.dtype),   # activation pong
         ] + ([
             pltpu.VMEM((n, d_pad), node_feat.dtype),   # aggregation cache
-        ] if D > 1 else []),
+        ] if cached else []) + sem_scratch,
         meta=meta,
-        cell=functools.partial(_evolve_cell, has_edge, D > 1),
+        cell=functools.partial(_evolve_cell, has_edge, cached),
         evolve=_evolve_evolve,
+        aliases=aliases,
     )
 
 
@@ -854,32 +1300,48 @@ def _tgn_cell(cached, eng, ins, outs, scr):
     mask = mask_ref[0, 0][:, None]
     tn = gidx.shape[0]
     rows = pl.ds(eng.j * tn, tn)
-    n_global = scr[0].shape[0]
+    n_global = eng.g_rows
     row_safe = jnp.where(rowg < n_global, rowg, 0)
 
-    def _compute():
-        store = eng.state_read(scr, 0)       # full-width t-1 memory
-        agg_m = _agg_store(gidx, coef, store)
+    def _inputs():
         # sinusoidal time encoding per event lane; padded freq columns
         # give cos(0)=1 but only ever multiply zero-padded wx rows
         enc = jnp.cos(ts[..., None] * freq_ref[0][None, None, :])
         agg_e = (enc * coef[..., None]).sum(axis=1)
         x_tile = jax.lax.dynamic_slice_in_dim(x_ref[0, 0], eng.j * tn, tn,
                                               axis=0)
-        inp = x_tile @ win_ref[...] + agg_m + agg_e
-        mem_own = jnp.take(store, row_safe, axis=0) * mask
-        return inp, mem_own
+        return x_tile @ win_ref[...], agg_e
 
-    if cached:  # D > 1: compute once per (t, j); d > 0 re-reads
+    if cached:  # D > 1 or paged: compute once per (t, j); d > 0 re-reads
         cinp, cmem = scr[2], scr[3]
 
         @pl.when(eng.first_dblock)
         def _fill_caches():
-            cinp[rows], cmem[rows] = _compute()
+            xw, agg_e = _inputs()
+            if eng.paged:
+                # sweep the t-1 memory's windows through the DMA ring;
+                # every term is columnwise and the sum association
+                # ((x@win + agg_m) + agg_e) matches the resident fill,
+                # so per-window fills are bit-identical
+                def _one(w, wblk, sval):
+                    agg_m = _agg_store(gidx, coef, sval)
+                    cols = slice(w * eng.td, (w + 1) * eng.td)
+                    cinp[rows, wblk] = (xw[:, cols] + agg_m) + agg_e[:, cols]
+                    cmem[rows, wblk] = jnp.take(sval, row_safe,
+                                                axis=0) * mask
+
+                eng.paged_fill(0, _one)
+            else:
+                store = eng.state_read(scr, 0)   # full-width t-1 memory
+                cinp[rows] = (xw + _agg_store(gidx, coef, store)) + agg_e
+                cmem[rows] = jnp.take(store, row_safe, axis=0) * mask
 
         inp, mem_own = cinp[rows], cmem[rows]
     else:       # single d block: inline, no scratch round-trip
-        inp, mem_own = _compute()
+        store = eng.state_read(scr, 0)           # full-width t-1 memory
+        xw, agg_e = _inputs()
+        inp = (xw + _agg_store(gidx, coef, store)) + agg_e
+        mem_own = jnp.take(store, row_safe, axis=0) * mask
 
     td = eng.td
     gx = inp @ wx_ref[0] + b_ref[0][None, :]
@@ -897,7 +1359,8 @@ def _tgn_cell(cached, eng, ins, outs, scr):
 
 def _tgn_build(neigh_gidx, neigh_coef, neigh_ts, node_feat, row_gidx,
                node_mask, mem0, freq, w_in, wx, wh, b, *,
-               tn: int, td: Optional[int]):
+               tn: int, td: Optional[int], residency: str = "vmem",
+               depth: int = 2):
     """Event-stream launch: (B, T, n, k) ELL event batches with per-lane
     timestamps; the node-memory store (B, G, h) is the single pingpong
     state, entering and leaving the chip once per stream."""
@@ -905,9 +1368,11 @@ def _tgn_build(neigh_gidx, neigh_coef, neigh_ts, node_feat, row_gidx,
     din, h = node_feat.shape[3], mem0.shape[2]
     G = mem0.shape[1]
     assert n % tn == 0
+    paged = residency == "hbm_paged"
     td = h if td is None else td
     d_pad = _round_up(h, td)
     D = d_pad // td
+    cached = D > 1 or paged
     grid = (B, T, 1, D, n // tn)
 
     mem0p = _pad_dim(mem0, d_pad, -1)
@@ -927,14 +1392,42 @@ def _tgn_build(neigh_gidx, neigh_coef, neigh_ts, node_feat, row_gidx,
     dblk = lambda bi, t, l, d, j: (d, 0, 0)
     dblk1 = lambda bi, t, l, d, j: (d, 0)
 
+    if paged:
+        # HBM-resident memory store as an A/B plane pair, aliased in-place
+        # onto its output; caches stay at the resident positions (2, 3).
+        m_in = jnp.stack([mem0p, jnp.zeros_like(mem0p)], axis=1)
+        m_in_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+        m_out_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+        m_out_shape = jax.ShapeDtypeStruct((B, 2, G, d_pad), mem0.dtype)
+        states = (_StateMeta("pingpong", in_idx=6, out_idx=1, scr_idx=0,
+                             ring_idx=1, sem_idx=4),)
+        state_scratch = [
+            pltpu.VMEM((G, td), mem0.dtype),            # mem staging window
+            pltpu.VMEM((depth, G, td), mem0.dtype),     # mem read ring
+        ]
+        sem_scratch = [pltpu.SemaphoreType.DMA((depth + 1,))]
+        aliases = {6: 1}
+    else:
+        m_in = mem0p
+        m_in_spec = pl.BlockSpec((1, G, d_pad), state_in)
+        m_out_spec = pl.BlockSpec((1, G, td), state_out)
+        m_out_shape = jax.ShapeDtypeStruct((B, G, d_pad), mem0.dtype)
+        states = (_StateMeta("pingpong", in_idx=6, out_idx=1, scr_idx=0),)
+        state_scratch = [
+            pltpu.VMEM((G, d_pad), mem0.dtype),       # mem ping
+            pltpu.VMEM((G, d_pad), mem0.dtype),       # mem pong
+        ]
+        sem_scratch = []
+        aliases = {}
+
     meta = _Meta(
-        n_in=12, n_out=2,
-        states=(_StateMeta("pingpong", in_idx=6, out_idx=1, scr_idx=0),),
-        live_idx=None, td=td, temporal="event")
+        n_in=12, n_out=2, states=states,
+        live_idx=None, td=td, temporal="event", paged=paged, depth=depth,
+        g_rows=G)
     return _Launch(
         grid=grid,
         inputs=(neigh_gidx, neigh_coef, neigh_ts, node_feat, row_gidx,
-                node_mask, mem0p, freq_p, win_p, wxp, whp, bp),
+                node_mask, m_in, freq_p, win_p, wxp, whp, bp),
         in_specs=[
             pl.BlockSpec((1, 1, tn, k), tile),        # partner gidx (global)
             pl.BlockSpec((1, 1, tn, k), tile),        # event coef (1/deg)
@@ -942,7 +1435,7 @@ def _tgn_build(neigh_gidx, neigh_coef, neigh_ts, node_feat, row_gidx,
             pl.BlockSpec((1, 1, n, din), step),       # touched-node features
             pl.BlockSpec((1, 1, tn), row),            # row_gidx
             pl.BlockSpec((1, 1, tn), row),            # node_mask
-            pl.BlockSpec((1, G, d_pad), state_in),    # mem0, per stream
+            m_in_spec,                                # mem0 / mem plane pair
             pl.BlockSpec((1, d_pad), res2),           # time-enc frequencies
             pl.BlockSpec((din, d_pad), res2),         # input projection
             pl.BlockSpec((1, d_pad, 3 * td), dblk),   # wx gate tile, per d
@@ -951,22 +1444,20 @@ def _tgn_build(neigh_gidx, neigh_coef, neigh_ts, node_feat, row_gidx,
         ],
         out_specs=[
             pl.BlockSpec((1, 1, tn, td), out_tile),   # per-batch mem outputs
-            pl.BlockSpec((1, G, td), state_out),      # final memory, per (b, d)
+            m_out_spec,                               # final memory
         ],
         out_shape=[
             jax.ShapeDtypeStruct((B, T, n, d_pad), node_feat.dtype),
-            jax.ShapeDtypeStruct((B, G, d_pad), mem0.dtype),
+            m_out_shape,
         ],
-        scratch=[
-            pltpu.VMEM((G, d_pad), mem0.dtype),       # mem ping
-            pltpu.VMEM((G, d_pad), mem0.dtype),       # mem pong
-        ] + ([
+        scratch=state_scratch + ([
             pltpu.VMEM((n, d_pad), node_feat.dtype),  # GRU-input cache
             pltpu.VMEM((n, d_pad), mem0.dtype),       # own-row mem cache
-        ] if D > 1 else []),
+        ] if cached else []) + sem_scratch,
         meta=meta,
-        cell=functools.partial(_tgn_cell, D > 1),
+        cell=functools.partial(_tgn_cell, cached),
         evolve=None,
+        aliases=aliases,
     )
 
 
@@ -1036,10 +1527,14 @@ def _static_cell(has_edge, cached, eng, ins, outs, scr):
 
 def _static_build(neigh_idx, neigh_coef, node_feat, node_mask,
                   weights, b_gcn, edge_agg=None, *,
-                  tn: int, td: Optional[int]):
+                  tn: int, td: Optional[int], residency: str = "vmem",
+                  depth: int = 2):
     """Inputs pre-padded to the common square d_pad by kernels/ops.py:
     node_feat (B, 1, n, d_pad); weights (L, d_pad, d_pad) stacked per
     layer, SHARED across the batch (params, not state)."""
+    if residency != "vmem":
+        raise ValueError(
+            "static_gcn has no state to page; residency must be 'vmem'")
     B, T, n, k = neigh_idx.shape
     if T != 1:
         raise ValueError(
@@ -1111,13 +1606,14 @@ REGISTRY: dict[str, CellSpec] = {
     "gcrn": CellSpec(
         name="gcrn",
         resident="node-state store: h (ping-pong pair) + c (own-row)",
-        states=(StateDef("h", "pingpong"), StateDef("c", "row")),
+        states=(StateDef("h", "pingpong", full_read=True),
+                StateDef("c", "row")),
         build=_gcrn_build,
         temporal="dense"),
     "stacked": CellSpec(
         name="stacked",
         resident="node-state store: h (own-row)",
-        states=(StateDef("h", "row"),),
+        states=(StateDef("h", "row", full_read=True),),
         build=_stacked_build,
         temporal="dense"),
     "evolve": CellSpec(
@@ -1129,7 +1625,7 @@ REGISTRY: dict[str, CellSpec] = {
     "tgn": CellSpec(
         name="tgn",
         resident="node-memory store: mem (ping-pong pair)",
-        states=(StateDef("mem", "pingpong"),),
+        states=(StateDef("mem", "pingpong", full_read=True),),
         build=_tgn_build,
         temporal="event"),
     "static_gcn": CellSpec(

@@ -272,10 +272,14 @@ class SnapshotServer:
         # the degradation ladder's oracle rung (pure-XLA production path).
         self._stream_step_batched = jax.jit(
             lambda p, s, sBT, lens: self.model.step_stream_batched(
-                p, s, sBT, tn=self.plan.tn, td=self.plan.td, lengths=lens))
+                p, s, sBT, tn=self.plan.tn, td=self.plan.td, lengths=lens,
+                state_residency=self.plan.state_residency,
+                buffer_depth=self.plan.buffer_depth))
         self._stream_step_batched_ref = jax.jit(
             lambda p, s, sBT, lens: self.model.step_stream_batched(
                 p, s, sBT, tn=self.plan.tn, td=self.plan.td, lengths=lens,
+                state_residency=self.plan.state_residency,
+                buffer_depth=self.plan.buffer_depth,
                 force_ref=True))
         # ------------------------------------------------ express lane ----
         # a second, STATIC-family BoosterSession: its tenants are

@@ -132,7 +132,8 @@ class ContinuousScheduler:
         ctr = {"live": 0, "padded": 0, "promoted": 0, "launches": 0,
                "timeouts": 0, "degraded": 0, "ticks": 0, "prefill": 0}
         sup = TenantSupervisor(sids + x_sids, srv._policy, outputs=outs)
-        pool = TenantStatePool(states, srv.state_pool_pages, sup)
+        pool = TenantStatePool(states, srv.state_pool_pages, sup,
+                               residency=srv.plan.state_residency)
         backlog: dict = {sid: deque() for sid in sids + x_sids}
         eof: set = set()
         last_tick = {sid: 0 for sid in sids + x_sids}
@@ -161,8 +162,11 @@ class ContinuousScheduler:
                     ready.sort(key=lambda s: (last_tick[s], repr(s)))
                     x_ready = [s for s in ready if s in x_set]
                     ready = [s for s in ready if s not in x_set]
-                    if srv.state_pool_pages is not None:
-                        ready = ready[:srv.state_pool_pages]
+                    if pool.capacity is not None:
+                        # EFFECTIVE capacity: hbm_paged plans hold
+                        # HBM_PAGE_FACTOR× more resident tenants per
+                        # nominal page (see state_pool.TenantStatePool)
+                        ready = ready[:pool.capacity]
                     tick_no += 1
                     ctr["ticks"] += 1
                     x_group: list = []

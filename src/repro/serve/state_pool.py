@@ -32,6 +32,15 @@ from collections import OrderedDict
 
 from repro.serve.supervision import TenantSupervisor
 
+# capacity multiplier for HBM-paged tenants: with
+# ``plan.state_residency="hbm_paged"`` the stream kernel keeps each
+# tenant's recurrent store in HBM (only a (n_global, td) staging window
+# transits VMEM), so a "device page" is an HBM allocation — orders of
+# magnitude roomier than the VMEM-resident budget ``state_pool_pages``
+# was sized against. The pool lifts its effective capacity by this
+# factor rather than asking every caller to re-derive a page budget.
+HBM_PAGE_FACTOR = 8
+
 
 class PoolOverflow(RuntimeError):
     """A working set larger than the pool was requested."""
@@ -42,25 +51,33 @@ class TenantStatePool:
 
     ``states`` is the engine's device-resident state dict (mutated in
     place); ``pages=None`` disables eviction (every tenant stays
-    resident — the pool is then pure bookkeeping).
+    resident — the pool is then pure bookkeeping). ``residency`` is the
+    plan's ``state_residency``: ``"hbm_paged"`` tenants' device pages are
+    HBM pages, so the pool's effective capacity is
+    ``pages * HBM_PAGE_FACTOR`` (``capacity``); the nominal ``pages``
+    budget is kept for stats/reporting.
     """
 
     def __init__(self, states: dict, pages: int | None,
-                 supervisor: TenantSupervisor):
+                 supervisor: TenantSupervisor, residency: str = "vmem"):
         if pages is not None and pages < 1:
             raise ValueError(f"pages={pages!r}: need >= 1 or None")
         self.states = states
         self.pages = pages
+        self.residency = residency
+        self.capacity = (None if pages is None
+                         else pages * HBM_PAGE_FACTOR
+                         if residency == "hbm_paged" else pages)
         self.sup = supervisor
         self.host_pages: dict = {}
         # LRU order over RESIDENT tenants (oldest first)
         self._lru: OrderedDict = OrderedDict(
             (sid, None) for sid in sorted(states, key=repr))
-        if pages is not None and len(states) > pages:
+        if self.capacity is not None and len(states) > self.capacity:
             # over-committed from the start: spill down to capacity before
             # the first tick (arbitrary-but-deterministic victim order)
             for sid in list(self._lru):
-                if len(self._lru) <= pages:
+                if len(self._lru) <= self.capacity:
                     break
                 self._evict(sid)
 
@@ -97,15 +114,15 @@ class TenantStatePool:
         scheduler bounds its tick working set to the pool size, so hitting
         this means a scheduler bug, not load."""
         working = list(dict.fromkeys(sids))
-        if self.pages is not None and len(working) > self.pages:
+        if self.capacity is not None and len(working) > self.capacity:
             raise PoolOverflow(
                 f"working set of {len(working)} tenants exceeds the "
-                f"{self.pages}-page state pool")
+                f"{self.capacity}-page state pool")
         for sid in working:
             if sid not in self._lru:
-                if self.pages is not None:
+                if self.capacity is not None:
                     keep = set(working)
-                    while len(self._lru) >= self.pages:
+                    while len(self._lru) >= self.capacity:
                         victim = next(s for s in self._lru if s not in keep)
                         self._evict(victim)
                 self._recover(sid)

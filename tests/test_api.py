@@ -71,6 +71,20 @@ def test_plan_defaults_from_config():
           promotion_guard="psychic"), "promotion_guard"),
     (dict(family="gcrn", buckets=((64, 256, 8),),
           promotion_guard="measured"), "without"),
+    # --- HBM-paged state residency (the paging PR's validation rules) ---
+    (dict(family="gcrn", state_residency="ddr"),
+     "state_residency='ddr': expected one of"),
+    (dict(family="static_gcn", td=8, state_residency="hbm_paged"),
+     "undefined for static family 'static_gcn': zero StateDefs"),
+    (dict(family="gcrn", level="baseline", td=8,
+          state_residency="hbm_paged"),
+     "stream-engine .v3. capability"),
+    (dict(family="gcrn", td=None, state_residency="hbm_paged"),
+     "requires td blocking"),
+    (dict(family="gcrn", td=8, buffer_depth=2),
+     "buffer_depth=2 requires state_residency='hbm_paged'"),
+    (dict(family="gcrn", td=8, state_residency="hbm_paged",
+          buffer_depth=3), r"buffer_depth must be one of \(1, 2, 4\)"),
 ])
 def test_plan_invalid_raises_at_construction(kwargs, match):
     with pytest.raises(ValueError, match=match):

@@ -225,6 +225,37 @@ def test_tenant_state_pool_paging_unit():
     assert totals["evictions"] == totals["recoveries"] > 0
 
 
+def test_tenant_state_pool_hbm_paged_capacity_lift():
+    """Under ``state_residency='hbm_paged'`` a tenant's device page is an
+    HBM page, so the pool's EFFECTIVE capacity is
+    ``pages * HBM_PAGE_FACTOR`` — the same nominal budget holds far more
+    resident tenants, with zero evictions where the VMEM-resident pool
+    would thrash."""
+    from repro.serve.state_pool import HBM_PAGE_FACTOR
+
+    sids = [f"t{i}" for i in range(5)]
+    sup = TenantSupervisor(sids, SupervisionPolicy(isolate=True))
+    mk = lambda: {"h": jnp.zeros(4, jnp.float32)}
+    # VMEM-resident pool: 5 tenants over a 2-page budget spills 3
+    vm = TenantStatePool({s: mk() for s in sids}, pages=2,
+                         supervisor=sup, residency="vmem")
+    assert vm.capacity == 2 and len(vm.host_pages) == 3
+    # HBM-paged pool: same nominal budget, 2 * HBM_PAGE_FACTOR effective
+    # pages — everyone stays resident, a full-set acquire is legal
+    sup2 = TenantSupervisor(sids, SupervisionPolicy(isolate=True))
+    hp = TenantStatePool({s: mk() for s in sids}, pages=2,
+                         supervisor=sup2, residency="hbm_paged")
+    assert hp.capacity == 2 * HBM_PAGE_FACTOR
+    assert not hp.host_pages and hp.resident == set(sids)
+    hp.acquire(sids)  # would raise PoolOverflow on the vmem pool
+    with pytest.raises(PoolOverflow):
+        vm.acquire(sids)
+    # pages=None stays unbounded in both residencies
+    assert TenantStatePool({s: mk() for s in sids}, pages=None,
+                           supervisor=sup2,
+                           residency="hbm_paged").capacity is None
+
+
 # ------------------------------------------------------ chaos under ticks ----
 
 
