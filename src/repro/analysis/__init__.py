@@ -1,0 +1,40 @@
+"""repro.analysis — static contract checker + AST linter for the stream
+engine, plan surface, and serve layer.
+
+Run it as ``python -m repro.analysis [--format text|json|github]
+[--rules contracts,lint,drift|rule-id,...]``; exits non-zero when any
+finding survives suppression. See docs/static_analysis.md for the rule
+catalog and the contract-pass <-> runtime-test division of labor.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Optional
+
+from repro.analysis import contracts, drift, lint
+from repro.analysis.core import (Finding, Report, Rule, apply_suppressions,
+                                 repo_root, select_rules)
+
+__all__ = ["ALL_RULES", "Finding", "Report", "Rule", "run_all", "repo_root",
+           "select_rules"]
+
+#: every rule the analyzer knows, across the three pass groups.
+ALL_RULES = {**contracts.RULES, **lint.RULES, **drift.RULES}
+
+
+def run_all(root: Optional[Path] = None,
+            rules: Optional[frozenset] = None) -> Report:
+    """Run every selected pass group over the repo at ``root`` and return
+    the suppression-filtered Report."""
+    root = repo_root() if root is None else Path(root)
+    rules = frozenset(ALL_RULES) if rules is None else rules
+    report = Report(rules_run=tuple(sorted(rules)))
+    findings = []
+    if rules & set(lint.RULES):
+        findings += lint.run_lint(root, rules=rules)
+    if rules & set(contracts.RULES):
+        findings += contracts.run_contracts(rules=rules)
+    if rules & set(drift.RULES):
+        findings += drift.run_drift(root, rules=rules)
+    report.findings = apply_suppressions(findings, root, report)
+    return report

@@ -1,0 +1,58 @@
+"""CLI entry point: ``python -m repro.analysis``.
+
+Exit status: 0 = clean, 1 = findings, 2 = bad invocation. Under GitHub
+Actions (``GITHUB_ACTIONS=true``) annotations are emitted alongside the
+chosen format so findings land on the PR diff.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from pathlib import Path
+
+from repro.analysis import ALL_RULES, run_all, select_rules
+from repro.analysis.core import GROUPS
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static contract checker + AST linter for the "
+                    "DGNN-Booster stream engine, plan surface, and serve "
+                    "layer")
+    ap.add_argument("--format", choices=("text", "json", "github"),
+                    default="text", help="report format (default: text)")
+    ap.add_argument("--rules", default=None, metavar="SPEC",
+                    help="comma-separated rule ids and/or group names "
+                         f"({', '.join(GROUPS)}); default: everything")
+    ap.add_argument("--root", default=None, metavar="DIR",
+                    help="repo root to analyze (default: autodetected)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalog and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rid in sorted(ALL_RULES):
+            r = ALL_RULES[rid]
+            print(f"{rid:28s} {r.group:9s} {r.severity:7s} {r.rationale}")
+        return 0
+
+    rules = select_rules(ALL_RULES, args.rules)
+    root = Path(args.root) if args.root else None
+    report = run_all(root=root, rules=rules)
+
+    if args.format == "json":
+        print(report.to_json())
+    elif args.format == "github":
+        print(report.to_github() or "analysis clean")
+    else:
+        print(report.to_text())
+    if (os.environ.get("GITHUB_ACTIONS") == "true"
+            and args.format != "github" and report.findings):
+        print(report.to_github(), file=sys.stderr)
+    return 1 if report.findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

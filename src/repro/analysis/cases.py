@@ -1,0 +1,97 @@
+"""Minimal per-family launch fixtures for the kernel-contract passes.
+
+The contract sweep never executes a kernel — it only needs arguments
+that ASSEMBLE: shapes obeying the family contracts (ELL layout, gate
+widths, the nonzero-coef-references-masked-row invariant) at the
+smallest sizes that still exercise D-blocking (h == 2*td) and multiple
+node tiles. Kept independent of tests/harness.py on purpose: the
+analyzer is a src/ subsystem and must not import the test tree (the
+drift passes cross-check that harness builders and this module cover
+the same registry).
+
+Every array is deterministic (seeded numpy) so contract findings are
+reproducible run-to-run.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+# small but structured: 2 node tiles (n/tn), D = d_pad/td = 2 blocks,
+# odd T to exercise both ping-pong parities.
+N, K, T, TN, TD, H, DIN, DMID = 32, 4, 3, 16, 8, 16, 8, 12
+
+
+def _ell_stream(rng, T=T, n=N, k=K, e=4 * N, din=DIN, n_global=None):
+    """(idx, coef, eidx, x, renumber, mask) padded ELL stream with ragged
+    per-step node counts and valid renumber rows — the same contract
+    tests/harness.random_ell_stream builds, at fixture size."""
+    G = n_global if n_global is not None else 2 * n + 9
+    arrs = {key: [] for key in ("idx", "coef", "eidx", "x", "ren", "mask")}
+    for _ in range(T):
+        nr = int(rng.integers(max(n // 3, 1), n + 1))
+        idx = rng.integers(0, nr, (n, k)).astype(np.int32)
+        coef = (rng.uniform(size=(n, k))
+                * (rng.uniform(size=(n, k)) > 0.4)).astype(np.float32)
+        coef[nr:] = 0.0
+        x = rng.normal(size=(n, din)).astype(np.float32)
+        x[nr:] = 0.0
+        ren = np.full(n, -1, np.int32)
+        ren[:nr] = rng.permutation(G)[:nr]
+        mask = np.zeros(n, np.float32)
+        mask[:nr] = 1.0
+        eidx = rng.integers(0, e, (n, k)).astype(np.int32)
+        for key, v in zip(("idx", "coef", "eidx", "x", "ren", "mask"),
+                          (idx, coef, eidx, x, ren, mask)):
+            arrs[key].append(v)
+    return tuple(np.stack(arrs[key]) for key in
+                 ("idx", "coef", "eidx", "x", "ren", "mask"))
+
+
+def _rand(rng, shape, scale):
+    return (rng.normal(size=shape) * scale).astype(np.float32)
+
+
+def stream_args(family: str, seed: int = 0):
+    """ops.stream_steps-ready solo argument list for one registry family
+    (raises KeyError for families without a fixture — the contract pass
+    reports that as a finding rather than crashing the sweep)."""
+    rng = np.random.default_rng(seed)
+    G = 2 * N + 9
+    if family == "gcrn":
+        S = _ell_stream(rng)
+        return (*S, _rand(rng, (G, H), 0.5), _rand(rng, (G, H), 0.5),
+                _rand(rng, (DIN, 4 * H), 0.2), _rand(rng, (H, 4 * H), 0.2),
+                _rand(rng, (4 * H,), 0.1))
+    if family == "stacked":
+        S = _ell_stream(rng)
+        return (*S, _rand(rng, (G, H), 0.5), _rand(rng, (DIN, DMID), 0.2),
+                _rand(rng, (DMID,), 0.1), _rand(rng, (DMID, 3 * H), 0.2),
+                _rand(rng, (H, 3 * H), 0.2), _rand(rng, (3 * H,), 0.1))
+    if family == "evolve":
+        dims = [(DIN, H), (H, TD)]
+        idx, coef, _eidx, x, _ren, mask = _ell_stream(rng)
+        live = np.ones(T, np.int32)
+        ws = [_rand(rng, d, 0.3) for d in dims]
+        bg = [_rand(rng, (d[1],), 0.1) for d in dims]
+        gwx = [_rand(rng, (d[0], 3 * d[0]), 0.2) for d in dims]
+        gwh = [_rand(rng, (d[0], 3 * d[0]), 0.2) for d in dims]
+        gb = [_rand(rng, (3 * d[0],), 0.1) for d in dims]
+        return (idx, coef, x, mask, live, ws, bg, gwx, gwh, gb)
+    if family == "tgn":
+        idx, coef, _eidx, x, ren, mask = _ell_stream(rng)
+        ts = rng.uniform(0.0, 8.0, idx.shape).astype(np.float32)
+        return (idx, coef, ts, x, ren, mask,
+                _rand(rng, (G, H), 0.5),
+                np.abs(_rand(rng, (H,), 0.5)) + 0.05,
+                _rand(rng, (DIN, H), 0.2), _rand(rng, (H, 3 * H), 0.2),
+                _rand(rng, (H, 3 * H), 0.2), _rand(rng, (3 * H,), 0.1))
+    if family == "static_gcn":
+        dims = [(DIN, H), (H, TD)]
+        idx, coef, _eidx, x, _ren, mask = _ell_stream(rng, T=1)
+        ws = [_rand(rng, d, 0.3) for d in dims]
+        bs = [_rand(rng, (d[1],), 0.1) for d in dims]
+        return (idx, coef, x, mask, ws, bs, None)
+    raise KeyError(
+        f"no contract-pass fixture for stream family {family!r}: a cell "
+        "spec was registered without analysis coverage — add a builder "
+        "in repro/analysis/cases.py")

@@ -1,0 +1,224 @@
+"""Drift passes — cross-artifact consistency the test suite cannot see.
+
+The repo's contract surface is spread over four artifacts that evolve
+independently: the ``StreamPlan`` dataclass, its field table in
+docs/api.md, the CI family matrix, and the tests/harness.py case
+builders. Each pass re-derives one pairing and reports divergence:
+
+  * ``plan-doc-drift``      StreamPlan fields <-> the docs/api.md
+                            "Plan fields" table (both directions);
+  * ``family-levels-drift`` api.FAMILY_LEVELS keys <-> the kernel
+                            registry;
+  * ``ci-matrix-drift``     the ci.yml ``family: [...]`` matrix <-> the
+                            registry;
+  * ``harness-case-drift``  the ``family == "..."`` branches of
+                            tests/harness.py stream_kernel_case (and its
+                            fixture twin repro/analysis/cases.py) <-> the
+                            registry.
+
+Every artifact path is a parameter so tests can point a pass at a
+drifted copy without touching the tree.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import fields as dc_fields
+from pathlib import Path
+from typing import Optional
+
+from repro import api
+from repro.analysis.core import Finding, Rule
+from repro.kernels import stream_fused
+
+RULES = {r.id: r for r in (
+    Rule("plan-doc-drift", "drift", "error",
+         "docs/api.md's plan-field table is the user-facing contract; a "
+         "StreamPlan field missing from it (or a documented field that no "
+         "longer exists) means the docs lie about the API."),
+    Rule("family-levels-drift", "drift", "error",
+         "api.FAMILY_LEVELS must key exactly the kernel registry — a "
+         "registered family without a level ladder cannot be planned, and "
+         "a ladder without a family is dead dispatch surface."),
+    Rule("ci-matrix-drift", "drift", "error",
+         "The CI family matrix must enumerate the whole registry, or a "
+         "family ships without per-family CI coverage."),
+    Rule("harness-case-drift", "drift", "error",
+         "tests/harness.py stream_kernel_case and the analyzer's own "
+         "fixture module must both build cases for every registered "
+         "family, or sweep tests silently skip it."),
+)}
+
+#: the api.md table section the plan-field pass parses.
+PLAN_TABLE_HEADING = "## Plan fields"
+
+_BACKTICK = re.compile(r"`([A-Za-z_][A-Za-z0-9_]*)`")
+_CI_MATRIX = re.compile(r"^\s*family:\s*\[([^\]]*)\]", re.M)
+
+
+def _find(rule: str, path: str, line: int, msg: str) -> Finding:
+    r = RULES[rule]
+    return Finding(rule, r.group, r.severity, path, line, msg)
+
+
+def _read(root: Path, rel: str) -> Optional[str]:
+    try:
+        return (root / rel).read_text()
+    except OSError:
+        return None
+
+
+def parse_plan_table(text: str):
+    """-> {field_name: 1-indexed line} from the plan-field table: every
+    backticked identifier in the FIRST cell of each body row under the
+    heading (one row may document several fields, e.g. n_pad/e_pad/k_max)."""
+    fields, in_table = {}, False
+    for i, line in enumerate(text.splitlines(), start=1):
+        if line.startswith(PLAN_TABLE_HEADING):
+            in_table = True
+            continue
+        if not in_table:
+            continue
+        if line.startswith("#"):        # next section: table is over
+            break
+        s = line.strip()
+        if not s.startswith("|"):
+            continue
+        first = s.strip("|").split("|", 1)[0]
+        if set(first.strip()) <= {"-", ":", " "} or "field" == first.strip():
+            continue                    # separator / header row
+        for name in _BACKTICK.findall(first):
+            fields.setdefault(name, i)
+    return fields
+
+
+def check_plan_docs(root: Path, api_md: str = "docs/api.md",
+                    plan_cls=api.StreamPlan) -> list:
+    text = _read(root, api_md)
+    if text is None:
+        return [_find("plan-doc-drift", api_md, 0,
+                      f"{api_md} not found — the plan-field table is the "
+                      "documented API contract")]
+    doc = parse_plan_table(text)
+    live = [f.name for f in dc_fields(plan_cls)]
+    heading_line = next(
+        (i for i, line in enumerate(text.splitlines(), start=1)
+         if line.startswith(PLAN_TABLE_HEADING)), 0)
+    out = []
+    for name in live:
+        if name not in doc:
+            out.append(_find(
+                "plan-doc-drift", api_md, heading_line,
+                f"StreamPlan field `{name}` has no row in the "
+                f"{PLAN_TABLE_HEADING!r} table"))
+    for name, line in sorted(doc.items(), key=lambda kv: kv[1]):
+        if name not in live:
+            out.append(_find(
+                "plan-doc-drift", api_md, line,
+                f"documented plan field `{name}` does not exist on "
+                "StreamPlan — stale row"))
+    return out
+
+
+def _set_drift(rule, path, line, label, got, want):
+    out = []
+    missing, extra = want - got, got - want
+    if missing:
+        out.append(_find(rule, path, line,
+                         f"{label} is missing registered families: "
+                         f"{sorted(missing)}"))
+    if extra:
+        out.append(_find(rule, path, line,
+                         f"{label} names unregistered families: "
+                         f"{sorted(extra)}"))
+    return out
+
+
+def check_family_levels(registry=None, levels=None) -> list:
+    registry = stream_fused.REGISTRY if registry is None else registry
+    levels = api.FAMILY_LEVELS if levels is None else levels
+    return _set_drift("family-levels-drift", "src/repro/api.py", 0,
+                      "api.FAMILY_LEVELS", set(levels), set(registry))
+
+
+def check_ci_matrix(root: Path, ci_yml: str = ".github/workflows/ci.yml",
+                    registry=None) -> list:
+    registry = stream_fused.REGISTRY if registry is None else registry
+    text = _read(root, ci_yml)
+    if text is None:
+        return [_find("ci-matrix-drift", ci_yml, 0,
+                      f"{ci_yml} not found — no per-family CI coverage")]
+    m = _CI_MATRIX.search(text)
+    if not m:
+        return [_find("ci-matrix-drift", ci_yml, 0,
+                      "no `family: [...]` matrix found in the workflow")]
+    line = text[:m.start()].count("\n") + 1
+    got = {t.strip() for t in m.group(1).split(",") if t.strip()}
+    return _set_drift("ci-matrix-drift", ci_yml, line,
+                      "the CI family matrix", got, set(registry))
+
+
+def _case_families(tree: ast.AST, fn_name: str):
+    """String constants compared against a name ``family`` inside the
+    given builder function (``if family == "gcrn": ...`` branches)."""
+    fams, line = set(), 0
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef) and node.name == fn_name:
+            line = node.lineno
+            for cmp_ in ast.walk(node):
+                if (isinstance(cmp_, ast.Compare)
+                        and isinstance(cmp_.left, ast.Name)
+                        and cmp_.left.id == "family"
+                        and len(cmp_.comparators) == 1
+                        and isinstance(cmp_.comparators[0], ast.Constant)
+                        and isinstance(cmp_.comparators[0].value, str)):
+                    fams.add(cmp_.comparators[0].value)
+            break
+    return fams, line
+
+
+def check_harness_cases(root: Path, harness_py: str = "tests/harness.py",
+                        cases_py: str = "src/repro/analysis/cases.py",
+                        registry=None) -> list:
+    registry = stream_fused.REGISTRY if registry is None else registry
+    out = []
+    for rel, fn in ((harness_py, "stream_kernel_case"),
+                    (cases_py, "stream_args")):
+        text = _read(root, rel)
+        if text is None:
+            out.append(_find("harness-case-drift", rel, 0,
+                             f"{rel} not found — no case builders to check"))
+            continue
+        try:
+            tree = ast.parse(text, filename=rel)
+        except SyntaxError as e:
+            out.append(_find("harness-case-drift", rel, e.lineno or 0,
+                             f"unparseable: {e.msg}"))
+            continue
+        fams, line = _case_families(tree, fn)
+        missing = set(registry) - fams
+        if missing:
+            out.append(_find(
+                "harness-case-drift", rel, line,
+                f"{fn}() in {rel} has no branch for registered "
+                f"families {sorted(missing)} — sweeps silently skip them"))
+    return out
+
+
+def run_drift(root: Path, registry=None,
+              rules: Optional[frozenset] = None, **paths) -> list:
+    """All four drift passes. ``paths`` forwards per-artifact overrides
+    (api_md=, ci_yml=, harness_py=, cases_py=) for tests."""
+    findings = []
+    findings += check_plan_docs(root, **{k: v for k, v in paths.items()
+                                         if k in ("api_md",)})
+    findings += check_family_levels(registry)
+    findings += check_ci_matrix(root, registry=registry,
+                                **{k: v for k, v in paths.items()
+                                   if k in ("ci_yml",)})
+    findings += check_harness_cases(root, registry=registry,
+                                    **{k: v for k, v in paths.items()
+                                       if k in ("harness_py", "cases_py")})
+    if rules is not None:
+        findings = [f for f in findings if f.rule in rules]
+    return findings

@@ -228,6 +228,90 @@ BUFFER_DEPTHS = (1, 2, 4)
 VMEM_BUDGET_BYTES = 16 * 1024 * 1024
 
 
+# ------------------------------------------------------------------------
+# Ping-pong plane parity, as pure functions. The HBM plane pair of a paged
+# pingpong state and the host-side final-plane select must agree on one
+# parity scheme; keeping all three derivations here (and nowhere else)
+# makes the parity a checkable contract — repro.analysis simulates a
+# T-step stream through these helpers and cross-checks read-after-write
+# consistency, and the engine's read/write views call them directly.
+
+def paged_read_plane(t):
+    """Plane of a paged pingpong pair holding the t-1 state at step t
+    (the step's READ view). Plane 0 holds the initial state (builds stack
+    ``[state0, zeros]``), so step 0 reads plane 0."""
+    return t % 2
+
+
+def paged_write_plane(t):
+    """Plane step t's updates land in (the step's WRITE view) — always
+    the opposite plane of ``paged_read_plane(t)``."""
+    return 1 - (t % 2)
+
+
+def paged_final_plane(t_steps: int) -> int:
+    """Plane holding the final state after a ``t_steps``-long stream:
+    whatever plane the last step wrote. ``stream_call`` slices this plane
+    out of the returned (B, 2, G, d_pad) pair host-side."""
+    return paged_write_plane(t_steps - 1)
+
+
+# ------------------------------------------------------------------------
+# Trace recorder hooks. ``repro.analysis`` verifies the paged DMA protocol
+# (start/wait pairing, ring-slot reuse ordering, alias coverage) WITHOUT
+# device execution: it installs a recorder and abstractly evaluates a
+# launch (``jax.eval_shape``), so the kernel body's Python-level protocol
+# runs at trace time while every DMA start/wait is logged. Production
+# launches pay nothing: with no recorder installed ``_async_copy`` returns
+# the raw ``pltpu.make_async_copy`` object.
+
+_TRACE_RECORDER = None
+
+
+def set_trace_recorder(rec):
+    """Install a trace recorder (``None`` clears). The recorder sees
+    ``rec.launch(family, launch)`` per assembled launch and
+    ``rec.dma(event, op=..., state=..., window=..., slot=...)`` per DMA
+    start/wait issued by the paged engine. Returns the previous recorder
+    so callers can restore it. NOTE: recording happens at kernel TRACE
+    time — clear ``stream_call``'s jit cache around a recorded sweep or a
+    cached trace will replay silently with no events."""
+    global _TRACE_RECORDER
+    prev = _TRACE_RECORDER
+    _TRACE_RECORDER = rec
+    return prev
+
+
+class _TracedCopy:
+    """A ``make_async_copy`` wrapper that logs start/wait to the recorder
+    before issuing the real DMA op (trace-time passthrough)."""
+
+    def __init__(self, cp, rec, tag):
+        self._cp = cp
+        self._rec = rec
+        self._tag = tag
+
+    def start(self):
+        self._rec.dma("start", **self._tag)
+        self._cp.start()
+
+    def wait(self):
+        self._rec.dma("wait", **self._tag)
+        self._cp.wait()
+
+
+def _async_copy(src, dst, sem, *, op, state, window=None, slot=None):
+    """The engine's single DMA constructor: ``pltpu.make_async_copy``
+    plus the (no-op by default) trace hook. ``op`` names the protocol
+    site ("stage_in" / "write_back" / "ring"), ``state`` the StateDef
+    index, ``window``/``slot`` the ring position for ring copies."""
+    cp = pltpu.make_async_copy(src, dst, sem)
+    if _TRACE_RECORDER is None:
+        return cp
+    return _TracedCopy(cp, _TRACE_RECORDER,
+                       dict(op=op, state=state, window=window, slot=slot))
+
+
 @dataclass(frozen=True)
 class CellSpec:
     """A DGNN family expressed against the stream engine.
@@ -413,7 +497,7 @@ class _Engine:
         sm = self.meta.states[i]
         hbm = self._hbm(i)
         if sm.kind == "pingpong":
-            return hbm.at[self.b, self.t % 2, :, wblk]
+            return hbm.at[self.b, paged_read_plane(self.t), :, wblk]
         if sm.kind == "row":
             return hbm.at[self.b, 0, :, wblk]
         return hbm.at[self.b, self.l, :, wblk]
@@ -423,7 +507,7 @@ class _Engine:
         sm = self.meta.states[i]
         hbm = self._hbm(i)
         if sm.kind == "pingpong":
-            return hbm.at[self.b, 1 - self.t % 2, :, self.blk]
+            return hbm.at[self.b, paged_write_plane(self.t), :, self.blk]
         if sm.kind == "row":
             return hbm.at[self.b, 0, :, self.blk]
         return hbm.at[self.b, self.l, :, self.blk]
@@ -435,8 +519,9 @@ class _Engine:
         ride staging into the write plane at write-back."""
         sm = self.meta.states[i]
         sem = self._scr[sm.sem_idx].at[self.meta.depth]
-        cp = pltpu.make_async_copy(self._read_view(i, self.blk),
-                                   self._scr[sm.scr_idx], sem)
+        cp = _async_copy(self._read_view(i, self.blk),
+                         self._scr[sm.scr_idx], sem,
+                         op="stage_in", state=i)
         cp.start()
         cp.wait()
 
@@ -446,8 +531,9 @@ class _Engine:
         on purpose: the next (d) window reuses the staging buffer."""
         sm = self.meta.states[i]
         sem = self._scr[sm.sem_idx].at[self.meta.depth]
-        cp = pltpu.make_async_copy(self._scr[sm.scr_idx],
-                                   self._write_view(i), sem)
+        cp = _async_copy(self._scr[sm.scr_idx],
+                         self._write_view(i), sem,
+                         op="write_back", state=i)
         cp.start()
         cp.wait()
 
@@ -468,9 +554,10 @@ class _Engine:
 
         def _start(w):
             slot = w % depth
-            dma = pltpu.make_async_copy(
+            dma = _async_copy(
                 self._read_view(i, pl.ds(w * self.td, self.td)),
-                ring.at[slot], sems.at[slot])
+                ring.at[slot], sems.at[slot],
+                op="ring", state=i, window=w, slot=slot)
             dma.start()
             dmas[w] = dma
 
@@ -707,6 +794,8 @@ def stream_call(family: str, *args, tn: int = 128, td: Optional[int] = None,
             f"family {family!r} ({residency}, td={td}) needs "
             f"{scratch_bytes} bytes of VMEM scratch, over the "
             f"{VMEM_BUDGET_BYTES}-byte budget — {hint}")
+    if _TRACE_RECORDER is not None:
+        _TRACE_RECORDER.launch(family, launch)
     kernel = functools.partial(_stream_engine_kernel, launch.cell,
                                launch.evolve, launch.meta)
     res = pl.pallas_call(
@@ -729,8 +818,7 @@ def stream_call(family: str, *args, tn: int = 128, td: Optional[int] = None,
         t_steps = launch.grid[1]
         for sm in launch.meta.states:
             if sm.kind == "pingpong":
-                res[sm.out_idx] = res[sm.out_idx][
-                    :, 1 if (t_steps - 1) % 2 == 0 else 0]
+                res[sm.out_idx] = res[sm.out_idx][:, paged_final_plane(t_steps)]
             elif sm.kind == "row":
                 res[sm.out_idx] = res[sm.out_idx][:, 0]
     return res

@@ -19,6 +19,7 @@ Usage:
 """
 import argparse
 import json
+import logging
 import sys
 import time
 import traceback
@@ -280,7 +281,13 @@ def main() -> int:
     overrides = json.loads(args.overrides) if args.overrides else None
     try:
         rec = run_cell(args.arch, args.shape, args.multi_pod, overrides)
-    except Exception:
+    except (ValueError, TypeError, KeyError, RuntimeError) as e:
+        # the expected compile-cell failures: config resolution errors
+        # (ValueError/TypeError/KeyError) and XLA lowering/compile errors
+        # (XlaRuntimeError is a RuntimeError). Anything else — OOM, bad
+        # interpreter state — should crash the sweep loudly.
+        logging.warning("dry-run cell %s/%s failed: %s: %s",
+                        args.arch, args.shape, type(e).__name__, e)
         rec = {"arch": args.arch, "shape": args.shape,
                "mesh": "2x16x16" if args.multi_pod else "16x16",
                "status": "error", "traceback": traceback.format_exc()}
